@@ -1,0 +1,72 @@
+//! Communication-budget planner: given a cluster topology and a model
+//! scale, print projected per-step synchronization time for each method
+//! — the deployment-facing use of the paper's byte accounting.
+//!
+//! Run: `cargo run --release --example comm_budget -- \
+//!         [--scale 1b] [--nodes 4] [--gpus 8] [--link pcie|nvlink|ethernet]`
+
+use tsr::comm::Topology;
+use tsr::exp::{adamw_profile, onesided_profile, tsr_profile, TsrParams};
+use tsr::model::ModelSpec;
+use tsr::util::bench::fmt_bytes;
+use tsr::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get_or("scale", "1b");
+    let nodes = args.get_usize("nodes", 4);
+    let gpus = args.get_usize("gpus", 8);
+    let link = args.get_or("link", "pcie");
+    let spec = ModelSpec::by_name(scale).expect("unknown scale (60m|130m|350m|1b|roberta)");
+    let topo = match link {
+        "nvlink" => Topology::single_node(nodes * gpus),
+        "ethernet" => Topology::ethernet(nodes, gpus),
+        _ => Topology::multi_node(nodes, gpus),
+    };
+    println!(
+        "model {} ({} params)  cluster {}x{} ({} workers, {link} cross-node)\n",
+        spec.name,
+        spec.param_count(),
+        nodes,
+        gpus,
+        topo.workers()
+    );
+
+    let profiles = [
+        ("adamw (dense)", adamw_profile(&spec)),
+        ("galore (one-sided r=512)", onesided_profile(&spec, 512, 200)),
+        (
+            "tsr r=512(256) K=100",
+            tsr_profile(
+                &spec,
+                TsrParams {
+                    rank: 512,
+                    k_refresh: 100,
+                    rank_emb: 256,
+                    k_refresh_emb: 100,
+                    oversample: 8,
+                },
+            ),
+        ),
+    ];
+    println!(
+        "{:<26} {:>12} {:>12} {:>14} {:>14}",
+        "METHOD", "BYTES/STEP", "PEAK", "SYNC TIME/STEP", "PEAK SYNC TIME"
+    );
+    for (name, p) in &profiles {
+        println!(
+            "{:<26} {:>12} {:>12} {:>13.2}ms {:>13.2}ms",
+            name,
+            fmt_bytes(p.bytes_per_step),
+            fmt_bytes(p.peak_bytes),
+            1e3 * topo.allreduce_time(p.bytes_per_step as usize),
+            1e3 * topo.allreduce_time(p.peak_bytes as usize),
+        );
+    }
+    let dense = profiles[0].1.bytes_per_step;
+    let tsr = profiles[2].1.bytes_per_step;
+    println!(
+        "\nTSR reduces steady-state synchronization volume {:.1}x on this cluster.",
+        dense / tsr
+    );
+}

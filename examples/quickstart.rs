@@ -1,0 +1,69 @@
+//! Quickstart: the TSR-Adam public API in ~60 lines.
+//!
+//! Builds a small data-parallel training problem, runs dense AdamW and
+//! TSR-Adam side by side, and prints the communication ledger — the
+//! paper's headline comparison in miniature.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use tsr::comm::Topology;
+use tsr::model::ModelSpec;
+use tsr::optim::{AdamHyper, DenseAdamW, LrSchedule, TsrAdam, TsrConfig};
+use tsr::train::gradsim::QuadraticSim;
+use tsr::train::{GradSource, Trainer};
+use tsr::util::bench::fmt_bytes;
+
+fn main() {
+    // A proxy transformer: vocab 2000, hidden 128, 4 layers (~1M params).
+    let spec = ModelSpec::proxy(2000, 128, 344, 4, 4);
+    let workers = 4;
+    let steps = 200;
+    println!(
+        "model {} ({} params), {} workers, {} steps\n",
+        spec.name,
+        spec.param_count(),
+        workers,
+        steps
+    );
+
+    for method in ["adamw", "tsr"] {
+        // Synthetic objective with low-rank gradient structure (the
+        // regime where TSR's approximation floor is small — Remark 1).
+        let mut sim = QuadraticSim::new(&spec, workers, 16, 0.02, 7);
+        let blocks = sim.blocks().to_vec();
+        let hyper = AdamHyper {
+            lr: 0.02,
+            ..Default::default()
+        };
+        let mut opt: Box<dyn tsr::optim::DistOptimizer> = match method {
+            "adamw" => Box::new(DenseAdamW::new(&blocks, hyper)),
+            _ => Box::new(TsrAdam::new(
+                &blocks,
+                hyper,
+                TsrConfig {
+                    rank: 64,
+                    rank_emb: 16,
+                    refresh_every: 50,
+                    refresh_emb: 50,
+                    oversample: 8,
+                    ..Default::default()
+                },
+            )),
+        };
+        let mut params = sim.init_params(1);
+        let trainer = Trainer::new(Topology::multi_node(2, 2), LrSchedule::paper(steps));
+        let (metrics, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, steps);
+
+        println!("== {} ==", opt.name());
+        println!("  final loss : {:.4}", metrics.final_loss());
+        println!("  bytes/step : {}", fmt_bytes(ledger.bytes_per_step()));
+        println!("  peak bytes : {}", fmt_bytes(ledger.peak_bytes() as f64));
+        println!(
+            "  total comm : {}",
+            fmt_bytes(*metrics.cum_bytes.last().unwrap() as f64)
+        );
+        println!("  state elems: {}", opt.state_elements());
+        println!("  sim comm t : {:.3}s\n", ledger.sim_time);
+    }
+    println!("TSR reaches comparable loss with a fraction of the bytes — Fig. 1 in miniature.");
+}

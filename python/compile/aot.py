@@ -1,0 +1,127 @@
+"""AOT lowering: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format, NOT ``lowered.compile().serialize()``
+-- jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that the
+image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifacts written (under --out-dir, default ../artifacts):
+  {name}.hlo.txt           the train step: (params..., tokens) -> (loss, *grads)
+  {name}_manifest.json     shapes + param order for the Rust runtime
+  core_project.hlo.txt     standalone L1 core-projection kernel artifact
+  adam_core.hlo.txt        standalone fused core-AdamW kernel artifact
+
+Run via ``make artifacts`` (a no-op when outputs are newer than inputs).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.adam_core import adam_core_update
+from .kernels.tsr_core import core_project
+from .model import ModelConfig, param_specs, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(cfg: ModelConfig, name: str, out_dir: str):
+    specs = param_specs(cfg)
+    arg_shapes = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in specs]
+    arg_shapes.append(
+        jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    )
+    step = train_step(cfg)
+    print(f"lowering {name}: {len(specs)} params, batch={cfg.batch}, seq={cfg.seq} ...")
+    lowered = jax.jit(step).lower(*arg_shapes)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    manifest = {
+        "name": name,
+        "hlo": f"{name}.hlo.txt",
+        "vocab": cfg.vocab,
+        "hidden": cfg.hidden,
+        "intermediate": cfg.intermediate,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "params": [
+            {"name": n, "shape": list(s), "class": c} for n, s, c in specs
+        ],
+    }
+    mpath = os.path.join(out_dir, f"{name}_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {hlo_path} ({len(text)} chars) + manifest")
+
+
+def lower_kernels(out_dir: str, m=256, n=128, r=16):
+    """Standalone L1 kernel artifacts (prove the kernels load from Rust)."""
+    u = jax.ShapeDtypeStruct((m, r), jnp.float32)
+    g = jax.ShapeDtypeStruct((m, n), jnp.float32)
+    v = jax.ShapeDtypeStruct((n, r), jnp.float32)
+    lowered = jax.jit(core_project).lower(u, g, v)
+    path = os.path.join(out_dir, "core_project.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  wrote {path} (core {m}x{n} rank {r})")
+
+    c = jax.ShapeDtypeStruct((r, r), jnp.float32)
+    t = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(adam_core_update).lower(c, c, c, t)
+    path = os.path.join(out_dir, "adam_core.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    print(f"  wrote {path} (fused core-AdamW, r={r})")
+
+
+CONFIGS = {
+    # Smoke/integration config: compiles in seconds, used by cargo tests.
+    # Small head tiles → multi-step accumulation grid is exercised.
+    "tiny": ModelConfig(vocab=512, hidden=64, intermediate=172, heads=4, layers=2,
+                        batch=4, seq=32, head_bm=32, head_bk=64, head_bn=128),
+    # End-to-end config for examples/pretrain_e2e (~13M params). Large
+    # head tiles keep the interpret-mode grid small (sequential on CPU);
+    # the BlockSpec schedule is what carries to real TPUs.
+    "e2e": ModelConfig(vocab=8192, hidden=256, intermediate=688, heads=8, layers=6,
+                       batch=8, seq=64, head_bm=512, head_bk=256, head_bn=2048),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--configs", default="tiny,e2e")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in CONFIGS:
+            sys.exit(f"unknown config {name!r}; have {sorted(CONFIGS)}")
+        lower_model(CONFIGS[name], name, out_dir)
+    lower_kernels(out_dir)
+    # Stamp file for make's dependency tracking.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

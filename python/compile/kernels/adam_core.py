@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: fused core-space AdamW moment update (paper SS3.4).
+
+Given the synchronized core C-bar and the r x r moments (m, v), computes
+in one fused elementwise pass:
+
+    m' = b1 m + (1-b1) C
+    v' = b2 v + (1-b2) C*C
+    D  = (m'/(1-b1^t)) / (sqrt(v'/(1-b2^t)) + eps)
+
+The step index t arrives as a (1, 1) scalar input so a single compiled
+artifact serves every step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adam_kernel(b1, b2, eps, c_ref, m_ref, v_ref, t_ref, mo_ref, vo_ref, d_ref):
+    t = t_ref[0, 0]
+    c = c_ref[...]
+    m_new = b1 * m_ref[...] + (1.0 - b1) * c
+    v_new = b2 * v_ref[...] + (1.0 - b2) * c * c
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    d_ref[...] = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps"))
+def adam_core_update(c, m, v, t, beta1: float = 0.9, beta2: float = 0.999, eps: float = 1e-8):
+    """Returns (m', v', D) for the core AdamW update; all r x r."""
+    r1, r2 = c.shape
+    assert m.shape == c.shape and v.shape == c.shape
+    t_arr = jnp.asarray(t, dtype=c.dtype).reshape(1, 1)
+    kernel = functools.partial(_adam_kernel, beta1, beta2, eps)
+    shape = jax.ShapeDtypeStruct((r1, r2), c.dtype)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(c, m, v, t_arr)

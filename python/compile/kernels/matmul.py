@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: tiled matrix multiplication.
+
+The MXU-oriented workhorse used by the L2 model for its largest matmul
+(the tied LM head). The BlockSpec grid expresses the HBM->VMEM schedule:
+(bm x bk) and (bk x bn) tiles stream through VMEM while the (bm x bn)
+output tile accumulates across the k axis of the grid.
+
+CPU execution uses interpret=True (real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run); the tiling structure is the
+TPU-relevant artifact, see DESIGN.md #4 (Hardware adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(x, rows, cols):
+    pr, pc = rows - x.shape[0], cols - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(x, y, bm: int = 32, bk: int = 32, bn: int = 32):
+    """C = x @ y via the Pallas tiled kernel (pads to tile multiples)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"matmul dim mismatch {x.shape} @ {y.shape}"
+    bm = min(bm, max(8, m))
+    bk = min(bk, max(8, k))
+    bn = min(bn, max(8, n))
+    mp = (m + bm - 1) // bm * bm
+    kp = (k + bk - 1) // bk * bk
+    np_ = (n + bn - 1) // bn * bn
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]

@@ -1,0 +1,31 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with
+hypothesis and asserts allclose between each kernel and its oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x, y)
+
+
+def core_project_ref(u, g, v):
+    """C = U^T G V — the two-sided core (paper §3.3)."""
+    return u.T @ g @ v
+
+
+def lift_ref(u, d, v):
+    """ΔW = U D Vᵀ (paper §3.4)."""
+    return u @ d @ v.T
+
+
+def adam_core_ref(c, m, v, t, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Reference core AdamW moment update + normalized direction."""
+    m_new = beta1 * m + (1.0 - beta1) * c
+    v_new = beta2 * v + (1.0 - beta2) * c * c
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    d = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    return m_new, v_new, d

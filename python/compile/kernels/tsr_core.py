@@ -1,0 +1,95 @@
+"""L1 Pallas kernels for TSR's compute hot-spots (paper SS3.3-3.4):
+
+* ``core_project`` -- the two-sided projection C = U^T G V (r x r).
+  The grid tiles G as (bm x bn) blocks streamed through VMEM; the U and
+  V panels for the active tile rows/cols stay resident, and the tiny
+  r x r core accumulates across the whole grid. This is the TPU
+  re-thinking of the paper's GPU implementation: instead of a
+  threadblock-per-tile reduction tree, the sequential TPU grid
+  accumulates into a VMEM-resident core (DESIGN.md #4).
+
+* ``lift`` -- Delta W = U D V^T, tiled over the (m x n) output.
+
+Both are verified against the pure-jnp oracles in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _core_kernel(u_ref, g_ref, v_ref, o_ref):
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    gv = jnp.dot(g_ref[...], v_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] += jnp.dot(u_ref[...].T, gv, preferred_element_type=o_ref.dtype)
+
+
+def _pad_rows(x, rows):
+    if x.shape[0] == rows:
+        return x
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def core_project(u, g, v, bm: int = 64, bn: int = 64):
+    """C = U^T @ G @ V with G tiled (bm x bn); U, V panels per tile."""
+    m, n = g.shape
+    mu, r = u.shape
+    nv, r2 = v.shape
+    assert mu == m and nv == n and r == r2, (u.shape, g.shape, v.shape)
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    gp = jnp.pad(g, ((0, mp - m), (0, np_ - n)))
+    up = _pad_rows(u, mp)
+    vp = _pad_rows(v, np_)
+    return pl.pallas_call(
+        _core_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), g.dtype),
+        interpret=True,
+    )(up, gp, vp)
+
+
+def _lift_kernel(u_ref, d_ref, v_ref, o_ref):
+    ud = jnp.dot(u_ref[...], d_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] = jnp.dot(ud, v_ref[...].T, preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def lift(u, d, v, bm: int = 64, bn: int = 64):
+    """Delta W = U @ D @ V^T, tiled over the (m x n) output grid."""
+    m, r = u.shape
+    n, r2 = v.shape
+    assert d.shape == (r, r) and r == r2
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(8, n))
+    mp = (m + bm - 1) // bm * bm
+    np_ = (n + bn - 1) // bn * bn
+    up = _pad_rows(u, mp)
+    vp = _pad_rows(v, np_)
+    out = pl.pallas_call(
+        _lift_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),
+            pl.BlockSpec((r, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), u.dtype),
+        interpret=True,
+    )(up, d, vp)
+    return out[:m, :n]

@@ -1,0 +1,184 @@
+"""L2: LLaMA-style transformer forward + loss + grads in JAX.
+
+Build-time only — lowered once by ``aot.py`` to HLO text; the Rust L3
+coordinator executes the artifact via PJRT and never imports Python.
+
+Parameter layout mirrors ``rust/src/model/registry.rs::ModelSpec::blocks``
+exactly (same names, same order, tied embeddings), so the Rust side can
+zip manifest params with its optimizer blocks 1:1.
+
+The LM head (the model's largest matmul) routes through the L1 Pallas
+tiled-matmul kernel so the compiled artifact contains the kernel on the
+real hot path.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as pallas_matmul
+
+
+from functools import partial
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _head_matmul(x, et, bm, bk, bn):
+    """logits = x @ Eᵀ through the Pallas tiled kernel, with an explicit
+    VJP so both the forward and backward matmuls run the L1 kernel
+    (pallas_call has no automatic transpose rule)."""
+    return pallas_matmul(x, et, bm=bm, bk=bk, bn=bn)
+
+
+def _head_fwd(x, et, bm, bk, bn):
+    return pallas_matmul(x, et, bm=bm, bk=bk, bn=bn), (x, et)
+
+
+def _head_bwd(bm, bk, bn, res, dlogits):
+    x, et = res
+    dx = pallas_matmul(dlogits, et.T, bm=bm, bk=bn, bn=bk)  # (m, h)
+    det = pallas_matmul(x.T, dlogits, bm=bk, bk=bm, bn=bn)  # (h, V)
+    return dx, det
+
+
+_head_matmul.defvjp(_head_fwd, _head_bwd)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    hidden: int = 64
+    intermediate: int = 172
+    heads: int = 4
+    layers: int = 2
+    batch: int = 4
+    seq: int = 32
+    # Lower the LM head through the Pallas kernel (interpret=True). The
+    # pure-jnp path is used for A/B numerics tests.
+    use_pallas_head: bool = True
+    # Head-kernel tile sizes. interpret=True executes the grid
+    # sequentially, so production configs use large tiles (full-K
+    # reduction) to keep the grid small; on real TPU the same BlockSpecs
+    # express the HBM→VMEM schedule (DESIGN.md §4).
+    head_bm: int = 64
+    head_bk: int = 256
+    head_bn: int = 512
+
+    @property
+    def head_dim(self):
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+
+def param_specs(cfg: ModelConfig):
+    """(name, shape, class) for every block — MUST match the Rust registry."""
+    specs = [("embed_tokens", (cfg.vocab, cfg.hidden), "embedding")]
+    for l in range(cfg.layers):
+        for proj in ("q_proj", "k_proj", "v_proj", "o_proj"):
+            specs.append((f"layers.{l}.attn.{proj}", (cfg.hidden, cfg.hidden), "linear"))
+        specs.append((f"layers.{l}.mlp.gate", (cfg.hidden, cfg.intermediate), "linear"))
+        specs.append((f"layers.{l}.mlp.up", (cfg.hidden, cfg.intermediate), "linear"))
+        specs.append((f"layers.{l}.mlp.down", (cfg.intermediate, cfg.hidden), "linear"))
+        specs.append((f"layers.{l}.attn_norm", (cfg.hidden,), "vector"))
+        specs.append((f"layers.{l}.mlp_norm", (cfg.hidden,), "vector"))
+    specs.append(("final_norm", (cfg.hidden,), "vector"))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key):
+    """Standard init (norms→1, embed→0.02σ, linear→1/√fan_in)."""
+    params = []
+    for name, shape, klass in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if klass == "vector":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif klass == "embedding":
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            scale = 1.0 / jnp.sqrt(shape[0])
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * w
+
+
+def _rope(x, positions):
+    """Rotary position embedding over the last dim (per head)."""
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (s, half)
+    cos = jnp.cos(angles)[None, None]
+    sin = jnp.sin(angles)[None, None]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: int32 [batch, seq+1]; returns mean next-token CE loss."""
+    inputs = tokens[:, :-1]
+    targets = tokens[:, 1:]
+    b, s = inputs.shape
+    it = iter(params)
+    embed = next(it)
+
+    x = embed[inputs]  # (b, s, h)
+    positions = jnp.arange(s)
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+
+    per_layer = []
+    for _ in range(cfg.layers):
+        q = next(it); k = next(it); v = next(it); o = next(it)
+        gate = next(it); up = next(it); down = next(it)
+        attn_norm = next(it); mlp_norm = next(it)
+        per_layer.append((q, k, v, o, gate, up, down, attn_norm, mlp_norm))
+    final_norm = next(it)
+
+    scale = 1.0 / jnp.sqrt(cfg.head_dim)
+    for (q, k, v, o, gate, up, down, attn_norm, mlp_norm) in per_layer:
+        h = _rmsnorm(x, attn_norm)
+        def heads(t):  # (b, s, h) -> (b, nh, s, hd)
+            return t.reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        qh = _rope(heads(h @ q), positions)
+        kh = _rope(heads(h @ k), positions)
+        vh = heads(h @ v)
+        att = (qh @ kh.transpose(0, 1, 3, 2)) * scale
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = (att @ vh).transpose(0, 2, 1, 3).reshape(b, s, cfg.hidden)
+        x = x + ctx @ o
+
+        h = _rmsnorm(x, mlp_norm)
+        x = x + (jax.nn.silu(h @ gate) * (h @ up)) @ down
+
+    x = _rmsnorm(x, final_norm)
+    # Tied LM head — the Pallas tiled matmul on the hot path.
+    flat = x.reshape(b * s, cfg.hidden)
+    if cfg.use_pallas_head:
+        logits = _head_matmul(flat, embed.T, cfg.head_bm, cfg.head_bk, cfg.head_bn)
+    else:
+        logits = flat @ embed.T
+    logits = logits.reshape(b, s, cfg.vocab)
+
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig):
+    """Returns f(params..., tokens) -> (loss, *grads) for AOT lowering."""
+
+    def loss_fn(params, tokens):
+        return forward(cfg, params, tokens)
+
+    def step(*args):
+        params = list(args[:-1])
+        tokens = args[-1]
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        return (loss, *grads)
+
+    return step

@@ -1,0 +1,135 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed-seed numpy draws the values (keeping
+each case deterministic and fast under interpret=True).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.adam_core import adam_core_update
+from compile.kernels.matmul import matmul
+from compile.kernels.tsr_core import core_project, lift
+
+RNG = np.random.default_rng(0)
+
+
+def randm(*shape, dtype=np.float32):
+    return RNG.standard_normal(shape).astype(dtype)
+
+
+dims = st.integers(min_value=1, max_value=96)
+ranks = st.integers(min_value=1, max_value=24)
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, k=dims, n=dims)
+    def test_matches_ref(self, m, k, n):
+        x, y = randm(m, k), randm(k, n)
+        got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(y)))
+        want = np.asarray(ref.matmul_ref(jnp.asarray(x), jnp.asarray(y)))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_non_divisible_tiles(self):
+        # Shapes that do NOT divide the block sizes exercise the padding.
+        x, y = randm(33, 47), randm(47, 65)
+        got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(y), bm=16, bk=16, bn=16))
+        np.testing.assert_allclose(got, x @ y, rtol=2e-4, atol=2e-4)
+
+    def test_identity(self):
+        x = randm(24, 24)
+        got = np.asarray(matmul(jnp.asarray(x), jnp.eye(24, dtype=np.float32)))
+        np.testing.assert_allclose(got, x, rtol=1e-5, atol=1e-5)
+
+
+class TestCoreProject:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, n=dims, r=ranks)
+    def test_matches_ref(self, m, n, r):
+        r = min(r, m, n)
+        u, g, v = randm(m, r), randm(m, n), randm(n, r)
+        got = np.asarray(core_project(jnp.asarray(u), jnp.asarray(g), jnp.asarray(v)))
+        want = u.T @ g @ v
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_orthonormal_projection_preserves_core_energy(self):
+        # With orthonormal U, V and G = U C V^T, the projection recovers C.
+        m, n, r = 48, 40, 6
+        u, _ = np.linalg.qr(randm(m, r))
+        v, _ = np.linalg.qr(randm(n, r))
+        c = randm(r, r)
+        g = u @ c @ v.T
+        got = np.asarray(
+            core_project(jnp.asarray(u.astype(np.float32)),
+                         jnp.asarray(g.astype(np.float32)),
+                         jnp.asarray(v.astype(np.float32)))
+        )
+        np.testing.assert_allclose(got, c, rtol=1e-3, atol=1e-3)
+
+    def test_tile_sweep(self):
+        u, g, v = randm(70, 5), randm(70, 50), randm(50, 5)
+        want = u.T @ g @ v
+        for bm, bn in [(8, 8), (16, 32), (64, 64)]:
+            got = np.asarray(
+                core_project(jnp.asarray(u), jnp.asarray(g), jnp.asarray(v), bm=bm, bn=bn)
+            )
+            np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+class TestLift:
+    @settings(max_examples=20, deadline=None)
+    @given(m=dims, n=dims, r=ranks)
+    def test_matches_ref(self, m, n, r):
+        r = min(r, m, n)
+        u, d, v = randm(m, r), randm(r, r), randm(n, r)
+        got = np.asarray(lift(jnp.asarray(u), jnp.asarray(d), jnp.asarray(v)))
+        want = u @ d @ v.T
+        np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+    def test_roundtrip_with_core(self):
+        # lift(core_project(G)) is the paper's reconstructed gradient
+        # (eq. 5): for orthonormal bases it's the double projection of G.
+        m, n, r = 32, 28, 4
+        u, _ = np.linalg.qr(randm(m, r))
+        v, _ = np.linalg.qr(randm(n, r))
+        g = randm(m, n)
+        u32, v32 = u.astype(np.float32), v.astype(np.float32)
+        c = core_project(jnp.asarray(u32), jnp.asarray(g), jnp.asarray(v32))
+        ghat = np.asarray(lift(jnp.asarray(u32), c, jnp.asarray(v32)))
+        want = u @ (u.T @ g @ v) @ v.T
+        np.testing.assert_allclose(ghat, want, rtol=1e-3, atol=1e-3)
+
+
+class TestAdamCore:
+    @settings(max_examples=15, deadline=None)
+    @given(r=st.integers(min_value=1, max_value=32), t=st.integers(min_value=1, max_value=1000))
+    def test_matches_ref(self, r, t):
+        c, m, v = randm(r, r), randm(r, r), np.abs(randm(r, r))
+        got_m, got_v, got_d = adam_core_update(
+            jnp.asarray(c), jnp.asarray(m), jnp.asarray(v), float(t)
+        )
+        want_m, want_v, want_d = ref.adam_core_ref(c, m, v, float(t))
+        np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-4, atol=1e-5)
+
+    def test_first_step_direction_is_sign(self):
+        # At t=1 with zero moments, D ≈ sign(C) (bias correction cancels).
+        c = randm(8, 8)
+        z = np.zeros((8, 8), np.float32)
+        _, _, d = adam_core_update(jnp.asarray(c), jnp.asarray(z), jnp.asarray(z), 1.0)
+        np.testing.assert_allclose(np.asarray(d), np.sign(c), rtol=1e-2, atol=1e-2)
+
+
+class TestDtypes:
+    @pytest.mark.parametrize("dtype", [np.float32])
+    def test_matmul_dtype(self, dtype):
+        x, y = randm(17, 19, dtype=dtype), randm(19, 23, dtype=dtype)
+        got = np.asarray(matmul(jnp.asarray(x), jnp.asarray(y)))
+        assert got.dtype == dtype
+        np.testing.assert_allclose(got, x @ y, rtol=5e-3, atol=5e-3)

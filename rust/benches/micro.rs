@@ -1,0 +1,76 @@
+//! Micro-benchmarks: linalg kernels, collectives, and the TSR hot path
+//! (core projection + lift) at representative block shapes.
+//!
+//! Run: `cargo bench --bench micro` (BENCH_MS=200 for a quick pass).
+
+use tsr::comm::collective::ring_allreduce_mean;
+use tsr::linalg::{core_project, lift, matmul, orth, rsvd, svd_gram, Matrix};
+use tsr::util::bench::Bencher;
+use tsr::util::rng::Xoshiro256;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Xoshiro256::new(42);
+
+    // --- matmul at LLaMA block shapes (60M scale: h=512, f=1376) ---
+    for &(m, k, n, label) in &[
+        (512usize, 512usize, 512usize, "matmul 512x512x512 (qkv/o)"),
+        (512, 1376, 512, "matmul 512x1376x512 (mlp.down)"),
+        (256, 256, 256, "matmul 256^3"),
+    ] {
+        let x = Matrix::gaussian(m, k, 1.0, &mut rng);
+        let y = Matrix::gaussian(k, n, 1.0, &mut rng);
+        b.bench(label, || {
+            std::hint::black_box(matmul(&x, &y));
+        });
+    }
+
+    // --- the TSR hot path: Uᵀ G V and U D Vᵀ at paper rank configs ---
+    for &(m, n, r, label) in &[
+        (512usize, 512usize, 256usize, "core_project 512x512 r=256 (60M)"),
+        (2048, 2048, 512, "core_project 2048x2048 r=512 (1B)"),
+        (32000, 512, 64, "core_project 32000x512 r=64 (emb 60M)"),
+    ] {
+        let g = Matrix::gaussian(m, n, 1.0, &mut rng);
+        let u = orth(&Matrix::gaussian(m, r, 1.0, &mut rng));
+        let v = orth(&Matrix::gaussian(n, r, 1.0, &mut rng));
+        b.bench(label, || {
+            std::hint::black_box(core_project(&u, &g, &v));
+        });
+        let d = Matrix::gaussian(r, r, 1.0, &mut rng);
+        b.bench(&format!("lift {m}x{n} r={r}"), || {
+            std::hint::black_box(lift(&u, &d, &v));
+        });
+    }
+
+    // --- refresh building blocks ---
+    let g = Matrix::gaussian(512, 512, 1.0, &mut rng);
+    b.bench("orth(Y) 512x72 (sketch QR)", || {
+        let y = Matrix::gaussian(512, 72, 1.0, &mut rng);
+        std::hint::black_box(orth(&y));
+    });
+    let bmat = Matrix::gaussian(72, 512, 1.0, &mut rng);
+    b.bench("svd_gram 72x512 (refresh small SVD)", || {
+        std::hint::black_box(svd_gram(&bmat));
+    });
+    b.bench("rsvd 512x512 r=64 q=1 (centralized)", || {
+        let mut r2 = Xoshiro256::new(9);
+        std::hint::black_box(rsvd(&g, 64, 8, 1, &mut r2));
+    });
+
+    // --- collectives: r² core vs dense payloads, 8 workers ---
+    for &(rows, cols, label) in &[
+        (256usize, 256usize, "ring all-reduce 256x256 core (8w)"),
+        (512, 1376, "ring all-reduce 512x1376 dense (8w)"),
+    ] {
+        let base: Vec<Matrix> = (0..8)
+            .map(|_| Matrix::gaussian(rows, cols, 1.0, &mut rng))
+            .collect();
+        b.bench(label, || {
+            let mut ws = base.clone();
+            std::hint::black_box(ring_allreduce_mean(&mut ws));
+        });
+    }
+
+    println!("\nmicro bench done ({} entries)", b.results().len());
+}

@@ -1,0 +1,23 @@
+//! Regenerate every paper *figure*'s data series (Figs. 1, 3, 4, 5) plus
+//! the Theorem 1 validation sweep. JSON series land in results/.
+//!
+//! Run: `cargo bench --bench paper_figures`
+//! (FIG_STEPS=400 for higher-fidelity curves; default keeps bench quick.)
+
+use tsr::exp::{figures, theory};
+
+fn main() {
+    let steps = std::env::var("FIG_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(48);
+    // Sized for the CI host (single core); `tsr fig1 --workers 8
+    // --steps 400` regenerates publication-fidelity series.
+    let workers = 2;
+
+    figures::fig1(steps, workers);
+    figures::fig3(steps, workers);
+    figures::fig4(steps, workers);
+    figures::fig5(steps, workers);
+    theory::theory_sweep(&[50, 100, 200, 400], 2, 25);
+}

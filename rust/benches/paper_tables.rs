@@ -1,0 +1,30 @@
+//! Regenerate every paper *table* (Tables 1, 2, 3, 4, 6).
+//!
+//! Byte/memory columns are exact counting identities; Table 3's loss
+//! column uses short proxy runs and its update-time column measures one
+//! full-scale optimizer step on this host (60M/130M; larger scales are
+//! reported by the analytic profile only under `cargo bench` to keep
+//! memory in bounds — run `tsr table3` for the full version).
+//!
+//! Run: `cargo bench --bench paper_tables`
+
+use tsr::exp::tables;
+
+fn main() {
+    // Table 1 at the paper's illustrative shape.
+    tables::table1(4096, 4096, 128);
+
+    // Table 2 for the 60M config at the paper's ranks.
+    let spec = tsr::model::ModelSpec::llama_60m();
+    tables::table2(&spec, 256, 64);
+
+    // Table 3: bytes/peak/memory for all four scales. Short proxy-loss
+    // runs; timing off here (see bench `optimizer_step` for timings).
+    tables::table3(40, false);
+
+    // Table 4: GLUE byte accounting + synthetic-task metric parity.
+    tables::table4(80);
+
+    // Table 6: extra TSR configurations.
+    tables::table6();
+}

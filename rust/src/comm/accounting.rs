@@ -1,0 +1,173 @@
+//! Byte-exact communication accounting (paper §3.2).
+//!
+//! For each step t and layer ℓ, the synchronized tensor set S_t^(ℓ)
+//! determines the step-wise communicated bytes
+//! `B_t = Σ_ℓ b_dtype · |S_t^(ℓ)|`. We track:
+//! * `Bytes/Step = (1/T) Σ_t B_t`   (Table 3 column),
+//! * `PeakBytes  = max_t B_t`       (refresh-step spikes),
+//! * `CumulativeBytes(t)`           (Fig. 1 x-axis),
+//! plus a per-category breakdown (embedding vs linear vs dense-vector)
+//! for Fig. 5(a).
+
+/// Layer category for the Fig. 5 breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    Embedding,
+    Linear,
+    /// Biases, norms — always synchronized dense (§3.4).
+    Vector,
+}
+
+/// Bytes per element of the communicated dtype (paper uses bf16 ⇒ 2,
+/// fp32 ⇒ 4; we default to 4 matching our f32 simulation and report
+/// ratios, which are dtype-invariant).
+pub const BYTES_F32: usize = 4;
+pub const BYTES_BF16: usize = 2;
+
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub total: usize,
+    pub embedding: usize,
+    pub linear: usize,
+    pub vector: usize,
+    /// True if any layer refreshed its subspace this step.
+    pub refresh: bool,
+}
+
+/// Communication ledger for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    steps: Vec<StepRecord>,
+    current: StepRecord,
+    /// Simulated wall-clock communication time (α–β model), seconds.
+    pub sim_time: f64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `elements` f32 scalars synchronized for a layer of `class`.
+    pub fn record(&mut self, class: LayerClass, elements: usize) {
+        self.record_bytes(class, elements * BYTES_F32);
+    }
+
+    pub fn record_bytes(&mut self, class: LayerClass, bytes: usize) {
+        self.current.total += bytes;
+        match class {
+            LayerClass::Embedding => self.current.embedding += bytes,
+            LayerClass::Linear => self.current.linear += bytes,
+            LayerClass::Vector => self.current.vector += bytes,
+        }
+    }
+
+    pub fn mark_refresh(&mut self) {
+        self.current.refresh = true;
+    }
+
+    pub fn add_sim_time(&mut self, secs: f64) {
+        self.sim_time += secs;
+    }
+
+    /// Close the current step; begins accumulating the next one.
+    pub fn end_step(&mut self) {
+        self.steps.push(std::mem::take(&mut self.current));
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn step(&self, t: usize) -> &StepRecord {
+        &self.steps[t]
+    }
+
+    /// Average communicated bytes per step (Table 3 "BYTES/STEP").
+    pub fn bytes_per_step(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        self.steps.iter().map(|s| s.total as f64).sum::<f64>() / self.steps.len() as f64
+    }
+
+    /// Peak communicated bytes over all steps (Table 3 "PEAK BYTES").
+    pub fn peak_bytes(&self) -> usize {
+        self.steps.iter().map(|s| s.total).max().unwrap_or(0)
+    }
+
+    /// Cumulative bytes after each step (Fig. 1 x-axis).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.steps
+            .iter()
+            .map(|s| {
+                acc += s.total as u64;
+                acc
+            })
+            .collect()
+    }
+
+    /// (embedding, linear, vector) byte totals — Fig. 5(a).
+    pub fn breakdown(&self) -> (u64, u64, u64) {
+        let mut e = 0u64;
+        let mut l = 0u64;
+        let mut v = 0u64;
+        for s in &self.steps {
+            e += s.embedding as u64;
+            l += s.linear as u64;
+            v += s.vector as u64;
+        }
+        (e, l, v)
+    }
+
+    /// Average bytes on refresh vs non-refresh steps (ablation data).
+    pub fn refresh_split(&self) -> (f64, f64) {
+        let (mut rs, mut rn, mut ns, mut nn) = (0f64, 0usize, 0f64, 0usize);
+        for s in &self.steps {
+            if s.refresh {
+                rs += s.total as f64;
+                rn += 1;
+            } else {
+                ns += s.total as f64;
+                nn += 1;
+            }
+        }
+        (
+            if rn > 0 { rs / rn as f64 } else { 0.0 },
+            if nn > 0 { ns / nn as f64 } else { 0.0 },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_step_accounting() {
+        let mut l = CommLedger::new();
+        l.record(LayerClass::Linear, 100); // 400 B
+        l.record(LayerClass::Embedding, 50); // 200 B
+        l.end_step();
+        l.record(LayerClass::Linear, 300); // 1200 B
+        l.mark_refresh();
+        l.end_step();
+        assert_eq!(l.num_steps(), 2);
+        assert_eq!(l.bytes_per_step(), (600.0 + 1200.0) / 2.0);
+        assert_eq!(l.peak_bytes(), 1200);
+        assert_eq!(l.cumulative(), vec![600, 1800]);
+        let (e, lin, v) = l.breakdown();
+        assert_eq!((e, lin, v), (200, 1600, 0));
+        let (r, n) = l.refresh_split();
+        assert_eq!((r, n), (1200.0, 600.0));
+    }
+
+    #[test]
+    fn empty_ledger_is_zero() {
+        let l = CommLedger::new();
+        assert_eq!(l.bytes_per_step(), 0.0);
+        assert_eq!(l.peak_bytes(), 0);
+        assert!(l.cumulative().is_empty());
+    }
+}

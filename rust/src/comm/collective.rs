@@ -1,0 +1,161 @@
+//! Collective operations over the simulated worker group.
+//!
+//! Workers are in-process (one parameter replica each); collectives move
+//! real data between their buffers so the numerics are identical to a
+//! true multi-process run. The ring all-reduce is implemented as an
+//! actual reduce-scatter + all-gather over chunks (not a shortcut mean)
+//! so that algorithmic properties — chunking, ordering, determinism —
+//! are exercised and testable; a direct mean implementation serves as
+//! the test oracle.
+
+use crate::linalg::Matrix;
+
+/// All-reduce (average) a set of equally-shaped per-worker matrices
+/// in-place via ring reduce-scatter + all-gather.
+///
+/// Returns the per-worker payload bytes this collective transmitted
+/// (the standard ring volume: 2·(N−1)/N · |x| · 4 bytes).
+pub fn ring_allreduce_mean(workers: &mut [Matrix]) -> usize {
+    let n = workers.len();
+    assert!(n > 0);
+    let numel = workers[0].numel();
+    for w in workers.iter() {
+        assert_eq!(w.numel(), numel, "ragged all-reduce");
+    }
+    if n == 1 {
+        return 0;
+    }
+
+    // Chunk boundaries: chunk c covers [starts[c], starts[c+1]).
+    let starts: Vec<usize> = (0..=n).map(|c| c * numel / n).collect();
+
+    // Reduce-scatter: after n-1 steps worker i holds the full sum of
+    // chunk (i+1) mod n.
+    for step in 0..n - 1 {
+        for i in 0..n {
+            // Worker i sends chunk (i - step) mod n to worker (i+1) mod n.
+            let c = (i + n - step) % n;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let dst = (i + 1) % n;
+            // split_at_mut dance to borrow two workers at once.
+            let (src_chunk, dst_chunk) = two_slices(workers, i, dst, lo, hi);
+            for (d, s) in dst_chunk.iter_mut().zip(src_chunk.iter()) {
+                *d += *s;
+            }
+        }
+    }
+    // All-gather: circulate the reduced chunks.
+    for step in 0..n - 1 {
+        for i in 0..n {
+            let c = (i + 1 + n - step) % n;
+            let (lo, hi) = (starts[c], starts[c + 1]);
+            let dst = (i + 1) % n;
+            let (src_chunk, dst_chunk) = two_slices(workers, i, dst, lo, hi);
+            dst_chunk.copy_from_slice(&src_chunk);
+        }
+    }
+    // Scale sums to means.
+    let inv = 1.0 / n as f32;
+    for w in workers.iter_mut() {
+        for v in &mut w.data {
+            *v *= inv;
+        }
+    }
+    ring_volume_bytes(numel, n)
+}
+
+/// Oracle: direct mean, broadcast to all workers. Same result as the
+/// ring implementation up to f32 reduction-order rounding.
+pub fn direct_allreduce_mean(workers: &mut [Matrix]) {
+    let n = workers.len();
+    if n <= 1 {
+        return;
+    }
+    let numel = workers[0].numel();
+    let mut acc = vec![0.0f64; numel];
+    for w in workers.iter() {
+        for (a, v) in acc.iter_mut().zip(&w.data) {
+            *a += *v as f64;
+        }
+    }
+    let inv = 1.0 / n as f64;
+    for w in workers.iter_mut() {
+        for (v, a) in w.data.iter_mut().zip(&acc) {
+            *v = (a * inv) as f32;
+        }
+    }
+}
+
+/// Per-worker bytes moved by a ring all-reduce of `numel` f32 elements.
+pub fn ring_volume_bytes(numel: usize, n: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    (2 * (n - 1) * numel / n) * std::mem::size_of::<f32>()
+}
+
+/// Borrow chunk [lo,hi) of workers[src] (shared) and workers[dst] (mut).
+fn two_slices(
+    workers: &mut [Matrix],
+    src: usize,
+    dst: usize,
+    lo: usize,
+    hi: usize,
+) -> (Vec<f32>, &mut [f32]) {
+    // Copy src chunk out (small chunk; models the "send buffer").
+    let src_copy = workers[src].data[lo..hi].to_vec();
+    (src_copy, &mut workers[dst].data[lo..hi])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn ring_matches_direct_mean() {
+        prop::check("ring == mean", 24, |rng| {
+            let n = prop::dim(rng, 1, 9);
+            let r = prop::dim(rng, 1, 13);
+            let c = prop::dim(rng, 1, 13);
+            let mut ws: Vec<Matrix> = (0..n).map(|_| Matrix::gaussian(r, c, 1.0, rng)).collect();
+            let mut oracle = ws.clone();
+            ring_allreduce_mean(&mut ws);
+            direct_allreduce_mean(&mut oracle);
+            for (a, b) in ws.iter().zip(&oracle) {
+                assert!(a.dist(b) < 1e-4 * (r * c) as f32, "n={n} {r}x{c}");
+            }
+        });
+    }
+
+    #[test]
+    fn all_workers_agree_after_allreduce() {
+        let mut rng = Xoshiro256::new(42);
+        let mut ws: Vec<Matrix> = (0..5).map(|_| Matrix::gaussian(17, 9, 1.0, &mut rng)).collect();
+        ring_allreduce_mean(&mut ws);
+        for w in &ws[1..] {
+            assert!(w.dist(&ws[0]) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn volume_formula() {
+        // 2(N-1)/N × numel × 4.
+        assert_eq!(ring_volume_bytes(100, 4), 2 * 3 * 100 / 4 * 4);
+        assert_eq!(ring_volume_bytes(100, 1), 0);
+    }
+
+    #[test]
+    fn preserves_mean_exactly_for_constants() {
+        let mut ws: Vec<Matrix> = (0..4)
+            .map(|i| Matrix::from_fn(3, 3, |_, _| i as f32))
+            .collect();
+        ring_allreduce_mean(&mut ws);
+        for w in &ws {
+            for &v in &w.data {
+                assert!((v - 1.5).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Communication substrate: simulated hierarchical interconnect,
+//! collective operations over the in-process worker group, and the
+//! byte-exact ledger behind every Bytes/Step and PeakBytes number in the
+//! reproduced tables.
+
+pub mod accounting;
+pub mod collective;
+pub mod topology;
+
+pub use accounting::{CommLedger, LayerClass, BYTES_BF16, BYTES_F32};
+pub use collective::{direct_allreduce_mean, ring_allreduce_mean, ring_volume_bytes};
+pub use topology::Topology;

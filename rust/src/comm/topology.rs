@@ -1,0 +1,137 @@
+//! Cluster interconnect model.
+//!
+//! The paper's motivation is the bandwidth disparity between on-node
+//! interconnects (NVLink) and cross-node links (PCIe/IB): once gradient
+//! synchronization traverses the slow boundary, payload bytes dominate
+//! step time. We model a two-level hierarchy with an α–β (latency +
+//! inverse-bandwidth) cost per link and derive ring all-reduce costs.
+
+/// Two-level cluster: `nodes` machines × `gpus_per_node` accelerators.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Intra-node (NVLink-class) bandwidth, bytes/s per link.
+    pub intra_bw: f64,
+    /// Inter-node (PCIe/IB-class) bandwidth, bytes/s per link.
+    pub inter_bw: f64,
+    /// Per-message latencies (the α term), seconds.
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+}
+
+impl Topology {
+    pub fn workers(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Single-node NVLink box (8×A100-like): 300 GB/s NVLink.
+    pub fn single_node(gpus: usize) -> Self {
+        Self {
+            nodes: 1,
+            gpus_per_node: gpus,
+            intra_bw: 300e9,
+            inter_bw: 300e9,
+            intra_lat: 3e-6,
+            inter_lat: 3e-6,
+        }
+    }
+
+    /// Multi-node cluster with PCIe-class cross-node links (the paper's
+    /// "NVLink vs PCIe" disparity): 300 GB/s inside, 16 GB/s across.
+    pub fn multi_node(nodes: usize, gpus_per_node: usize) -> Self {
+        Self {
+            nodes,
+            gpus_per_node,
+            intra_bw: 300e9,
+            inter_bw: 16e9,
+            intra_lat: 3e-6,
+            inter_lat: 25e-6,
+        }
+    }
+
+    /// Commodity Ethernet cluster (the regime where TSR's win is largest).
+    pub fn ethernet(nodes: usize, gpus_per_node: usize) -> Self {
+        Self {
+            nodes,
+            gpus_per_node,
+            intra_bw: 300e9,
+            inter_bw: 1.25e9, // 10 GbE
+            intra_lat: 3e-6,
+            inter_lat: 50e-6,
+        }
+    }
+
+    /// Simulated wall-clock time for a ring all-reduce of `bytes` payload
+    /// over all workers. Standard model: 2(N−1)/N · bytes / BW_bottleneck
+    /// + 2(N−1) · α_bottleneck. With a two-level hierarchy the bottleneck
+    /// is the slow link iff the ring crosses nodes.
+    pub fn allreduce_time(&self, bytes: usize) -> f64 {
+        let n = self.workers();
+        if n <= 1 {
+            return 0.0;
+        }
+        let crosses_nodes = self.nodes > 1;
+        let (bw, lat) = if crosses_nodes {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        };
+        let steps = 2 * (n - 1);
+        let volume = 2.0 * (n as f64 - 1.0) / n as f64 * bytes as f64;
+        volume / bw + steps as f64 * lat
+    }
+
+    /// Broadcast time (tree): ceil(log2 N) hops of the full payload.
+    pub fn broadcast_time(&self, bytes: usize) -> f64 {
+        let n = self.workers();
+        if n <= 1 {
+            return 0.0;
+        }
+        let crosses_nodes = self.nodes > 1;
+        let (bw, lat) = if crosses_nodes {
+            (self.inter_bw, self.inter_lat)
+        } else {
+            (self.intra_bw, self.intra_lat)
+        };
+        let hops = (n as f64).log2().ceil();
+        hops * (bytes as f64 / bw + lat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_worker_is_free() {
+        let t = Topology::single_node(1);
+        assert_eq!(t.allreduce_time(1 << 30), 0.0);
+    }
+
+    #[test]
+    fn larger_payload_takes_longer() {
+        let t = Topology::multi_node(4, 8);
+        assert!(t.allreduce_time(1 << 30) > t.allreduce_time(1 << 20));
+    }
+
+    #[test]
+    fn cross_node_slower_than_intra() {
+        let single = Topology::single_node(8);
+        let multi = Topology::multi_node(2, 4);
+        // Same worker count, same payload: crossing nodes must be slower.
+        assert_eq!(single.workers(), multi.workers());
+        assert!(multi.allreduce_time(1 << 28) > single.allreduce_time(1 << 28));
+    }
+
+    #[test]
+    fn small_messages_latency_bound() {
+        // The r×r core regime: for tiny payloads the α term dominates, so
+        // halving bytes barely changes the time. This is exactly why the
+        // paper reports bytes, not time, as the primary metric.
+        let t = Topology::multi_node(4, 8);
+        let t_small = t.allreduce_time(4 * 256 * 256); // r=256 core
+        let t_half = t.allreduce_time(2 * 256 * 256);
+        assert!(t_small < 1.3 * t_half);
+    }
+}

@@ -1,0 +1,5 @@
+//! Synthetic data substrate (offline C4/GLUE substitutes).
+
+pub mod corpus;
+
+pub use corpus::{Batcher, SyntheticCorpus};

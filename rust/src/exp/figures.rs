@@ -1,0 +1,267 @@
+//! Regenerators for the paper's figures (data series as CSV/JSON; the
+//! paper's plots are these series drawn with matplotlib).
+
+use super::analytic::{adamw_profile, embedding_share};
+use super::runs::{proxy_onesided_rank, proxy_spec, proxy_tsr_cfg, run_proxy, MethodCfg, RunOutput};
+use crate::metrics::results_path;
+use crate::model::ModelSpec;
+use crate::optim::onesided::OneSidedRefresh;
+use crate::optim::RefreshKind;
+use crate::util::json::Json;
+
+fn curve_json(out: &RunOutput) -> Json {
+    Json::obj(vec![
+        ("label", Json::str(out.label.clone())),
+        ("final_loss", Json::num(out.metrics.final_loss() as f64)),
+        ("bytes_per_step", Json::num(out.ledger.bytes_per_step())),
+        ("peak_bytes", Json::num(out.ledger.peak_bytes() as f64)),
+        (
+            "loss",
+            Json::Arr(out.metrics.loss.iter().map(|&l| Json::num(l as f64)).collect()),
+        ),
+        (
+            "cum_bytes",
+            Json::Arr(
+                out.metrics
+                    .cum_bytes
+                    .iter()
+                    .map(|&b| Json::num(b as f64))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn save(name: &str, j: &Json) {
+    let p = results_path(name);
+    std::fs::write(&p, j.to_string_pretty()).expect("write results");
+    println!("  -> wrote {}", p.display());
+}
+
+/// Fig. 1: bytes-to-loss curves (loss vs cumulative communicated bytes)
+/// for three representative scales × {AdamW, GaLore, TSR}.
+pub fn fig1(steps: usize, workers: usize) -> Json {
+    println!("\nFig 1 — bytes-to-loss curves (proxy scales)");
+    let mut panels = Vec::new();
+    for scale in ["60m", "130m", "350m"] {
+        let spec = proxy_spec(scale);
+        let methods = [
+            MethodCfg::Adam,
+            MethodCfg::OneSided {
+                rank: proxy_onesided_rank(scale),
+                k: 200,
+                refresh: OneSidedRefresh::RandomizedSvd,
+            },
+            MethodCfg::Tsr(proxy_tsr_cfg(scale)),
+        ];
+        let mut curves = Vec::new();
+        for m in &methods {
+            let out = run_proxy(&spec, m, steps, workers, 0.02, 0.02, 0xF16_1);
+            println!(
+                "  {scale:<5} {:<16} final loss {:>8.4}  cum bytes {}",
+                out.label,
+                out.metrics.final_loss(),
+                crate::util::bench::fmt_bytes(
+                    *out.metrics.cum_bytes.last().unwrap_or(&0) as f64
+                )
+            );
+            curves.push(curve_json(&out));
+        }
+        panels.push(Json::obj(vec![
+            ("scale", Json::str(scale)),
+            ("curves", Json::Arr(curves)),
+        ]));
+    }
+    let j = Json::obj(vec![("panels", Json::Arr(panels))]);
+    save("fig1_bytes_to_loss.json", &j);
+    j
+}
+
+/// Fig. 3: the three ablations on the 60M proxy.
+pub fn fig3(steps: usize, workers: usize) -> Json {
+    println!("\nFig 3 — ablations (60m proxy)");
+    let spec = proxy_spec("60m");
+    let base = proxy_tsr_cfg("60m");
+
+    // (a) one-sided vs two-sided at matched rank.
+    let mut a_curves = Vec::new();
+    for m in [
+        MethodCfg::OneSided {
+            rank: base.rank,
+            k: base.refresh_every,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        MethodCfg::Tsr(base.clone()),
+    ] {
+        let out = run_proxy(&spec, &m, steps, workers, 0.02, 0.02, 0xAB1);
+        println!(
+            "  (a) {:<18} final {:>8.4}  bytes/step {}",
+            out.label,
+            out.metrics.final_loss(),
+            crate::util::bench::fmt_bytes(out.ledger.bytes_per_step())
+        );
+        a_curves.push(curve_json(&out));
+    }
+
+    // (b) randomized vs exact-dense refresh.
+    let mut b_curves = Vec::new();
+    for kind in [RefreshKind::Randomized, RefreshKind::ExactDense] {
+        let mut cfg = base.clone();
+        cfg.refresh_kind = kind;
+        cfg.refresh_every = 25;
+        cfg.refresh_emb = 25;
+        let out = run_proxy(&spec, &MethodCfg::Tsr(cfg), steps, workers, 0.02, 0.02, 0xAB2);
+        let label = match kind {
+            RefreshKind::Randomized => "rsvd-refresh",
+            RefreshKind::ExactDense => "exact-svd-refresh",
+        };
+        println!(
+            "  (b) {:<18} final {:>8.4}  bytes/step {}  peak {}",
+            label,
+            out.metrics.final_loss(),
+            crate::util::bench::fmt_bytes(out.ledger.bytes_per_step()),
+            crate::util::bench::fmt_bytes(out.ledger.peak_bytes() as f64)
+        );
+        let mut j = curve_json(&out);
+        if let Json::Obj(o) = &mut j {
+            o.insert("label".into(), Json::str(label));
+        }
+        b_curves.push(j);
+    }
+
+    // (c) refresh interval K sweep.
+    let mut c_curves = Vec::new();
+    for k in [20usize, 50, 100, 200] {
+        let mut cfg = base.clone();
+        cfg.refresh_every = k;
+        cfg.refresh_emb = k;
+        let out = run_proxy(&spec, &MethodCfg::Tsr(cfg), steps, workers, 0.02, 0.02, 0xAB3);
+        println!(
+            "  (c) K={k:<4} final {:>8.4}  bytes/step {}",
+            out.metrics.final_loss(),
+            crate::util::bench::fmt_bytes(out.ledger.bytes_per_step())
+        );
+        let mut j = curve_json(&out);
+        if let Json::Obj(o) = &mut j {
+            o.insert("label".into(), Json::str(format!("K={k}")));
+        }
+        c_curves.push(j);
+    }
+
+    let j = Json::obj(vec![
+        ("a_one_vs_two_sided", Json::Arr(a_curves)),
+        ("b_svd_vs_rsvd", Json::Arr(b_curves)),
+        ("c_refresh_interval", Json::Arr(c_curves)),
+    ]);
+    save("fig3_ablations.json", &j);
+    j
+}
+
+/// Fig. 4: loss–communication Pareto frontier across scales.
+pub fn fig4(steps: usize, workers: usize) -> Json {
+    println!("\nFig 4 — Pareto frontier (final loss vs bytes/step, proxy scales)");
+    let mut points = Vec::new();
+    for scale in ["60m", "130m", "350m", "1b"] {
+        let spec = proxy_spec(scale);
+        let methods = [
+            MethodCfg::Adam,
+            MethodCfg::OneSided {
+                rank: proxy_onesided_rank(scale),
+                k: 200,
+                refresh: OneSidedRefresh::RandomizedSvd,
+            },
+            MethodCfg::Tsr(proxy_tsr_cfg(scale)),
+            MethodCfg::PowerSgd { rank: 8 },
+        ];
+        for m in &methods {
+            let out = run_proxy(&spec, m, steps, workers, 0.02, 0.02, 0xFA4);
+            println!(
+                "  {scale:<5} {:<18} loss {:>8.4}  bytes/step {}",
+                out.label,
+                out.metrics.final_loss(),
+                crate::util::bench::fmt_bytes(out.ledger.bytes_per_step())
+            );
+            points.push(Json::obj(vec![
+                ("scale", Json::str(scale)),
+                ("method", Json::str(out.label.clone())),
+                ("final_loss", Json::num(out.metrics.final_loss() as f64)),
+                ("bytes_per_step", Json::num(out.ledger.bytes_per_step())),
+            ]));
+        }
+    }
+    let j = Json::obj(vec![("points", Json::Arr(points))]);
+    save("fig4_pareto.json", &j);
+    j
+}
+
+/// Fig. 5: (a) embedding vs linear share of dense traffic per scale;
+/// (b) TSR with vs without embedding compression (loss–bytes curves).
+pub fn fig5(steps: usize, workers: usize) -> Json {
+    println!("\nFig 5(a) — dense gradient traffic share (exact, paper scales)");
+    let mut shares = Vec::new();
+    for scale in ["60m", "130m", "350m", "1b"] {
+        let spec = ModelSpec::by_name(scale).unwrap();
+        let share = embedding_share(&spec);
+        let prof = adamw_profile(&spec);
+        println!(
+            "  {scale:<5} embedding {:>5.1}%  linear {:>5.1}%",
+            100.0 * share,
+            100.0 * prof.split.1 / (prof.split.0 + prof.split.1 + prof.split.2)
+        );
+        shares.push(Json::obj(vec![
+            ("scale", Json::str(scale)),
+            ("embedding_share", Json::num(share)),
+        ]));
+    }
+
+    println!("Fig 5(b) — embedding compression on vs off (60m proxy)");
+    let spec = proxy_spec("60m");
+    let base = proxy_tsr_cfg("60m");
+    let mut curves = Vec::new();
+    // TSR with embedding compression (the paper's full method).
+    let out_on = run_proxy(&spec, &MethodCfg::Tsr(base.clone()), steps, workers, 0.02, 0.02, 0xF5);
+    // TSR with embeddings left dense: emulate by a huge r_emb clamped to
+    // full rank and no embedding refresh cost → embedding syncs dense-rank
+    // core = full matrix. We model "dense embedding" exactly by rank_emb =
+    // min dim (core = d×d = full column space at hidden size).
+    let mut dense_emb = base.clone();
+    dense_emb.rank_emb = usize::MAX / 2;
+    dense_emb.refresh_emb = usize::MAX / 2;
+    let out_off = run_proxy(&spec, &MethodCfg::Tsr(dense_emb), steps, workers, 0.02, 0.02, 0xF5);
+    for (label, out) in [("tsr-emb-compressed", &out_on), ("tsr-emb-dense", &out_off)] {
+        println!(
+            "  {:<20} final {:>8.4}  bytes/step {}",
+            label,
+            out.metrics.final_loss(),
+            crate::util::bench::fmt_bytes(out.ledger.bytes_per_step())
+        );
+        let mut j = curve_json(out);
+        if let Json::Obj(o) = &mut j {
+            o.insert("label".into(), Json::str(label));
+        }
+        curves.push(j);
+    }
+    let j = Json::obj(vec![
+        ("a_shares", Json::Arr(shares)),
+        ("b_curves", Json::Arr(curves)),
+    ]);
+    save("fig5_embedding.json", &j);
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shares_structure() {
+        // Analytic part only (no training): embedding share must be
+        // largest at 60m and strictly decreasing with scale.
+        let mut last = 1.0f64;
+        for scale in ["60m", "130m", "350m", "1b"] {
+            let s = embedding_share(&ModelSpec::by_name(scale).unwrap());
+            assert!(s < last, "{scale}: {s} !< {last}");
+            last = s;
+        }
+    }
+}

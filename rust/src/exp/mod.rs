@@ -1,0 +1,11 @@
+//! Experiment drivers: one entry point per paper table/figure
+//! (DESIGN.md §3 maps ids → modules → CLI subcommands).
+
+pub mod analytic;
+pub mod figures;
+pub mod runs;
+pub mod tables;
+pub mod theory;
+
+pub use analytic::{adamw_profile, onesided_profile, tsr_profile, CommProfile, TsrParams};
+pub use runs::{run_proxy, MethodCfg, RunOutput};

@@ -1,0 +1,28 @@
+//! # TSR-Adam: Two-Sided Low-Rank Communication for Distributed Adam
+//!
+//! Reproduction of *"From O(mn) to O(r²): Two-Sided Low-Rank Communication
+//! for Adam in Distributed Training with Memory Efficiency"* (CS.LG 2026).
+//!
+//! Three-layer architecture:
+//! * **L3 (this crate)** — the distributed data-parallel coordinator:
+//!   simulated worker group, hierarchical interconnect with byte-exact
+//!   communication accounting, the TSR-Adam / TSR-SGD optimizers and all
+//!   compared baselines, and the training loop.
+//! * **L2 (`python/compile/model.py`)** — JAX transformer fwd+bwd, AOT-
+//!   lowered to HLO text artifacts executed via PJRT from Rust.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels for the compute
+//!   hot-spots (tiled matmul, two-sided core projection, lift), verified
+//!   against pure-jnp oracles.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod comm;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod train;
+pub mod util;

@@ -1,0 +1,214 @@
+//! Dense row-major f32 matrix.
+//!
+//! The minimal matrix type the whole optimizer stack is built on. Heavy
+//! multiplies live in [`crate::linalg::matmul`]; this file holds layout,
+//! element-wise ops, and small utilities.
+
+use crate::util::rng::Xoshiro256;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, f: impl Fn(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// i.i.d. N(0, sigma²) entries.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f32, rng: &mut Xoshiro256) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data);
+        if sigma != 1.0 {
+            for v in &mut m.data {
+                *v *= sigma;
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on large matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// First `k` columns as a new matrix (used for Ũ[:, :r] truncation).
+    pub fn take_cols(&self, k: usize) -> Matrix {
+        assert!(k <= self.cols);
+        let mut out = Matrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[..k]);
+        }
+        out
+    }
+
+    // ---------- element-wise / BLAS-1 ----------
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// self += alpha * other  (axpy)
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))
+    }
+
+    /// ‖self - other‖_F
+    pub fn dist(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.fill(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_access() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f32);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_fn(37, 53, |i, j| (i * 53 + j) as f32);
+        let t = m.transpose();
+        assert_eq!(t.rows, 53);
+        assert_eq!(t.at(5, 7), m.at(7, 5));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn take_cols_truncates() {
+        let m = Matrix::from_fn(4, 6, |i, j| (i + j) as f32);
+        let k = m.take_cols(2);
+        assert_eq!(k.cols, 2);
+        assert_eq!(k.at(3, 1), m.at(3, 1));
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 2.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 4.0]);
+        assert!((Matrix::from_vec(1, 2, vec![3.0, 4.0]).frob_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gaussian_is_deterministic() {
+        let mut r1 = Xoshiro256::new(5);
+        let mut r2 = Xoshiro256::new(5);
+        let a = Matrix::gaussian(8, 8, 1.0, &mut r1);
+        let b = Matrix::gaussian(8, 8, 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate (f32, row-major).
+//!
+//! Built from scratch for this repo (no BLAS/LAPACK in the offline crate
+//! universe). Everything the TSR optimizer family needs:
+//! matrices, blocked parallel matmul, thin Householder QR ("orth"),
+//! small-matrix SVD (Jacobi + Gram variants), and randomized SVD.
+
+pub mod matmul;
+pub mod matrix;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use matmul::{core_project, lift, matmul, matmul_into, matmul_nt, matmul_tn};
+pub use matrix::Matrix;
+pub use qr::{orth, ortho_defect, qr_thin};
+pub use rsvd::{rsvd, svd_truncated, Rsvd};
+pub use svd::{eig_symmetric, svd_gram, svd_jacobi};

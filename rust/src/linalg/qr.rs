@@ -1,0 +1,180 @@
+//! Thin QR factorization via Householder reflections.
+//!
+//! `orth(Y)` in Algorithm 1 — every sketch `Y = GΩ` is orthonormalized
+//! with a thin QR. We use blocked-free Householder (numerically stable,
+//! unlike Gram–Schmidt on ill-conditioned sketches) and form the thin Q
+//! explicitly by applying the reflectors to the first k identity columns.
+
+use super::matrix::Matrix;
+
+/// Thin QR: A (m×k, m ≥ k) → (Q (m×k) with orthonormal columns, R (k×k)
+/// upper triangular) such that A = Q·R.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows;
+    let k = a.cols;
+    assert!(m >= k, "qr_thin requires m >= k (got {m}x{k})");
+    // Work in f64 internally for stability of the reflector cascade.
+    let mut w: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    // Householder vectors stored in the lower triangle of w; betas here.
+    let mut betas = vec![0.0f64; k];
+
+    for j in 0..k {
+        // Compute reflector for column j, rows j..m.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = w[i * k + j];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            continue;
+        }
+        let x0 = w[j * k + j];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        // v = x - alpha*e1, normalized so v[0] = 1.
+        let v0 = x0 - alpha;
+        betas[j] = if v0 == 0.0 { 0.0 } else { -v0 / alpha }; // = 2/(vᵀv) * v0² form
+        // Store normalized v below the diagonal.
+        for i in (j + 1)..m {
+            w[i * k + j] /= v0;
+        }
+        w[j * k + j] = alpha; // R diagonal
+
+        // Apply reflector to the trailing columns: A := (I - beta v vᵀ) A
+        for c in (j + 1)..k {
+            let mut s = w[j * k + c]; // v[0] = 1 implicit
+            for i in (j + 1)..m {
+                s += w[i * k + j] * w[i * k + c];
+            }
+            s *= betas[j];
+            w[j * k + c] -= s;
+            for i in (j + 1)..m {
+                w[i * k + c] -= s * w[i * k + j];
+            }
+        }
+    }
+
+    // Extract R.
+    let mut r = Matrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            *r.at_mut(i, j) = w[i * k + j] as f32;
+        }
+    }
+
+    // Form thin Q by applying reflectors (in reverse) to identity columns.
+    let mut q = vec![0.0f64; m * k];
+    for j in 0..k {
+        q[j * k + j] = 1.0;
+    }
+    for j in (0..k).rev() {
+        if betas[j] == 0.0 {
+            continue;
+        }
+        for c in 0..k {
+            let mut s = q[j * k + c];
+            for i in (j + 1)..m {
+                s += w[i * k + j] * q[i * k + c];
+            }
+            s *= betas[j];
+            q[j * k + c] -= s;
+            for i in (j + 1)..m {
+                q[i * k + c] -= s * w[i * k + j];
+            }
+        }
+    }
+
+    let qm = Matrix::from_vec(m, k, q.iter().map(|&v| v as f32).collect());
+    (qm, r)
+}
+
+/// `orth(Y)`: orthonormal basis for the column span of Y (Algorithm 1).
+pub fn orth(y: &Matrix) -> Matrix {
+    qr_thin(y).0
+}
+
+/// ‖QᵀQ − I‖_max — orthonormality defect, used by tests and invariants.
+pub fn ortho_defect(q: &Matrix) -> f32 {
+    let g = super::matmul::matmul_tn(q, q);
+    let mut worst = 0.0f32;
+    for i in 0..g.rows {
+        for j in 0..g.cols {
+            let target = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.at(i, j) - target).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Xoshiro256::new(1);
+        for &(m, k) in &[(5, 5), (20, 7), (100, 32), (64, 1)] {
+            let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+            let (q, r) = qr_thin(&a);
+            let qr = matmul(&q, &r);
+            assert!(qr.dist(&a) < 1e-3 * (m as f32), "{m}x{k}");
+            assert!(ortho_defect(&q) < 1e-4, "{m}x{k} defect {}", ortho_defect(&q));
+        }
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Matrix::gaussian(30, 10, 1.0, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..10 {
+            for j in 0..i {
+                assert_eq!(r.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient() {
+        // Two identical columns: QR must not produce NaNs.
+        let mut rng = Xoshiro256::new(3);
+        let col = Matrix::gaussian(12, 1, 1.0, &mut rng);
+        let a = Matrix::from_fn(12, 2, |i, _| col.at(i, 0));
+        let (q, _) = qr_thin(&a);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn prop_orthonormal_columns() {
+        prop::check("qr orthonormal", 32, |rng| {
+            let k = prop::dim(rng, 1, 12);
+            let m = k + prop::dim(rng, 0, 40);
+            let a = Matrix::gaussian(m, k, 1.0, rng);
+            let q = orth(&a);
+            assert!(
+                ortho_defect(&q) < 1e-4,
+                "defect {} for {}x{}",
+                ortho_defect(&q),
+                m,
+                k
+            );
+        });
+    }
+
+    #[test]
+    fn prop_span_preserved() {
+        // Q Qᵀ A = A when A has full column rank (projection onto span(A)).
+        prop::check("qr span", 16, |rng| {
+            let k = prop::dim(rng, 1, 8);
+            let m = k + prop::dim(rng, 4, 24);
+            let a = Matrix::gaussian(m, k, 1.0, rng);
+            let q = orth(&a);
+            let proj = matmul(&q, &super::super::matmul::matmul_tn(&q, &a));
+            assert!(proj.dist(&a) < 1e-3 * m as f32);
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! Randomized SVD (Halko–Martinsson–Tropp) — the centralized counterpart
+//! of the paper's sketch-based subspace refresh (§3.5).
+//!
+//! The *distributed* refresh (per-worker sketches + all-reduce of Q and
+//! B) lives in `crate::optim::tsr`; this module provides the single-node
+//! building block used by baselines (GaLore-rSVD ablation, Fig. 3b) and
+//! as a test oracle for the distributed path with N=1.
+
+use super::matmul::{matmul, matmul_tn};
+use super::matrix::Matrix;
+use super::qr::orth;
+use super::svd::svd_gram;
+use crate::util::rng::Xoshiro256;
+
+/// Output of a randomized SVD: `A ≈ U diag(sigma) Vᵀ` with rank-r factors.
+pub struct Rsvd {
+    pub u: Matrix,
+    pub sigma: Vec<f32>,
+    pub v: Matrix,
+}
+
+/// Randomized range finder + small SVD.
+///
+/// * `r` — target rank, `p` — oversampling (k = r + p sketch columns),
+/// * `q` — power-iteration steps (Algorithm 1 shows q = 1),
+/// * `rng` — source of the Gaussian test matrix Ω.
+pub fn rsvd(a: &Matrix, r: usize, p: usize, q: usize, rng: &mut Xoshiro256) -> Rsvd {
+    let k = (r + p).min(a.rows).min(a.cols);
+    let omega = Matrix::gaussian(a.cols, k, 1.0, rng);
+    let mut qm = orth(&matmul(a, &omega)); // m×k
+    for _ in 0..q {
+        // Alternate Aᵀ/A multiplications with re-orthonormalization —
+        // the exact scheme in Algorithm 1's refresh block.
+        let y_row = matmul_tn(a, &qm); // n×k
+        let q_row = orth(&y_row);
+        let y = matmul(a, &q_row); // m×k
+        qm = orth(&y);
+    }
+    let b = matmul_tn(&qm, a); // k×n
+    let (ub, sigma, vb) = svd_gram(&b);
+    let r_eff = r.min(k);
+    Rsvd {
+        u: matmul(&qm, &ub.take_cols(r_eff)),
+        sigma: sigma[..r_eff].to_vec(),
+        v: vb.take_cols(r_eff),
+    }
+}
+
+/// Exact truncated SVD via one-sided Jacobi — the "Normal SVD" baseline
+/// of Fig. 3(b). O(min²·max); fine at ablation scales.
+pub fn svd_truncated(a: &Matrix, r: usize) -> Rsvd {
+    let (u, sigma, v) = super::svd::svd_jacobi(a);
+    let r_eff = r.min(sigma.len());
+    Rsvd {
+        u: u.take_cols(r_eff),
+        sigma: sigma[..r_eff].to_vec(),
+        v: v.take_cols(r_eff),
+    }
+}
+
+impl Rsvd {
+    /// U diag(σ) Vᵀ
+    pub fn reconstruct(&self) -> Matrix {
+        let mut us = self.u.clone();
+        for j in 0..us.cols {
+            for i in 0..us.rows {
+                *us.at_mut(i, j) *= self.sigma[j];
+            }
+        }
+        super::matmul::matmul_nt(&us, &self.v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+    use crate::util::prop;
+
+    fn lowrank_plus_noise(
+        m: usize,
+        n: usize,
+        r: usize,
+        noise: f32,
+        rng: &mut Xoshiro256,
+    ) -> Matrix {
+        let a = Matrix::gaussian(m, r, 1.0, rng);
+        let b = Matrix::gaussian(r, n, 1.0, rng);
+        let mut x = matmul(&a, &b);
+        let e = Matrix::gaussian(m, n, noise, rng);
+        x.add_assign(&e);
+        x
+    }
+
+    #[test]
+    fn recovers_lowrank_matrix() {
+        let mut rng = Xoshiro256::new(7);
+        let a = lowrank_plus_noise(60, 45, 6, 0.0, &mut rng);
+        let out = rsvd(&a, 6, 4, 1, &mut rng);
+        assert!(out.reconstruct().dist(&a) < 1e-2 * a.frob_norm());
+        assert!(ortho_defect(&out.u) < 1e-3);
+        assert!(ortho_defect(&out.v) < 1e-3);
+    }
+
+    #[test]
+    fn power_iteration_helps_slow_spectrum() {
+        let mut rng = Xoshiro256::new(8);
+        let a = lowrank_plus_noise(80, 60, 8, 0.15, &mut rng);
+        let mut r0 = Xoshiro256::new(99);
+        let mut r1 = Xoshiro256::new(99);
+        let e0 = rsvd(&a, 8, 2, 0, &mut r0).reconstruct().dist(&a);
+        let e1 = rsvd(&a, 8, 2, 2, &mut r1).reconstruct().dist(&a);
+        assert!(e1 <= e0 * 1.05, "q=2 ({e1}) should not be worse than q=0 ({e0})");
+    }
+
+    #[test]
+    fn close_to_exact_truncation() {
+        let mut rng = Xoshiro256::new(9);
+        let a = lowrank_plus_noise(50, 40, 5, 0.05, &mut rng);
+        let exact = svd_truncated(&a, 5).reconstruct();
+        let approx = rsvd(&a, 5, 5, 1, &mut rng).reconstruct();
+        let e_exact = exact.dist(&a) as f64;
+        let e_approx = approx.dist(&a) as f64;
+        assert!(
+            e_approx <= 1.25 * e_exact + 1e-6,
+            "rsvd error {e_approx} vs exact {e_exact}"
+        );
+    }
+
+    #[test]
+    fn prop_rank_clamping() {
+        prop::check("rsvd rank clamp", 12, |rng| {
+            let m = prop::dim(rng, 3, 20);
+            let n = prop::dim(rng, 3, 20);
+            let a = Matrix::gaussian(m, n, 1.0, rng);
+            let r = prop::dim(rng, 1, 30); // may exceed min(m,n)
+            let out = rsvd(&a, r, 3, 1, rng);
+            assert!(out.u.cols <= m.min(n).min(r));
+            assert_eq!(out.u.cols, out.v.cols);
+            assert_eq!(out.sigma.len(), out.u.cols);
+        });
+    }
+}

@@ -1,0 +1,314 @@
+//! Small-matrix SVD.
+//!
+//! Algorithm 1 needs the SVD of the reduced matrix `B̄ ∈ R^{k×n}` with
+//! k = r + p small. Two implementations:
+//!
+//! * [`svd_jacobi`] — one-sided Jacobi on the (max-dim × min-dim)
+//!   orientation: slow but very accurate; the correctness oracle and the
+//!   path used for modest sizes.
+//! * [`svd_gram`] — Gram-matrix eigendecomposition (B·Bᵀ, k×k) followed by
+//!   `V = Bᵀ U Σ⁻¹`: one big matmul + an O(k³) Jacobi eig. This is the
+//!   fast path for refresh at large n (condition number is squared, which
+//!   is acceptable for subspace *refresh* — we only need the span).
+//!
+//! Both return `(U, sigma, V)` with `A ≈ U·diag(sigma)·Vᵀ`, singular
+//! values in descending order.
+
+use super::matmul::{matmul, matmul_nt, matmul_tn};
+use super::matrix::Matrix;
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix S (k×k).
+/// Returns (eigenvalues desc, eigenvectors as columns).
+pub fn eig_symmetric(s: &Matrix) -> (Vec<f32>, Matrix) {
+    assert_eq!(s.rows, s.cols);
+    let k = s.rows;
+    let mut a: Vec<f64> = s.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    let max_sweeps = 30;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                off += a[i * k + j] * a[i * k + j];
+            }
+        }
+        if off.sqrt() < 1e-12 * (k as f64) {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = a[p * k + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * k + p];
+                let aqq = a[q * k + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let sn = t * c;
+                // Rotate rows/cols p and q of A.
+                for i in 0..k {
+                    let aip = a[i * k + p];
+                    let aiq = a[i * k + q];
+                    a[i * k + p] = c * aip - sn * aiq;
+                    a[i * k + q] = sn * aip + c * aiq;
+                }
+                for j in 0..k {
+                    let apj = a[p * k + j];
+                    let aqj = a[q * k + j];
+                    a[p * k + j] = c * apj - sn * aqj;
+                    a[q * k + j] = sn * apj + c * aqj;
+                }
+                // Accumulate eigenvectors.
+                for i in 0..k {
+                    let vip = v[i * k + p];
+                    let viq = v[i * k + q];
+                    v[i * k + p] = c * vip - sn * viq;
+                    v[i * k + q] = sn * vip + c * viq;
+                }
+            }
+        }
+    }
+    // Extract eigenvalues, sort descending, permute eigenvectors.
+    let mut pairs: Vec<(f64, usize)> = (0..k).map(|i| (a[i * k + i], i)).collect();
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let evals: Vec<f32> = pairs.iter().map(|p| p.0 as f32).collect();
+    let mut evecs = Matrix::zeros(k, k);
+    for (new_j, (_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..k {
+            *evecs.at_mut(i, new_j) = v[i * k + old_j] as f32;
+        }
+    }
+    (evals, evecs)
+}
+
+/// One-sided Jacobi SVD. Accurate; O(min² · max) per sweep.
+pub fn svd_jacobi(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    if a.rows >= a.cols {
+        svd_jacobi_tall(a)
+    } else {
+        // A = U Σ Vᵀ  ⇔  Aᵀ = V Σ Uᵀ
+        let (v, s, u) = svd_jacobi_tall(&a.transpose());
+        (u, s, v)
+    }
+}
+
+/// One-sided Jacobi for m ≥ n: orthogonalize the n columns of A.
+fn svd_jacobi_tall(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    let m = a.rows;
+    let n = a.cols;
+    // Column-major working copy in f64.
+    let mut w = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            w[j * m + i] = a.at(i, j) as f64;
+        }
+    }
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let eps = 1e-12;
+    for _sweep in 0..40 {
+        let mut converged = true;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let (cp, cq) = (p * m, q * m);
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..m {
+                    let x = w[cp + i];
+                    let y = w[cq + i];
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                converged = false;
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let x = w[cp + i];
+                    let y = w[cq + i];
+                    w[cp + i] = c * x - s * y;
+                    w[cq + i] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let x = v[p * n + i];
+                    let y = v[q * n + i];
+                    v[p * n + i] = c * x - s * y;
+                    v[q * n + i] = s * x + c * y;
+                }
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+    // Singular values = column norms; U = normalized columns.
+    let mut sig: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm = (0..m).map(|i| w[j * m + i] * w[j * m + i]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sig.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vt_cols = Matrix::zeros(n, n);
+    let mut sigma = Vec::with_capacity(n);
+    for (new_j, (s, old_j)) in sig.iter().enumerate() {
+        sigma.push(*s as f32);
+        let inv = if *s > 1e-300 { 1.0 / s } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, new_j) = (w[old_j * m + i] * inv) as f32;
+        }
+        for i in 0..n {
+            *vt_cols.at_mut(i, new_j) = v[old_j * n + i] as f32;
+        }
+    }
+    (u, sigma, vt_cols)
+}
+
+/// Gram-matrix SVD for wide B (k×n, k ≤ n): eig(B·Bᵀ) → U, σ; V = BᵀUΣ⁻¹.
+pub fn svd_gram(b: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    assert!(
+        b.rows <= b.cols,
+        "svd_gram expects wide input (k<=n), got {}x{}",
+        b.rows,
+        b.cols
+    );
+    let gram = matmul_nt(b, b); // k×k
+    let (evals, u) = eig_symmetric(&gram);
+    let sigma: Vec<f32> = evals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    // V = Bᵀ U Σ⁻¹ (columns with tiny σ are zeroed; callers truncate).
+    let bt_u = matmul_tn(b, &u); // n×k
+    let mut v = bt_u;
+    for j in 0..v.cols {
+        let inv = if sigma[j] > 1e-12 { 1.0 / sigma[j] } else { 0.0 };
+        for i in 0..v.rows {
+            *v.at_mut(i, j) *= inv;
+        }
+    }
+    (u, sigma, v)
+}
+
+/// Reconstruct U·diag(s)·Vᵀ, truncated to rank r (testing helper).
+pub fn reconstruct(u: &Matrix, s: &[f32], v: &Matrix, r: usize) -> Matrix {
+    let ur = u.take_cols(r);
+    let vr = v.take_cols(r);
+    let mut usr = ur.clone();
+    for j in 0..r {
+        for i in 0..usr.rows {
+            *usr.at_mut(i, j) *= s[j];
+        }
+    }
+    matmul(&usr, &vr.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_lowrank(m: usize, n: usize, r: usize, rng: &mut Xoshiro256) -> Matrix {
+        let a = Matrix::gaussian(m, r, 1.0, rng);
+        let b = Matrix::gaussian(r, n, 1.0, rng);
+        matmul(&a, &b)
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Xoshiro256::new(1);
+        for &(m, n) in &[(8, 8), (20, 6), (6, 20), (33, 17)] {
+            let a = Matrix::gaussian(m, n, 1.0, &mut rng);
+            let (u, s, v) = svd_jacobi(&a);
+            let k = m.min(n);
+            let rec = reconstruct(&u, &s, &v, k);
+            assert!(rec.dist(&a) < 1e-3 * (m * n) as f32, "{m}x{n}: {}", rec.dist(&a));
+            assert!(ortho_defect(&u.take_cols(k)) < 1e-4);
+            assert!(ortho_defect(&v.take_cols(k)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Matrix::gaussian(15, 25, 1.0, &mut rng);
+        let (_, s, _) = svd_jacobi(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn gram_matches_jacobi_on_spectrum() {
+        let mut rng = Xoshiro256::new(3);
+        let b = Matrix::gaussian(10, 40, 1.0, &mut rng);
+        let (_, s1, _) = svd_jacobi(&b);
+        let (u2, s2, v2) = svd_gram(&b);
+        for i in 0..10 {
+            assert!((s1[i] - s2[i]).abs() < 1e-2 * s1[0], "σ{i}: {} vs {}", s1[i], s2[i]);
+        }
+        let rec = reconstruct(&u2, &s2, &v2, 10);
+        assert!(rec.dist(&b) < 1e-2 * b.frob_norm());
+    }
+
+    #[test]
+    fn exact_lowrank_recovery() {
+        let mut rng = Xoshiro256::new(4);
+        let a = random_lowrank(30, 22, 5, &mut rng);
+        let (u, s, v) = svd_jacobi(&a);
+        // Rank-5 truncation is (numerically) exact.
+        let rec = reconstruct(&u, &s, &v, 5);
+        assert!(rec.dist(&a) < 1e-2 * a.frob_norm());
+        // σ₆.. ≈ 0
+        assert!(s[5] < 1e-3 * s[0]);
+    }
+
+    #[test]
+    fn eig_symmetric_diagonalizes() {
+        let mut rng = Xoshiro256::new(5);
+        let x = Matrix::gaussian(9, 9, 1.0, &mut rng);
+        let s = matmul_nt(&x, &x); // SPD
+        let (evals, q) = eig_symmetric(&s);
+        // S·q_j = λ_j q_j
+        let sq = matmul(&s, &q);
+        for j in 0..9 {
+            for i in 0..9 {
+                assert!((sq.at(i, j) - evals[j] * q.at(i, j)).abs() < 1e-2 * evals[0].abs());
+            }
+        }
+        assert!(ortho_defect(&q) < 1e-4);
+    }
+
+    #[test]
+    fn prop_gram_best_rank_r_error() {
+        // Eckart–Young sanity: rank-r truncation error equals tail spectrum.
+        prop::check("eckart-young", 8, |rng| {
+            let k = prop::dim(rng, 4, 8);
+            let n = k + prop::dim(rng, 8, 30);
+            let b = Matrix::gaussian(k, n, 1.0, rng);
+            let (u, s, v) = svd_gram(&b);
+            let r = k / 2;
+            let rec = reconstruct(&u, &s, &v, r);
+            let err2 = rec.dist(&b).powi(2);
+            let tail: f32 = s[r..].iter().map(|x| x * x).sum();
+            assert!(
+                (err2 - tail).abs() < 0.05 * (tail + 1e-6),
+                "err² {err2} vs tail {tail}"
+            );
+        });
+    }
+}

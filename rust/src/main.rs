@@ -1,0 +1,200 @@
+//! `tsr` — CLI for the TSR-Adam reproduction.
+//!
+//! Subcommands (see DESIGN.md §3 for the experiment index):
+//!   table1|table2|table3|table4|table6   regenerate paper tables
+//!   fig1|fig3|fig4|fig5                  regenerate paper figure data
+//!   theory                               Theorem 1 validation sweep
+//!   train                                PJRT end-to-end training run
+//!   info                                 platform / artifact status
+
+use tsr::exp::{figures, tables, theory};
+use tsr::metrics::results_path;
+use tsr::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("table1") => {
+            let m = args.get_usize("m", 4096);
+            let n = args.get_usize("n", 4096);
+            let r = args.get_usize("rank", 128);
+            write_results("table1.json", &tables::table1(m, n, r));
+        }
+        Some("table2") => {
+            let scale = args.get_or("scale", "60m");
+            let spec = tsr::model::ModelSpec::by_name(scale).expect("unknown scale");
+            let r = args.get_usize("rank", 256);
+            let re = args.get_usize("rank-emb", 64);
+            write_results("table2.json", &tables::table2(&spec, r, re));
+        }
+        Some("table3") => {
+            let steps = args.get_usize("loss-steps", 200);
+            // Full-scale step timing is opt-in: a 1B-scale TSR step is
+            // ~1 TFLOP of projections (minutes on a single core).
+            let timing = args.flag("timing");
+            write_results("table3.json", &tables::table3(steps, timing));
+        }
+        Some("table4") => {
+            let steps = args.get_usize("steps", 150);
+            write_results("table4.json", &tables::table4(steps));
+        }
+        Some("table6") => {
+            write_results("table6.json", &tables::table6());
+        }
+        Some("fig1") => {
+            figures::fig1(args.get_usize("steps", 300), args.get_usize("workers", 4));
+        }
+        Some("fig3") => {
+            figures::fig3(args.get_usize("steps", 300), args.get_usize("workers", 4));
+        }
+        Some("fig4") => {
+            figures::fig4(args.get_usize("steps", 250), args.get_usize("workers", 4));
+        }
+        Some("fig5") => {
+            figures::fig5(args.get_usize("steps", 300), args.get_usize("workers", 4));
+        }
+        Some("theory") => {
+            let horizons: Vec<usize> = args
+                .get_or("horizons", "50,100,200,400,800")
+                .split(',')
+                .filter_map(|s| s.parse().ok())
+                .collect();
+            let j = theory::theory_sweep(&horizons, args.get_usize("workers", 2), args.get_usize("k", 25));
+            write_results("theory.json", &j);
+        }
+        Some("train") => run_train(&args),
+        Some("info") => info(),
+        other => {
+            if let Some(cmd) = other {
+                eprintln!("unknown subcommand: {cmd}\n");
+            }
+            eprintln!(
+                "usage: tsr <subcommand> [--options]\n\
+                 \n  tables:   table1 table2 table3 [--loss-steps N] table4 table6\
+                 \n  figures:  fig1 fig3 fig4 fig5 [--steps N --workers W]\
+                 \n  theory:   theory [--horizons 50,100,...]\
+                 \n  train:    train --manifest artifacts/tiny_manifest.json \
+                 [--method tsr|adamw|galore] [--steps N] [--workers W]\
+                 \n  info"
+            );
+            std::process::exit(if other.is_some() { 2 } else { 0 });
+        }
+    }
+}
+
+fn write_results(name: &str, j: &tsr::util::json::Json) {
+    let p = results_path(name);
+    std::fs::write(&p, j.to_string_pretty()).expect("write results");
+    println!("\n-> wrote {}", p.display());
+}
+
+fn info() {
+    match tsr::runtime::Engine::cpu() {
+        Ok(e) => println!("PJRT platform: {}", e.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    for name in ["tiny_manifest.json", "e2e_manifest.json"] {
+        let p = std::path::Path::new("artifacts").join(name);
+        println!(
+            "artifact {}: {}",
+            p.display(),
+            if p.exists() { "present" } else { "missing (run `make artifacts`)" }
+        );
+    }
+}
+
+/// End-to-end PJRT training: the real L1+L2+L3 composition.
+fn run_train(args: &Args) {
+    use tsr::comm::Topology;
+    use tsr::data::{Batcher, SyntheticCorpus};
+    use tsr::exp::MethodCfg;
+    use tsr::optim::onesided::OneSidedRefresh;
+    use tsr::optim::{AdamHyper, LrSchedule, TsrConfig};
+    use tsr::train::pjrt_source::PjrtSource;
+    use tsr::train::{GradSource, Trainer};
+
+    let manifest_path = args.get_or("manifest", "artifacts/tiny_manifest.json");
+    let steps = args.get_usize("steps", 200);
+    let workers = args.get_usize("workers", 4);
+    let method = args.get_or("method", "tsr");
+    let lr = args.get_f64("lr", 0.01) as f32;
+
+    let manifest = tsr::runtime::Manifest::load(manifest_path).expect("load manifest");
+    let engine = tsr::runtime::Engine::cpu().expect("pjrt cpu client");
+    println!(
+        "loaded {} (vocab {}, hidden {}, layers {}, batch {}, seq {}) on {}",
+        manifest.name,
+        manifest.vocab,
+        manifest.hidden,
+        manifest.layers,
+        manifest.batch,
+        manifest.seq,
+        engine.platform()
+    );
+    let model = engine.load_model(manifest.clone()).expect("compile artifact");
+    let corpus = SyntheticCorpus::new(manifest.vocab, 0xC0);
+    let batcher = Batcher::new(corpus, workers, manifest.batch, manifest.seq, 0xDA7A);
+    let mut source = PjrtSource::new(model, batcher);
+    let blocks = source.blocks().to_vec();
+
+    let rank = args.get_usize("rank", (manifest.hidden / 4).max(4));
+    let rank_emb = args.get_usize("rank-emb", (manifest.hidden / 8).max(4));
+    let k = args.get_usize("k", 50);
+    let mcfg = match method {
+        "adamw" => MethodCfg::Adam,
+        "galore" => MethodCfg::OneSided {
+            rank,
+            k,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        "tsr" => MethodCfg::Tsr(TsrConfig {
+            rank,
+            rank_emb,
+            refresh_every: k,
+            refresh_emb: k,
+            oversample: 8,
+            ..Default::default()
+        }),
+        other => panic!("unknown method {other}"),
+    };
+    let hyper = AdamHyper {
+        lr,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = mcfg.build(&blocks, hyper, workers);
+    let mut params = source.init_params(args.get_u64("seed", 42));
+    let mut trainer = Trainer::new(
+        Topology::multi_node(2, workers.div_ceil(2)),
+        LrSchedule::paper(steps),
+    );
+    trainer.verbose = true;
+    trainer.log_every = args.get_usize("log-every", 10);
+    let t0 = std::time::Instant::now();
+    let (metrics, ledger) = trainer.run(&mut source, opt.as_mut(), &mut params, steps);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== {} on {} ==", mcfg.label(), manifest.name);
+    println!("final loss      : {:.4}", metrics.final_loss());
+    println!(
+        "bytes/step      : {}",
+        tsr::util::bench::fmt_bytes(ledger.bytes_per_step())
+    );
+    println!(
+        "peak bytes      : {}",
+        tsr::util::bench::fmt_bytes(ledger.peak_bytes() as f64)
+    );
+    println!(
+        "cumulative bytes: {}",
+        tsr::util::bench::fmt_bytes(*metrics.cum_bytes.last().unwrap_or(&0) as f64)
+    );
+    println!("optimizer state : {} elements", opt.state_elements());
+    println!("sim comm time   : {:.3}s (α–β model)", ledger.sim_time);
+    println!("wall time       : {wall:.1}s  ({:.3}s/step)", wall / steps as f64);
+
+    let out = args.get_or("out", "results/train_run.json");
+    let _ = std::fs::create_dir_all("results");
+    std::fs::write(out, metrics.to_json().to_string_pretty()).expect("write run json");
+    println!("-> wrote {out}");
+}

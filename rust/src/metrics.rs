@@ -1,0 +1,118 @@
+//! Run metrics: loss curves, byte curves, CSV/JSON emission for the
+//! table/figure regeneration harness.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub name: String,
+    pub loss: Vec<f32>,
+    /// Cumulative communicated bytes after each step.
+    pub cum_bytes: Vec<u64>,
+    /// Wall-clock seconds per optimizer step (measured, this host).
+    pub step_secs: Vec<f64>,
+    /// Simulated communication seconds (α–β model).
+    pub sim_comm_secs: f64,
+}
+
+impl RunMetrics {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            ..Default::default()
+        }
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        // Mean of the last 5% of steps — smooths stochastic batch noise.
+        if self.loss.is_empty() {
+            return f32::NAN;
+        }
+        let k = (self.loss.len() / 20).max(1);
+        let tail = &self.loss[self.loss.len() - k..];
+        tail.iter().sum::<f32>() / k as f32
+    }
+
+    pub fn mean_step_secs(&self) -> f64 {
+        if self.step_secs.is_empty() {
+            return 0.0;
+        }
+        self.step_secs.iter().sum::<f64>() / self.step_secs.len() as f64
+    }
+
+    /// Write a CSV with step, loss, cumulative bytes.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,cum_bytes")?;
+        for i in 0..self.loss.len() {
+            writeln!(
+                f,
+                "{},{},{}",
+                i,
+                self.loss[i],
+                self.cum_bytes.get(i).copied().unwrap_or(0)
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("final_loss", Json::num(self.final_loss() as f64)),
+            (
+                "loss",
+                Json::Arr(self.loss.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+            (
+                "cum_bytes",
+                Json::Arr(self.cum_bytes.iter().map(|&b| Json::num(b as f64)).collect()),
+            ),
+            ("mean_step_secs", Json::num(self.mean_step_secs())),
+            ("sim_comm_secs", Json::num(self.sim_comm_secs)),
+        ])
+    }
+}
+
+/// Ensure `results/` exists and return the path for `name`.
+pub fn results_path(name: &str) -> std::path::PathBuf {
+    let dir = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir.join(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_loss_is_tail_mean() {
+        let mut m = RunMetrics::new("x");
+        m.loss = (0..100).map(|i| 100.0 - i as f32).collect();
+        // last 5 values: 5..1 → mean 3
+        assert!((m.final_loss() - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = RunMetrics::new("y");
+        m.loss = vec![3.0, 2.0];
+        m.cum_bytes = vec![10, 20];
+        let p = std::env::temp_dir().join("tsr_metrics_test.csv");
+        m.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("step,loss,cum_bytes"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn json_contains_fields() {
+        let mut m = RunMetrics::new("z");
+        m.loss = vec![1.0];
+        let j = m.to_json();
+        assert_eq!(j.get("name").as_str(), Some("z"));
+        assert!(j.get("final_loss").as_f64().is_some());
+    }
+}

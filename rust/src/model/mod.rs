@@ -1,0 +1,7 @@
+//! Model shape registry and memory accounting.
+
+pub mod memory;
+pub mod registry;
+
+pub use memory::{memory_bytes, model_footprint, state_elements, Method};
+pub use registry::{BlockSpec, ModelSpec};

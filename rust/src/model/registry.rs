@@ -1,0 +1,269 @@
+//! Model shape registry.
+//!
+//! The byte/memory tables of the paper are counting identities over the
+//! shapes of matrix parameter blocks. This module encodes the LLaMA
+//! configurations of Table 5 (60M/130M/350M/1B), RoBERTa-base (GLUE
+//! fine-tuning, Table 4), and arbitrary proxy scales used for the real
+//! CPU training runs.
+
+use crate::comm::LayerClass;
+
+/// One matrix-shaped parameter block W^(ℓ) ∈ R^{rows×cols} (§3.1), or a
+/// vector block (biases / norms) that is always synchronized dense.
+#[derive(Clone, Debug)]
+pub struct BlockSpec {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub class: LayerClass,
+}
+
+impl BlockSpec {
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn mat(name: String, rows: usize, cols: usize, class: LayerClass) -> Self {
+        Self {
+            name,
+            rows,
+            cols,
+            class,
+        }
+    }
+
+    fn vec(name: String, n: usize) -> Self {
+        Self {
+            name,
+            rows: 1,
+            cols: n,
+            class: LayerClass::Vector,
+        }
+    }
+}
+
+/// Transformer configuration (LLaMA-style unless `roberta` is set).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub heads: usize,
+    pub layers: usize,
+    /// Training steps used in the paper for this scale (Table 5).
+    pub paper_steps: usize,
+    /// RoBERTa-style (GELU MLP, learned positions, tied QKV shapes).
+    pub roberta: bool,
+}
+
+impl ModelSpec {
+    // ---- Table 5 configurations ----
+
+    pub fn llama_60m() -> Self {
+        Self {
+            name: "llama-60m".into(),
+            vocab: 32000,
+            hidden: 512,
+            intermediate: 1376,
+            heads: 8,
+            layers: 8,
+            paper_steps: 20_000,
+            roberta: false,
+        }
+    }
+
+    pub fn llama_130m() -> Self {
+        Self {
+            name: "llama-130m".into(),
+            vocab: 32000,
+            hidden: 768,
+            intermediate: 2048,
+            heads: 12,
+            layers: 12,
+            paper_steps: 20_000,
+            roberta: false,
+        }
+    }
+
+    pub fn llama_350m() -> Self {
+        Self {
+            name: "llama-350m".into(),
+            vocab: 32000,
+            hidden: 1024,
+            intermediate: 2736,
+            heads: 16,
+            layers: 24,
+            paper_steps: 90_000,
+            roberta: false,
+        }
+    }
+
+    /// Table 5 lists hidden "52048" for 1B — an obvious typo for 2048
+    /// (32 heads × 64 head-dim; ~1.2B params with the listed inter/layers).
+    pub fn llama_1b() -> Self {
+        Self {
+            name: "llama-1b".into(),
+            vocab: 32000,
+            hidden: 2048,
+            intermediate: 5461,
+            heads: 32,
+            layers: 24,
+            paper_steps: 90_000,
+            roberta: false,
+        }
+    }
+
+    /// RoBERTa-base shapes for the GLUE fine-tuning byte accounting.
+    pub fn roberta_base() -> Self {
+        Self {
+            name: "roberta-base".into(),
+            vocab: 50265,
+            hidden: 768,
+            intermediate: 3072,
+            heads: 12,
+            layers: 12,
+            paper_steps: 0,
+            roberta: true,
+        }
+    }
+
+    /// CPU-feasible proxy scale for real end-to-end training runs.
+    pub fn proxy(vocab: usize, hidden: usize, intermediate: usize, heads: usize, layers: usize) -> Self {
+        Self {
+            name: format!("proxy-h{hidden}-l{layers}-v{vocab}"),
+            vocab,
+            hidden,
+            intermediate,
+            heads,
+            layers,
+            paper_steps: 0,
+            roberta: false,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "60m" | "llama-60m" => Some(Self::llama_60m()),
+            "130m" | "llama-130m" => Some(Self::llama_130m()),
+            "350m" | "llama-350m" => Some(Self::llama_350m()),
+            "1b" | "llama-1b" => Some(Self::llama_1b()),
+            "roberta" | "roberta-base" => Some(Self::roberta_base()),
+            _ => None,
+        }
+    }
+
+    /// All parameter blocks of the model, matrix blocks first.
+    ///
+    /// LLaMA block layout per layer: attention q/k/v/o (h×h), SwiGLU
+    /// gate/up (h×i) and down (i×h); RMSNorm vectors. Embedding and LM
+    /// head are vocab-dimension blocks (class `Embedding` — the paper's
+    /// §3.6 treats them with their own (r_emb, K_emb)).
+    pub fn blocks(&self) -> Vec<BlockSpec> {
+        use LayerClass::*;
+        let h = self.hidden;
+        let f = self.intermediate;
+        let mut out = Vec::new();
+        out.push(BlockSpec::mat("embed_tokens".into(), self.vocab, h, Embedding));
+        if self.roberta {
+            out.push(BlockSpec::mat("embed_positions".into(), 514, h, Linear));
+        }
+        for l in 0..self.layers {
+            for proj in ["q_proj", "k_proj", "v_proj", "o_proj"] {
+                out.push(BlockSpec::mat(format!("layers.{l}.attn.{proj}"), h, h, Linear));
+            }
+            if self.roberta {
+                // GELU MLP: fc1 (h×f), fc2 (f×h)
+                out.push(BlockSpec::mat(format!("layers.{l}.mlp.fc1"), h, f, Linear));
+                out.push(BlockSpec::mat(format!("layers.{l}.mlp.fc2"), f, h, Linear));
+            } else {
+                out.push(BlockSpec::mat(format!("layers.{l}.mlp.gate"), h, f, Linear));
+                out.push(BlockSpec::mat(format!("layers.{l}.mlp.up"), h, f, Linear));
+                out.push(BlockSpec::mat(format!("layers.{l}.mlp.down"), f, h, Linear));
+            }
+            out.push(BlockSpec::vec(format!("layers.{l}.attn_norm"), h));
+            out.push(BlockSpec::vec(format!("layers.{l}.mlp_norm"), h));
+        }
+        out.push(BlockSpec::vec("final_norm".into(), h));
+        // LLaMA configs use *tied* embeddings (embed_tokens doubles as the
+        // LM head): this is the only reading under which the paper's dense
+        // AdamW Bytes/Step column (0.17/0.44/1.34/5.09 G) reproduces
+        // exactly from the Table 5 shapes.
+        if self.roberta {
+            // Classification head for GLUE.
+            out.push(BlockSpec::mat("classifier.dense".into(), h, h, Linear));
+            out.push(BlockSpec::mat("classifier.out".into(), h, 2, Linear));
+        }
+        out
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.blocks().iter().map(|b| b.numel()).sum()
+    }
+
+    /// Matrix-block parameter count (the communication-relevant subset).
+    pub fn matrix_param_count(&self) -> usize {
+        self.blocks()
+            .iter()
+            .filter(|b| b.class != LayerClass::Vector)
+            .map(|b| b.numel())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_roughly_match_names() {
+        // Parameter totals land near the *synced* totals implied by the
+        // paper's dense Bytes/Step (tied embeddings): 0.17G/4 ≈ 43M, etc.
+        let n60 = ModelSpec::llama_60m().param_count() as f64;
+        assert!((38e6..50e6).contains(&n60), "60m -> {n60}");
+        let n130 = ModelSpec::llama_130m().param_count() as f64;
+        assert!((100e6..130e6).contains(&n130), "130m -> {n130}");
+        let n350 = ModelSpec::llama_350m().param_count() as f64;
+        assert!((300e6..400e6).contains(&n350), "350m -> {n350}");
+        let n1b = ModelSpec::llama_1b().param_count() as f64;
+        assert!((1.2e9..1.45e9).contains(&n1b), "1b -> {n1b}");
+    }
+
+    #[test]
+    fn block_classes() {
+        let spec = ModelSpec::llama_60m();
+        let blocks = spec.blocks();
+        let emb: Vec<_> = blocks.iter().filter(|b| b.class == LayerClass::Embedding).collect();
+        assert_eq!(emb.len(), 1); // tied embed_tokens (doubles as LM head)
+        assert!(blocks.iter().any(|b| b.class == LayerClass::Vector));
+        // 7 matrix blocks per layer for LLaMA.
+        let linear = blocks.iter().filter(|b| b.class == LayerClass::Linear).count();
+        assert_eq!(linear, 7 * spec.layers);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["60m", "130m", "350m", "1b", "roberta"] {
+            assert!(ModelSpec::by_name(n).is_some(), "{n}");
+        }
+        assert!(ModelSpec::by_name("9000t").is_none());
+    }
+
+    #[test]
+    fn dense_bytes_per_step_matches_table3() {
+        // Table 3: AdamW Bytes/Step — 60M: 0.17G, 130M: 0.44G, 350M: 1.34G,
+        // 1B: 5.09G (f32 objects). Our shape registry must reproduce these
+        // within a few percent (paper counts all-synced params).
+        for (spec, expect_g) in [
+            (ModelSpec::llama_60m(), 0.17),
+            (ModelSpec::llama_130m(), 0.44),
+            (ModelSpec::llama_350m(), 1.34),
+            (ModelSpec::llama_1b(), 5.09),
+        ] {
+            let bytes = spec.param_count() as f64 * 4.0;
+            let g = bytes / (1024.0 * 1024.0 * 1024.0);
+            let rel = (g - expect_g).abs() / expect_g;
+            assert!(rel < 0.12, "{}: {g:.3}G vs paper {expect_g}G", spec.name);
+        }
+    }
+}

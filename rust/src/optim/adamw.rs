@@ -1,0 +1,129 @@
+//! Dense AdamW under full gradient synchronization (paper §3.1) — the
+//! O(mn) baseline of Tables 1 & 3.
+
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use crate::comm::{collective, LayerClass};
+use crate::model::BlockSpec;
+
+pub struct DenseAdamW {
+    hyper: AdamHyper,
+    classes: Vec<LayerClass>,
+    state: Vec<DenseAdamState>,
+    t: u64,
+}
+
+impl DenseAdamW {
+    pub fn new(blocks: &[BlockSpec], hyper: AdamHyper) -> Self {
+        Self {
+            hyper,
+            classes: blocks.iter().map(|b| b.class).collect(),
+            state: blocks
+                .iter()
+                .map(|b| DenseAdamState::new(b.rows, b.cols))
+                .collect(),
+            t: 0,
+        }
+    }
+}
+
+impl DistOptimizer for DenseAdamW {
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        self.t += 1;
+        let nblocks = ctx.params.len();
+        for b in 0..nblocks {
+            // All-reduce the dense gradient: S_t = { Ḡ } (mn elements).
+            let mut per_worker: Vec<_> = ctx.grads.iter_mut().map(|g| g[b].clone()).collect();
+            collective::ring_allreduce_mean(&mut per_worker);
+            let gbar = &per_worker[0];
+            let bytes = gbar.numel() * crate::comm::BYTES_F32;
+            ctx.ledger.record_bytes(self.classes[b], bytes);
+            ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+
+            self.state[b].update(&mut ctx.params[b], gbar, &self.hyper, ctx.lr_mult, self.t);
+        }
+    }
+
+    fn state_elements(&self) -> usize {
+        self.state.iter().map(|s| s.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+    use crate::linalg::Matrix;
+    use crate::model::ModelSpec;
+    use crate::optim::alloc_worker_grads;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bytes_per_step_equals_param_count() {
+        let spec = ModelSpec::proxy(64, 16, 32, 2, 2);
+        let blocks = spec.blocks();
+        let mut params: Vec<Matrix> = blocks.iter().map(|b| Matrix::zeros(b.rows, b.cols)).collect();
+        let mut grads = alloc_worker_grads(&blocks, 3);
+        let mut rng = Xoshiro256::new(0);
+        for w in grads.iter_mut() {
+            for g in w.iter_mut() {
+                *g = Matrix::gaussian(g.rows, g.cols, 1.0, &mut rng);
+            }
+        }
+        let mut opt = DenseAdamW::new(&blocks, AdamHyper::default());
+        let mut ledger = CommLedger::new();
+        let topo = Topology::multi_node(1, 3);
+        let mut ctx = StepCtx {
+            params: &mut params,
+            grads: &mut grads,
+            ledger: &mut ledger,
+            topo: &topo,
+            lr_mult: 1.0,
+        };
+        opt.step(&mut ctx);
+        ledger.end_step();
+        assert_eq!(
+            ledger.bytes_per_step() as usize,
+            spec.param_count() * 4,
+            "dense sync = every parameter, every step"
+        );
+        assert_eq!(opt.state_elements(), 2 * spec.param_count());
+    }
+
+    #[test]
+    fn identical_grads_all_workers_equals_single_worker_adam() {
+        let blocks = ModelSpec::proxy(32, 8, 16, 2, 1).blocks();
+        let mut params: Vec<Matrix> =
+            blocks.iter().map(|b| Matrix::from_fn(b.rows, b.cols, |i, j| ((i + j) % 3) as f32)).collect();
+        let mut rng = Xoshiro256::new(1);
+        let shared: Vec<Matrix> = blocks
+            .iter()
+            .map(|b| Matrix::gaussian(b.rows, b.cols, 1.0, &mut rng))
+            .collect();
+        let mut grads: Vec<Vec<Matrix>> = (0..4).map(|_| shared.clone()).collect();
+        let mut opt = DenseAdamW::new(&blocks, AdamHyper::default());
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(4);
+        let mut reference = params.clone();
+        let mut ref_state: Vec<DenseAdamState> = blocks
+            .iter()
+            .map(|b| DenseAdamState::new(b.rows, b.cols))
+            .collect();
+        opt.step(&mut StepCtx {
+            params: &mut params,
+            grads: &mut grads,
+            ledger: &mut ledger,
+            topo: &topo,
+            lr_mult: 1.0,
+        });
+        for (b, st) in ref_state.iter_mut().enumerate() {
+            st.update(&mut reference[b], &shared[b], &AdamHyper::default(), 1.0, 1);
+        }
+        for (p, r) in params.iter().zip(&reference) {
+            assert!(p.dist(r) < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Learning-rate schedule: linear warmup (first 10% of steps) + cosine
+//! decay to 10% of the base LR — the paper's pre-training schedule (§C.1).
+
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub total_steps: usize,
+    pub warmup_steps: usize,
+    /// Final LR as a fraction of the base LR.
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    /// The paper's schedule for `total` steps.
+    pub fn paper(total: usize) -> Self {
+        Self {
+            total_steps: total.max(1),
+            warmup_steps: (total / 10).max(1),
+            min_ratio: 0.1,
+        }
+    }
+
+    pub fn constant() -> Self {
+        Self {
+            total_steps: 1,
+            warmup_steps: 0,
+            min_ratio: 1.0,
+        }
+    }
+
+    /// Multiplier at step `t` (0-indexed).
+    pub fn multiplier(&self, t: usize) -> f32 {
+        if self.warmup_steps > 0 && t < self.warmup_steps {
+            return (t + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps <= self.warmup_steps {
+            return 1.0;
+        }
+        let progress =
+            (t - self.warmup_steps) as f32 / (self.total_steps - self.warmup_steps) as f32;
+        let progress = progress.clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.min_ratio + (1.0 - self.min_ratio) * cos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_rises_then_cosine_decays() {
+        let s = LrSchedule::paper(1000);
+        assert!(s.multiplier(0) < s.multiplier(50));
+        assert!((s.multiplier(99) - 1.0).abs() < 0.02);
+        assert!(s.multiplier(500) < 1.0);
+        assert!((s.multiplier(999) - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn constant_is_one() {
+        let s = LrSchedule::constant();
+        for t in [0, 10, 1000] {
+            assert_eq!(s.multiplier(t), 1.0);
+        }
+    }
+
+    #[test]
+    fn multiplier_bounded() {
+        let s = LrSchedule::paper(77);
+        for t in 0..200 {
+            let m = s.multiplier(t);
+            assert!((0.0..=1.0).contains(&m), "t={t} m={m}");
+        }
+    }
+}

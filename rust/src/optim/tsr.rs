@@ -1,0 +1,545 @@
+//! TSR-Adam — Algorithm 1 of the paper.
+//!
+//! Per matrix block W ∈ R^{m×n}: orthonormal bases U (m×r), V (n×r);
+//! non-refresh steps synchronize only the core C̄ = AR(Uᵀ G_i V) ∈ R^{r×r}
+//! and run AdamW moments in core space; refresh steps (every K) rebuild
+//! (U, V) with a *distributed randomized SVD* that all-reduces only the
+//! sketches Q̄ (m×k) and B̄ (k×n), never the full gradient (§3.5).
+//! Embedding blocks use their own (r_emb, K_emb) (§3.6). Vector blocks
+//! (biases/norms) are synchronized and updated densely (§3.4).
+
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use crate::comm::{collective, LayerClass};
+use crate::linalg::{matmul, matmul_tn, matrix::Matrix, orth, svd_gram};
+use crate::linalg::matmul::{core_project, lift};
+use crate::model::BlockSpec;
+use crate::util::rng::Xoshiro256;
+
+/// How a refresh rebuilds the bases — Fig. 3(b) ablation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshKind {
+    /// Sketch-based distributed randomized SVD (the paper's method):
+    /// communicates Q̄ (m×k) + B̄ (k×n) only.
+    Randomized,
+    /// "Normal SVD" baseline: all-reduce the FULL dense gradient (mn) and
+    /// take its exact truncated SVD — the peak-byte hazard TSR removes.
+    ExactDense,
+}
+
+#[derive(Clone, Debug)]
+pub struct TsrConfig {
+    /// Rank for Linear blocks.
+    pub rank: usize,
+    /// Refresh interval K for Linear blocks.
+    pub refresh_every: usize,
+    /// Embedding-specific rank r_emb (§3.6).
+    pub rank_emb: usize,
+    /// Embedding-specific refresh interval K_emb.
+    pub refresh_emb: usize,
+    /// Oversampling p (k = r + p).
+    pub oversample: usize,
+    /// Power-iteration steps q (Algorithm 1 shows q = 1).
+    pub power_q: usize,
+    pub refresh_kind: RefreshKind,
+    /// Re-orthonormalize Q̄ after averaging (numerical safety; the paper
+    /// uses Q̄ directly — averaging nearly-aligned worker bases).
+    pub reorth_qbar: bool,
+    /// Shared RNG seed for the sketch Ω (identical across workers).
+    pub seed: u64,
+}
+
+impl Default for TsrConfig {
+    fn default() -> Self {
+        Self {
+            rank: 64,
+            refresh_every: 100,
+            rank_emb: 32,
+            refresh_emb: 100,
+            oversample: 8,
+            power_q: 1,
+            refresh_kind: RefreshKind::Randomized,
+            reorth_qbar: true,
+            seed: 0x7512_AD,
+        }
+    }
+}
+
+enum BlockState {
+    /// Dense AdamW for vector blocks.
+    Dense(DenseAdamState),
+    LowRank(TsrBlock),
+}
+
+struct TsrBlock {
+    rank: usize,
+    k: usize,
+    refresh_every: usize,
+    u: Matrix,
+    v: Matrix,
+    /// Core-space Adam moments (r×r).
+    m: Matrix,
+    vmom: Matrix,
+    refresh_count: u64,
+    initialized: bool,
+}
+
+pub struct TsrAdam {
+    hyper: AdamHyper,
+    cfg: TsrConfig,
+    classes: Vec<LayerClass>,
+    blocks: Vec<BlockState>,
+    t: u64,
+}
+
+impl TsrAdam {
+    pub fn new(blocks: &[BlockSpec], hyper: AdamHyper, cfg: TsrConfig) -> Self {
+        let states = blocks
+            .iter()
+            .map(|b| {
+                if b.class == LayerClass::Vector {
+                    BlockState::Dense(DenseAdamState::new(b.rows, b.cols))
+                } else {
+                    let (r, every) = match b.class {
+                        LayerClass::Embedding => (cfg.rank_emb, cfg.refresh_emb),
+                        _ => (cfg.rank, cfg.refresh_every),
+                    };
+                    let r = r.min(b.rows).min(b.cols);
+                    let k = (r + cfg.oversample).min(b.rows).min(b.cols);
+                    BlockState::LowRank(TsrBlock {
+                        rank: r,
+                        k,
+                        refresh_every: every.max(1),
+                        u: Matrix::zeros(b.rows, r),
+                        v: Matrix::zeros(b.cols, r),
+                        m: Matrix::zeros(r, r),
+                        vmom: Matrix::zeros(r, r),
+                        refresh_count: 0,
+                        initialized: false,
+                    })
+                }
+            })
+            .collect();
+        Self {
+            hyper,
+            cfg,
+            classes: blocks.iter().map(|b| b.class).collect(),
+            blocks: states,
+            t: 0,
+        }
+    }
+
+    /// Distributed randomized refresh (Algorithm 1, refresh branch).
+    ///
+    /// Communicates per worker: B̄ (k×n) and Q̄ (m×k). Everything else —
+    /// the sketch multiply, QR, and power iterations — is worker-local.
+    fn refresh_randomized(
+        blk: &mut TsrBlock,
+        class: LayerClass,
+        block_idx: usize,
+        seed: u64,
+        power_q: usize,
+        reorth: bool,
+        grads: &[&Matrix],
+        ctx_ledger: &mut crate::comm::CommLedger,
+        topo: &crate::comm::Topology,
+    ) {
+        let n = grads[0].cols;
+        blk.refresh_count += 1;
+        // Shared Ω from the common seed: every worker draws the same one.
+        let stream = (block_idx as u64) << 32 | blk.refresh_count;
+        let mut rng = Xoshiro256::for_stream(seed, stream);
+        let omega = Matrix::gaussian(n, blk.k, 1.0, &mut rng);
+
+        // Worker-local sketches + power iterations.
+        let mut qs: Vec<Matrix> = grads
+            .iter()
+            .map(|g| {
+                let mut q = orth(&matmul(g, &omega)); // m×k
+                for _ in 0..power_q {
+                    let q_row = orth(&matmul_tn(g, &q)); // n×k
+                    q = orth(&matmul(g, &q_row)); // m×k
+                }
+                q
+            })
+            .collect();
+        // Worker-local reduced matrices B_i = Q_iᵀ G_i (k×n).
+        let mut bs: Vec<Matrix> = qs
+            .iter()
+            .zip(grads.iter())
+            .map(|(q, g)| matmul_tn(q, g))
+            .collect();
+
+        // All-reduce the two sketches — the ONLY refresh communication.
+        collective::ring_allreduce_mean(&mut bs);
+        collective::ring_allreduce_mean(&mut qs);
+        let sketch_bytes = (bs[0].numel() + qs[0].numel()) * crate::comm::BYTES_F32;
+        ctx_ledger.record_bytes(class, sketch_bytes);
+        ctx_ledger.add_sim_time(topo.allreduce_time(sketch_bytes));
+        ctx_ledger.mark_refresh();
+
+        let mut qbar = qs.swap_remove(0);
+        if reorth {
+            qbar = orth(&qbar);
+        }
+        let bbar = &bs[0];
+
+        // Small SVD of B̄ (k×n) and base refresh:
+        //   U ← Q̄ Ũ[:, :r],  V ← Ṽ[:, :r].
+        let (ut, _sigma, vt) = svd_gram(bbar);
+        blk.u = matmul(&qbar, &ut.take_cols(blk.rank));
+        blk.v = vt.take_cols(blk.rank);
+        blk.initialized = true;
+    }
+
+    /// Fig. 3(b) baseline refresh: dense all-reduce + exact SVD.
+    fn refresh_exact_dense(
+        blk: &mut TsrBlock,
+        class: LayerClass,
+        grads: &[&Matrix],
+        ctx_ledger: &mut crate::comm::CommLedger,
+        topo: &crate::comm::Topology,
+    ) {
+        blk.refresh_count += 1;
+        let mut dense: Vec<Matrix> = grads.iter().map(|g| (*g).clone()).collect();
+        collective::ring_allreduce_mean(&mut dense);
+        let bytes = dense[0].numel() * crate::comm::BYTES_F32;
+        ctx_ledger.record_bytes(class, bytes);
+        ctx_ledger.add_sim_time(topo.allreduce_time(bytes));
+        ctx_ledger.mark_refresh();
+        let out = crate::linalg::svd_truncated(&dense[0], blk.rank);
+        blk.u = out.u;
+        blk.v = out.v;
+        blk.initialized = true;
+    }
+}
+
+impl DistOptimizer for TsrAdam {
+    fn name(&self) -> &'static str {
+        "tsr-adam"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        let t = self.t; // 0-indexed step for refresh schedule
+        self.t += 1;
+        let t1 = self.t; // 1-indexed for bias correction
+        let h = self.hyper;
+        let nblocks = ctx.params.len();
+
+        for b in 0..nblocks {
+            let class = self.classes[b];
+            match &mut self.blocks[b] {
+                BlockState::Dense(st) => {
+                    // §3.4: non-matrix parameters sync dense.
+                    let mut per_worker: Vec<_> =
+                        ctx.grads.iter().map(|g| g[b].clone()).collect();
+                    collective::ring_allreduce_mean(&mut per_worker);
+                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
+                    ctx.ledger.record_bytes(class, bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                }
+                BlockState::LowRank(blk) => {
+                    let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
+                    let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
+                    if needs_refresh {
+                        match self.cfg.refresh_kind {
+                            RefreshKind::Randomized => Self::refresh_randomized(
+                                blk,
+                                class,
+                                b,
+                                self.cfg.seed,
+                                self.cfg.power_q,
+                                self.cfg.reorth_qbar,
+                                &grads_b,
+                                ctx.ledger,
+                                ctx.topo,
+                            ),
+                            RefreshKind::ExactDense => Self::refresh_exact_dense(
+                                blk,
+                                class,
+                                &grads_b,
+                                ctx.ledger,
+                                ctx.topo,
+                            ),
+                        }
+                    }
+
+                    // Core synchronization: C_i = Uᵀ G_i V, C̄ = AR(C_i).
+                    let mut cores: Vec<Matrix> = grads_b
+                        .iter()
+                        .map(|g| core_project(&blk.u, g, &blk.v))
+                        .collect();
+                    collective::ring_allreduce_mean(&mut cores);
+                    let core_bytes = cores[0].numel() * crate::comm::BYTES_F32;
+                    ctx.ledger.record_bytes(class, core_bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(core_bytes));
+                    let cbar = &cores[0];
+
+                    // AdamW in core space (§3.4).
+                    let b1 = h.beta1;
+                    let b2 = h.beta2;
+                    let bc1 = 1.0 - b1.powi(t1 as i32);
+                    let bc2 = 1.0 - b2.powi(t1 as i32);
+                    let r = blk.rank;
+                    let mut d = Matrix::zeros(r, r);
+                    for i in 0..r * r {
+                        let c = cbar.data[i];
+                        blk.m.data[i] = b1 * blk.m.data[i] + (1.0 - b1) * c;
+                        blk.vmom.data[i] = b2 * blk.vmom.data[i] + (1.0 - b2) * c * c;
+                        let mhat = blk.m.data[i] / bc1;
+                        let vhat = blk.vmom.data[i] / bc2;
+                        d.data[i] = mhat / (vhat.sqrt() + h.eps);
+                    }
+
+                    // Lift ΔW = U D Vᵀ and apply W ← W − η(α·ΔW + λW).
+                    let dw = lift(&blk.u, &d, &blk.v);
+                    let lr = h.lr * ctx.lr_mult;
+                    let w = &mut ctx.params[b];
+                    for i in 0..w.data.len() {
+                        w.data[i] -= lr * (h.scale * dw.data[i] + h.weight_decay * w.data[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_elements(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => st.elements(),
+                // U + V + two core moments (Table 2 TSR row).
+                BlockState::LowRank(b) => {
+                    b.u.numel() + b.v.numel() + b.m.numel() + b.vmom.numel()
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+    use crate::model::ModelSpec;
+    use crate::optim::alloc_worker_grads;
+
+    fn run_steps(
+        cfg: TsrConfig,
+        workers: usize,
+        steps: usize,
+    ) -> (CommLedger, Vec<Matrix>, TsrAdam) {
+        let blocks = ModelSpec::proxy(48, 16, 24, 2, 2).blocks();
+        let mut params: Vec<Matrix> = blocks
+            .iter()
+            .map(|b| Matrix::from_fn(b.rows, b.cols, |i, j| ((i * 7 + j) % 5) as f32 * 0.1))
+            .collect();
+        let mut opt = TsrAdam::new(&blocks, AdamHyper::default(), cfg);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::multi_node(2, workers.div_ceil(2));
+        let mut rng = Xoshiro256::new(77);
+        for _ in 0..steps {
+            let mut grads = alloc_worker_grads(&blocks, workers);
+            for w in grads.iter_mut() {
+                for g in w.iter_mut() {
+                    *g = Matrix::gaussian(g.rows, g.cols, 1.0, &mut rng);
+                }
+            }
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        (ledger, params, opt)
+    }
+
+    #[test]
+    fn non_refresh_steps_sync_only_r2_per_matrix_block() {
+        let cfg = TsrConfig {
+            rank: 4,
+            rank_emb: 4,
+            refresh_every: 1000,
+            refresh_emb: 1000,
+            oversample: 2,
+            ..Default::default()
+        };
+        let (ledger, _, _) = run_steps(cfg, 2, 3);
+        // Step 0 refreshes (init); steps 1, 2 must be core-only.
+        let blocks = ModelSpec::proxy(48, 16, 24, 2, 2).blocks();
+        let matrix_blocks = blocks
+            .iter()
+            .filter(|b| b.class != LayerClass::Vector)
+            .count();
+        let vector_elems: usize = blocks
+            .iter()
+            .filter(|b| b.class == LayerClass::Vector)
+            .map(|b| b.numel())
+            .sum();
+        let expect = (matrix_blocks * 16 + vector_elems) * 4;
+        assert_eq!(ledger.step(1).total, expect);
+        assert_eq!(ledger.step(2).total, expect);
+        assert!(ledger.step(0).total > expect, "refresh step adds sketches");
+        assert!(ledger.step(0).refresh);
+        assert!(!ledger.step(1).refresh);
+    }
+
+    #[test]
+    fn refresh_bytes_match_mk_plus_kn() {
+        // Single matrix block → refresh payload is exactly (mk + kn + r²)·4
+        // plus the dense vector syncs.
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 40,
+            cols: 28,
+            class: LayerClass::Linear,
+        }];
+        let cfg = TsrConfig {
+            rank: 6,
+            oversample: 2,
+            refresh_every: 10,
+            ..Default::default()
+        };
+        let mut params = vec![Matrix::zeros(40, 28)];
+        let mut opt = TsrAdam::new(&blocks, AdamHyper::default(), cfg);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(3);
+        let mut rng = Xoshiro256::new(5);
+        let mut grads: Vec<Vec<Matrix>> = (0..3)
+            .map(|_| vec![Matrix::gaussian(40, 28, 1.0, &mut rng)])
+            .collect();
+        opt.step(&mut StepCtx {
+            params: &mut params,
+            grads: &mut grads,
+            ledger: &mut ledger,
+            topo: &topo,
+            lr_mult: 1.0,
+        });
+        ledger.end_step();
+        let k = 8;
+        let expect = ((40 * k) + (k * 28) + 6 * 6) * 4;
+        assert_eq!(ledger.step(0).total, expect);
+    }
+
+    #[test]
+    fn exact_dense_refresh_has_higher_peak() {
+        let base = TsrConfig {
+            rank: 6,
+            rank_emb: 6,
+            oversample: 2,
+            refresh_every: 4,
+            refresh_emb: 4,
+            ..Default::default()
+        };
+        let mut exact = base.clone();
+        exact.refresh_kind = RefreshKind::ExactDense;
+        let (l_rand, _, _) = run_steps(base, 2, 8);
+        let (l_exact, _, _) = run_steps(exact, 2, 8);
+        assert!(
+            l_exact.peak_bytes() > l_rand.peak_bytes(),
+            "dense-SVD refresh must dominate peak: {} vs {}",
+            l_exact.peak_bytes(),
+            l_rand.peak_bytes()
+        );
+    }
+
+    #[test]
+    fn bases_stay_orthonormal_across_refreshes() {
+        let cfg = TsrConfig {
+            rank: 5,
+            rank_emb: 5,
+            refresh_every: 2,
+            refresh_emb: 2,
+            oversample: 3,
+            ..Default::default()
+        };
+        let (_, _, opt) = run_steps(cfg, 3, 7);
+        for st in &opt.blocks {
+            if let BlockState::LowRank(b) = st {
+                assert!(
+                    crate::linalg::ortho_defect(&b.u) < 1e-2,
+                    "U defect {}",
+                    crate::linalg::ortho_defect(&b.u)
+                );
+                assert!(crate::linalg::ortho_defect(&b.v) < 1e-2);
+            }
+        }
+    }
+
+    #[test]
+    fn state_elements_match_table2() {
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 100,
+            cols: 60,
+            class: LayerClass::Linear,
+        }];
+        let cfg = TsrConfig {
+            rank: 8,
+            ..Default::default()
+        };
+        let opt = TsrAdam::new(&blocks, AdamHyper::default(), cfg);
+        assert_eq!(opt.state_elements(), 100 * 8 + 60 * 8 + 2 * 64);
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        // f(W) = ½‖W − W*‖² — TSR-Adam should reduce it substantially.
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 24,
+            cols: 18,
+            class: LayerClass::Linear,
+        }];
+        let mut rng = Xoshiro256::new(9);
+        let target = Matrix::gaussian(24, 18, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(24, 18)];
+        let cfg = TsrConfig {
+            rank: 8,
+            oversample: 4,
+            refresh_every: 5,
+            ..Default::default()
+        };
+        let mut opt = TsrAdam::new(
+            &blocks,
+            AdamHyper {
+                lr: 0.05,
+                ..Default::default()
+            },
+            cfg,
+        );
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let loss0 = params[0].dist(&target);
+        for _ in 0..200 {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    let mut g = params[0].clone();
+                    g.axpy(-1.0, &target);
+                    // worker noise
+                    let noise = Matrix::gaussian(24, 18, 0.05, &mut rng);
+                    g.add_assign(&noise);
+                    vec![g]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        let loss1 = params[0].dist(&target);
+        assert!(loss1 < 0.5 * loss0, "loss {loss0} -> {loss1}");
+    }
+
+    use crate::comm::LayerClass;
+    use crate::linalg::Matrix;
+    use crate::model::BlockSpec;
+    use crate::util::rng::Xoshiro256;
+}

@@ -1,0 +1,305 @@
+//! TSR-SGD — Algorithm 2 (momentum, no weight decay).
+//!
+//! The variant analyzed by Theorem 1: the update is
+//! `w_{t+1} = w_t − η · U m V ᵀ` with core momentum
+//! `m ← β m + (1−β) C̄`. Shares the randomized two-sided refresh with
+//! TSR-Adam. Used by the theory-validation experiment (`tsr theory`),
+//! which empirically checks the T^{−1/3} stationarity decay.
+
+use super::tsr::TsrConfig;
+use super::{DistOptimizer, StepCtx};
+use crate::comm::{collective, LayerClass};
+use crate::linalg::matmul::{core_project, lift};
+use crate::linalg::{matmul, matmul_tn, orth, svd_gram, Matrix};
+use crate::model::BlockSpec;
+use crate::util::rng::Xoshiro256;
+
+struct SgdBlock {
+    rank: usize,
+    k: usize,
+    refresh_every: usize,
+    u: Matrix,
+    v: Matrix,
+    /// Core momentum (r×r).
+    m: Matrix,
+    refresh_count: u64,
+    initialized: bool,
+}
+
+enum BlockState {
+    /// Dense momentum SGD for vector blocks.
+    Dense { m: Matrix },
+    LowRank(SgdBlock),
+}
+
+pub struct TsrSgd {
+    pub lr: f32,
+    pub beta: f32,
+    cfg: TsrConfig,
+    classes: Vec<LayerClass>,
+    blocks: Vec<BlockState>,
+    t: u64,
+    /// ‖U m Vᵀ (new bases) − U m Vᵀ (old bases)‖² at the last refresh —
+    /// the R_t term of Theorem 1, exposed for the theory experiment.
+    pub last_refresh_mismatch: f32,
+}
+
+impl TsrSgd {
+    pub fn new(blocks: &[BlockSpec], lr: f32, beta: f32, cfg: TsrConfig) -> Self {
+        let states = blocks
+            .iter()
+            .map(|b| {
+                if b.class == LayerClass::Vector {
+                    BlockState::Dense {
+                        m: Matrix::zeros(b.rows, b.cols),
+                    }
+                } else {
+                    let (r, every) = match b.class {
+                        LayerClass::Embedding => (cfg.rank_emb, cfg.refresh_emb),
+                        _ => (cfg.rank, cfg.refresh_every),
+                    };
+                    let r = r.min(b.rows).min(b.cols);
+                    let k = (r + cfg.oversample).min(b.rows).min(b.cols);
+                    BlockState::LowRank(SgdBlock {
+                        rank: r,
+                        k,
+                        refresh_every: every.max(1),
+                        u: Matrix::zeros(b.rows, r),
+                        v: Matrix::zeros(b.cols, r),
+                        m: Matrix::zeros(r, r),
+                        refresh_count: 0,
+                        initialized: false,
+                    })
+                }
+            })
+            .collect();
+        Self {
+            lr,
+            beta,
+            cfg,
+            classes: blocks.iter().map(|b| b.class).collect(),
+            blocks: states,
+            t: 0,
+            last_refresh_mismatch: 0.0,
+        }
+    }
+}
+
+impl DistOptimizer for TsrSgd {
+    fn name(&self) -> &'static str {
+        "tsr-sgd"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        let t = self.t;
+        self.t += 1;
+        let lr = self.lr * ctx.lr_mult;
+        let beta = self.beta;
+
+        for b in 0..ctx.params.len() {
+            let class = self.classes[b];
+            match &mut self.blocks[b] {
+                BlockState::Dense { m } => {
+                    let mut per_worker: Vec<_> =
+                        ctx.grads.iter().map(|g| g[b].clone()).collect();
+                    collective::ring_allreduce_mean(&mut per_worker);
+                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
+                    ctx.ledger.record_bytes(class, bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    let g = &per_worker[0];
+                    for i in 0..m.data.len() {
+                        m.data[i] = beta * m.data[i] + (1.0 - beta) * g.data[i];
+                        ctx.params[b].data[i] -= lr * m.data[i];
+                    }
+                }
+                BlockState::LowRank(blk) => {
+                    let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
+                    let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
+                    if needs_refresh {
+                        // Record the lifted momentum before the bases move
+                        // (for the R_t term of Theorem 1).
+                        let lifted_old = if blk.initialized {
+                            Some(lift(&blk.u, &blk.m, &blk.v))
+                        } else {
+                            None
+                        };
+
+                        blk.refresh_count += 1;
+                        let stream = (b as u64) << 32 | blk.refresh_count;
+                        let mut rng = Xoshiro256::for_stream(self.cfg.seed, stream);
+                        let n = grads_b[0].cols;
+                        let omega = Matrix::gaussian(n, blk.k, 1.0, &mut rng);
+                        let mut qs: Vec<Matrix> = grads_b
+                            .iter()
+                            .map(|g| {
+                                let mut q = orth(&matmul(g, &omega));
+                                for _ in 0..self.cfg.power_q {
+                                    let q_row = orth(&matmul_tn(g, &q));
+                                    q = orth(&matmul(g, &q_row));
+                                }
+                                q
+                            })
+                            .collect();
+                        let mut bs: Vec<Matrix> = qs
+                            .iter()
+                            .zip(grads_b.iter())
+                            .map(|(q, g)| matmul_tn(q, g))
+                            .collect();
+                        collective::ring_allreduce_mean(&mut bs);
+                        collective::ring_allreduce_mean(&mut qs);
+                        let bytes =
+                            (bs[0].numel() + qs[0].numel()) * crate::comm::BYTES_F32;
+                        ctx.ledger.record_bytes(class, bytes);
+                        ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                        ctx.ledger.mark_refresh();
+                        let mut qbar = qs.swap_remove(0);
+                        if self.cfg.reorth_qbar {
+                            qbar = orth(&qbar);
+                        }
+                        let (ut, _s, vt) = svd_gram(&bs[0]);
+                        let u_new = matmul(&qbar, &ut.take_cols(blk.rank));
+                        let v_new = vt.take_cols(blk.rank);
+
+                        // Re-express the momentum in the new bases via the
+                        // refresh-alignment projection (Theorem 1's
+                        // assumption): m' = U'ᵀ (U m Vᵀ) V'.
+                        if let Some(lifted) = lifted_old {
+                            blk.m = core_project(&u_new, &lifted, &v_new);
+                            let lifted_new = lift(&u_new, &blk.m, &v_new);
+                            self.last_refresh_mismatch = lifted_new.dist(&lifted).powi(2);
+                        }
+                        blk.u = u_new;
+                        blk.v = v_new;
+                        blk.initialized = true;
+                    }
+
+                    let mut cores: Vec<Matrix> = grads_b
+                        .iter()
+                        .map(|g| core_project(&blk.u, g, &blk.v))
+                        .collect();
+                    collective::ring_allreduce_mean(&mut cores);
+                    let bytes = cores[0].numel() * crate::comm::BYTES_F32;
+                    ctx.ledger.record_bytes(class, bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    let cbar = &cores[0];
+
+                    for i in 0..blk.m.data.len() {
+                        blk.m.data[i] = beta * blk.m.data[i] + (1.0 - beta) * cbar.data[i];
+                    }
+                    let dw = lift(&blk.u, &blk.m, &blk.v);
+                    let w = &mut ctx.params[b];
+                    for i in 0..w.data.len() {
+                        w.data[i] -= lr * dw.data[i];
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_elements(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense { m } => m.numel(),
+                BlockState::LowRank(b) => b.u.numel() + b.v.numel() + b.m.numel(),
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+
+    #[test]
+    fn converges_on_strongly_convex_quadratic() {
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 20,
+            cols: 16,
+            class: LayerClass::Linear,
+        }];
+        let mut rng = Xoshiro256::new(21);
+        let target = Matrix::gaussian(20, 16, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(20, 16)];
+        let cfg = TsrConfig {
+            rank: 8,
+            oversample: 4,
+            refresh_every: 10,
+            refresh_kind: crate::optim::RefreshKind::Randomized,
+            ..Default::default()
+        };
+        let mut opt = TsrSgd::new(&blocks, 0.3, 0.9, cfg);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let l0 = params[0].dist(&target);
+        for _ in 0..120 {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    let mut g = params[0].clone();
+                    g.axpy(-1.0, &target);
+                    vec![g]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        let l1 = params[0].dist(&target);
+        assert!(l1 < 0.25 * l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn refresh_mismatch_is_finite_and_small_for_stable_gradients() {
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 24,
+            cols: 24,
+            class: LayerClass::Linear,
+        }];
+        let mut rng = Xoshiro256::new(22);
+        // Fixed low-rank gradient → subspace is stable → R_t ≈ 0 after
+        // the first refresh re-expression.
+        let a = Matrix::gaussian(24, 4, 1.0, &mut rng);
+        let bmat = Matrix::gaussian(4, 24, 1.0, &mut rng);
+        let gfix = matmul(&a, &bmat);
+        let mut params = vec![Matrix::zeros(24, 24)];
+        let cfg = TsrConfig {
+            rank: 6,
+            oversample: 4,
+            refresh_every: 3,
+            ..Default::default()
+        };
+        let mut opt = TsrSgd::new(&blocks, 0.01, 0.9, cfg);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(1);
+        for _ in 0..10 {
+            let mut grads = vec![vec![gfix.clone()]];
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        assert!(opt.last_refresh_mismatch.is_finite());
+        assert!(
+            opt.last_refresh_mismatch < 1e-3,
+            "stable subspace should give tiny R_t, got {}",
+            opt.last_refresh_mismatch
+        );
+    }
+
+    use crate::comm::LayerClass;
+    use crate::linalg::Matrix;
+    use crate::model::BlockSpec;
+    use crate::util::rng::Xoshiro256;
+}

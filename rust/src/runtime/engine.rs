@@ -1,0 +1,130 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust step loop. Python never runs here — `make artifacts` is the only
+//! place JAX executes.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that the image's xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use super::manifest::Manifest;
+use crate::linalg::Matrix;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self, String> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| e.to_string())?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &std::path::Path) -> Result<Executable, String> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {}: {e}", path.display()))?;
+        Ok(Executable { exe })
+    }
+
+    /// Load a train-step model described by a manifest.
+    pub fn load_model(&self, manifest: Manifest) -> Result<TrainStepModel, String> {
+        let exe = self.load_hlo(&manifest.hlo)?;
+        Ok(TrainStepModel { exe, manifest })
+    }
+}
+
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; outputs are flattened from the
+    /// (return_tuple=True) single tuple result.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, String> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| e.to_string())?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| e.to_string())?;
+        lit.to_tuple().map_err(|e| e.to_string())
+    }
+}
+
+/// The lowered L2 train step: (params..., tokens) → (loss, grads...).
+pub struct TrainStepModel {
+    exe: Executable,
+    pub manifest: Manifest,
+}
+
+impl TrainStepModel {
+    /// Run one worker's forward+backward. `tokens` is the flat
+    /// `[batch, seq+1]` block from the batcher.
+    pub fn step(&self, params: &[Matrix], tokens: &[u32]) -> Result<(f32, Vec<Matrix>), String> {
+        let m = &self.manifest;
+        assert_eq!(params.len(), m.params.len(), "param arity mismatch");
+        assert_eq!(tokens.len(), m.batch * (m.seq + 1), "token block size");
+
+        let mut inputs = Vec::with_capacity(params.len() + 1);
+        for (mat, info) in params.iter().zip(&m.params) {
+            inputs.push(matrix_to_literal(mat, &info.shape)?);
+        }
+        let tok_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_lit = xla::Literal::vec1(&tok_i32)
+            .reshape(&[m.batch as i64, (m.seq + 1) as i64])
+            .map_err(|e| e.to_string())?;
+        inputs.push(tok_lit);
+
+        let outs = self.exe.run(&inputs)?;
+        if outs.len() != 1 + params.len() {
+            return Err(format!(
+                "expected 1+{} outputs, got {}",
+                params.len(),
+                outs.len()
+            ));
+        }
+        let loss = outs[0]
+            .to_vec::<f32>()
+            .map_err(|e| e.to_string())?
+            .first()
+            .copied()
+            .ok_or("empty loss literal")?;
+        let mut grads = Vec::with_capacity(params.len());
+        for (lit, info) in outs[1..].iter().zip(&m.params) {
+            grads.push(literal_to_matrix(lit, &info.shape)?);
+        }
+        Ok((loss, grads))
+    }
+}
+
+fn matrix_to_literal(mat: &Matrix, shape: &[usize]) -> Result<xla::Literal, String> {
+    let lit = xla::Literal::vec1(&mat.data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let expect: usize = shape.iter().product();
+    if expect != mat.numel() {
+        return Err(format!("shape {shape:?} vs matrix {}x{}", mat.rows, mat.cols));
+    }
+    lit.reshape(&dims).map_err(|e| e.to_string())
+}
+
+fn literal_to_matrix(lit: &xla::Literal, shape: &[usize]) -> Result<Matrix, String> {
+    let data = lit.to_vec::<f32>().map_err(|e| e.to_string())?;
+    let (rows, cols) = match shape.len() {
+        1 => (1, shape[0]),
+        2 => (shape[0], shape[1]),
+        d => return Err(format!("unsupported rank {d}")),
+    };
+    if data.len() != rows * cols {
+        return Err(format!("literal size {} vs {rows}x{cols}", data.len()));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}

@@ -1,0 +1,138 @@
+//! Artifact manifest — the contract between `python/compile/aot.py`
+//! (which lowers the JAX model and writes `artifacts/manifest.json`) and
+//! the Rust runtime (which loads the HLO and marshals parameters).
+
+use crate::comm::LayerClass;
+use crate::model::BlockSpec;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    /// Original tensor shape as lowered ([n] for vectors, [m, n] for mats).
+    pub shape: Vec<usize>,
+    pub class: LayerClass,
+}
+
+impl ParamInfo {
+    /// As a 2-D block (vectors become 1×n).
+    pub fn as_block(&self) -> BlockSpec {
+        let (rows, cols) = match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            d => panic!("unsupported param rank {d} for {}", self.name),
+        };
+        BlockSpec {
+            name: self.name.clone(),
+            rows,
+            cols,
+            class: self.class,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub hlo: PathBuf,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub params: Vec<ParamInfo>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let dir = path.parent().unwrap_or(Path::new("."));
+        Self::from_json(&json, dir)
+    }
+
+    pub fn from_json(json: &Json, dir: &Path) -> Result<Self, String> {
+        let params = json
+            .get("params")
+            .as_arr()
+            .ok_or("manifest missing 'params'")?
+            .iter()
+            .map(|p| {
+                let name = p.get_str("name", "?").to_string();
+                let shape: Vec<usize> = p
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| format!("param {name} missing shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap_or(0))
+                    .collect();
+                let class = match p.get_str("class", "linear") {
+                    "embedding" => LayerClass::Embedding,
+                    "vector" => LayerClass::Vector,
+                    _ => LayerClass::Linear,
+                };
+                Ok(ParamInfo { name, shape, class })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Self {
+            name: json.get_str("name", "model").to_string(),
+            hlo: dir.join(json.get_str("hlo", "model.hlo.txt")),
+            vocab: json.get_usize("vocab", 0),
+            hidden: json.get_usize("hidden", 0),
+            layers: json.get_usize("layers", 0),
+            batch: json.get_usize("batch", 0),
+            seq: json.get_usize("seq", 0),
+            params,
+        })
+    }
+
+    pub fn blocks(&self) -> Vec<BlockSpec> {
+        self.params.iter().map(|p| p.as_block()).collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "name": "tiny", "hlo": "tiny.hlo.txt",
+        "vocab": 256, "hidden": 64, "layers": 2, "batch": 8, "seq": 32,
+        "params": [
+            {"name": "embed_tokens", "shape": [256, 64], "class": "embedding"},
+            {"name": "layers.0.attn.q_proj", "shape": [64, 64], "class": "linear"},
+            {"name": "final_norm", "shape": [64], "class": "vector"}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&j, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.hlo, Path::new("/tmp/artifacts/tiny.hlo.txt"));
+        assert_eq!(m.params.len(), 3);
+        let blocks = m.blocks();
+        assert_eq!(blocks[0].class, LayerClass::Embedding);
+        assert_eq!(blocks[2].rows, 1);
+        assert_eq!(blocks[2].cols, 64);
+        assert_eq!(m.param_count(), 256 * 64 + 64 * 64 + 64);
+    }
+
+    #[test]
+    fn missing_params_is_error() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(Manifest::from_json(&j, Path::new(".")).is_err());
+    }
+}

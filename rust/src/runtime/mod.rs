@@ -1,0 +1,8 @@
+//! PJRT runtime: HLO-text artifact loading and execution (the bridge to
+//! the L2 JAX model and L1 Pallas kernels compiled by `make artifacts`).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, Executable, TrainStepModel};
+pub use manifest::{Manifest, ParamInfo};

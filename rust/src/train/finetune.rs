@@ -1,0 +1,332 @@
+//! Synthetic sequence-classification fine-tuning (GLUE substitute,
+//! Table 4; see DESIGN.md §6).
+//!
+//! A real learnable task with real gradients, computed by manual
+//! backprop in Rust: inputs are token bags, the label depends on which
+//! "signal" tokens appear; the model is
+//!     h = mean_t E[x_t];  a = tanh(h·W1);  logits = a·W2
+//! so the trainable blocks exercise both the Embedding class (sparse,
+//! tall V×d gradients — §3.6) and Linear blocks. Metric parity between
+//! dense Adam and TSR on these tasks is the structural analogue of the
+//! paper's GLUE table; the Bytes/Step column is computed exactly on
+//! RoBERTa-base shapes by the table harness.
+
+use super::GradSource;
+use crate::comm::LayerClass;
+use crate::linalg::Matrix;
+use crate::model::BlockSpec;
+use crate::util::rng::Xoshiro256;
+
+pub struct ClassifyTask {
+    pub vocab: usize,
+    pub dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub seq: usize,
+    /// signal_tokens[c] — tokens whose presence votes for class c.
+    signal: Vec<Vec<u32>>,
+    blocks: Vec<BlockSpec>,
+    workers: usize,
+    batch: usize,
+    rng: Xoshiro256,
+    eval_set: Vec<(Vec<u32>, usize)>,
+}
+
+impl ClassifyTask {
+    pub fn new(
+        vocab: usize,
+        dim: usize,
+        hidden: usize,
+        classes: usize,
+        seq: usize,
+        workers: usize,
+        batch: usize,
+        seed: u64,
+    ) -> Self {
+        let rng = Xoshiro256::new(seed);
+        let per_class = 8.min(vocab / classes).max(1);
+        let signal = (0..classes)
+            .map(|c| {
+                (0..per_class)
+                    .map(|i| ((c * per_class + i) % vocab) as u32)
+                    .collect()
+            })
+            .collect();
+        let blocks = vec![
+            BlockSpec {
+                name: "embed".into(),
+                rows: vocab,
+                cols: dim,
+                class: LayerClass::Embedding,
+            },
+            BlockSpec {
+                name: "w1".into(),
+                rows: dim,
+                cols: hidden,
+                class: LayerClass::Linear,
+            },
+            BlockSpec {
+                name: "w2".into(),
+                rows: hidden,
+                cols: classes,
+                class: LayerClass::Linear,
+            },
+        ];
+        let mut task = Self {
+            vocab,
+            dim,
+            hidden,
+            classes,
+            seq,
+            signal,
+            blocks,
+            workers,
+            batch,
+            rng,
+            eval_set: Vec::new(),
+        };
+        task.eval_set = (0..256).map(|_| task.sample_example()).collect();
+        task
+    }
+
+    fn sample_example(&mut self) -> (Vec<u32>, usize) {
+        let label = self.rng.next_below(self.classes as u64) as usize;
+        let mut toks = Vec::with_capacity(self.seq);
+        for _ in 0..self.seq {
+            if self.rng.next_f64() < 0.35 {
+                // Signal token for the true class.
+                let s = &self.signal[label];
+                toks.push(s[self.rng.next_below(s.len() as u64) as usize]);
+            } else {
+                toks.push(self.rng.next_below(self.vocab as u64) as u32);
+            }
+        }
+        (toks, label)
+    }
+
+    /// Forward pass; returns (loss, probability vector, pooled h, act a).
+    fn forward(
+        &self,
+        params: &[Matrix],
+        toks: &[u32],
+        label: usize,
+    ) -> (f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let e = &params[0];
+        let w1 = &params[1];
+        let w2 = &params[2];
+        // Mean-pool embeddings.
+        let mut h = vec![0.0f32; self.dim];
+        for &t in toks {
+            let row = e.row(t as usize);
+            for (hd, &v) in h.iter_mut().zip(row) {
+                *hd += v;
+            }
+        }
+        let inv = 1.0 / toks.len() as f32;
+        for v in h.iter_mut() {
+            *v *= inv;
+        }
+        // a = tanh(h·W1)
+        let mut a = vec![0.0f32; self.hidden];
+        for (j, aj) in a.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (d, &hv) in h.iter().enumerate() {
+                s += hv * w1.at(d, j);
+            }
+            *aj = s.tanh();
+        }
+        // logits = a·W2, softmax CE.
+        let mut logits = vec![0.0f32; self.classes];
+        for (c, lc) in logits.iter_mut().enumerate() {
+            let mut s = 0.0f32;
+            for (j, &av) in a.iter().enumerate() {
+                s += av * w2.at(j, c);
+            }
+            *lc = s;
+        }
+        let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let exps: Vec<f32> = logits.iter().map(|&l| (l - maxl).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let probs: Vec<f32> = exps.iter().map(|&e| e / z).collect();
+        let loss = -probs[label].max(1e-12).ln();
+        (loss, probs, h, a)
+    }
+
+    /// Held-out accuracy with current params.
+    pub fn accuracy(&self, params: &[Matrix]) -> f32 {
+        let mut correct = 0usize;
+        for (toks, label) in &self.eval_set {
+            let (_, probs, _, _) = self.forward(params, toks, *label);
+            let pred = probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred == *label {
+                correct += 1;
+            }
+        }
+        correct as f32 / self.eval_set.len() as f32
+    }
+}
+
+impl GradSource for ClassifyTask {
+    fn blocks(&self) -> &[BlockSpec] {
+        &self.blocks
+    }
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn compute(&mut self, params: &[Matrix], _step: usize, grads: &mut [Vec<Matrix>]) -> f32 {
+        let mut total_loss = 0.0f32;
+        for w in 0..self.workers {
+            for g in grads[w].iter_mut() {
+                g.fill(0.0);
+            }
+            let inv_b = 1.0 / self.batch as f32;
+            for _ in 0..self.batch {
+                let (toks, label) = self.sample_example();
+                let (loss, probs, h, a) = self.forward(params, &toks, label);
+                total_loss += loss;
+                // dlogits = p − onehot(y)
+                let mut dlogits = probs;
+                dlogits[label] -= 1.0;
+                let w1 = &params[1];
+                let w2 = &params[2];
+                // dW2 = aᵀ dlogits
+                {
+                    let g2 = &mut grads[w][2];
+                    for j in 0..self.hidden {
+                        for c in 0..self.classes {
+                            *g2.at_mut(j, c) += inv_b * a[j] * dlogits[c];
+                        }
+                    }
+                }
+                // da = dlogits W2ᵀ ; dz = da ∘ (1−a²)
+                let mut dz = vec![0.0f32; self.hidden];
+                for j in 0..self.hidden {
+                    let mut s = 0.0f32;
+                    for c in 0..self.classes {
+                        s += dlogits[c] * w2.at(j, c);
+                    }
+                    dz[j] = s * (1.0 - a[j] * a[j]);
+                }
+                // dW1 = hᵀ dz
+                {
+                    let g1 = &mut grads[w][1];
+                    for d in 0..self.dim {
+                        for j in 0..self.hidden {
+                            *g1.at_mut(d, j) += inv_b * h[d] * dz[j];
+                        }
+                    }
+                }
+                // dh = dz W1ᵀ ; dE[tok] += dh / L
+                let mut dh = vec![0.0f32; self.dim];
+                for d in 0..self.dim {
+                    let mut s = 0.0f32;
+                    for j in 0..self.hidden {
+                        s += dz[j] * w1.at(d, j);
+                    }
+                    dh[d] = s;
+                }
+                let inv_l = 1.0 / toks.len() as f32;
+                let ge = &mut grads[w][0];
+                for &t in &toks {
+                    let row = ge.row_mut(t as usize);
+                    for (rv, &dv) in row.iter_mut().zip(&dh) {
+                        *rv += inv_b * inv_l * dv;
+                    }
+                }
+            }
+        }
+        total_loss / (self.workers * self.batch) as f32
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<Matrix> {
+        let mut rng = Xoshiro256::new(seed);
+        self.blocks
+            .iter()
+            .map(|b| {
+                let scale = 1.0 / (b.rows as f32).sqrt().max(1.0);
+                Matrix::gaussian(b.rows, b.cols, scale.max(0.05), &mut rng)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Topology;
+    use crate::optim::{AdamHyper, DenseAdamW, LrSchedule};
+    use crate::train::Trainer;
+
+    #[test]
+    fn dense_adam_learns_the_task() {
+        let mut task = ClassifyTask::new(128, 16, 24, 3, 12, 2, 16, 7);
+        let blocks = task.blocks().to_vec();
+        let mut params = task.init_params(1);
+        let acc0 = task.accuracy(&params);
+        let mut opt = DenseAdamW::new(
+            &blocks,
+            AdamHyper {
+                lr: 0.02,
+                ..Default::default()
+            },
+        );
+        let trainer = Trainer::new(Topology::single_node(2), LrSchedule::constant());
+        let (_m, _l) = trainer.run(&mut task, &mut opt, &mut params, 120);
+        let acc1 = task.accuracy(&params);
+        assert!(
+            acc1 > acc0 + 0.25 && acc1 > 0.6,
+            "accuracy {acc0} -> {acc1}"
+        );
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let task = ClassifyTask::new(32, 6, 8, 2, 5, 1, 4, 3);
+        let blocks = task.blocks().to_vec();
+        let params = task.init_params(2);
+        let mut grads = crate::optim::alloc_worker_grads(&blocks, 1);
+        // Use a fixed RNG state for both evaluations by re-seeding.
+        let mut t1 = ClassifyTask::new(32, 6, 8, 2, 5, 1, 64, 3);
+        t1.compute(&params, 0, &mut grads);
+        // Check dW2[0,0] by central differences on the SAME batch: rebuild
+        // the task to replay the identical sample stream.
+        let eps = 1e-3;
+        let mut p_plus = params.clone();
+        *p_plus[2].at_mut(0, 0) += eps;
+        let mut p_minus = params.clone();
+        *p_minus[2].at_mut(0, 0) -= eps;
+        let mut ta = ClassifyTask::new(32, 6, 8, 2, 5, 1, 64, 3);
+        let mut tb = ClassifyTask::new(32, 6, 8, 2, 5, 1, 64, 3);
+        let mut dump = crate::optim::alloc_worker_grads(&blocks, 1);
+        let lp = ta.compute(&p_plus, 0, &mut dump);
+        let lm = tb.compute(&p_minus, 0, &mut dump);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grads[0][2].at(0, 0);
+        assert!(
+            (fd - an).abs() < 0.05 * (an.abs().max(fd.abs()).max(0.05)),
+            "fd {fd} vs analytic {an}"
+        );
+    }
+
+    #[test]
+    fn embedding_gradient_is_sparse_in_rows() {
+        let mut task = ClassifyTask::new(64, 8, 8, 2, 4, 1, 2, 9);
+        let blocks = task.blocks().to_vec();
+        let params = task.init_params(4);
+        let mut grads = crate::optim::alloc_worker_grads(&blocks, 1);
+        task.compute(&params, 0, &mut grads);
+        let ge = &grads[0][0];
+        let touched = (0..64)
+            .filter(|&i| ge.row(i).iter().any(|&v| v != 0.0))
+            .count();
+        // 2 examples × 4 tokens → at most 8 distinct rows.
+        assert!(touched <= 8, "{touched} rows touched");
+    }
+}

@@ -1,0 +1,148 @@
+//! Micro-benchmark harness (no `criterion` in the offline universe).
+//!
+//! Used by the `rust/benches/*.rs` targets (declared with
+//! `harness = false`). Provides warmup, adaptive iteration counts,
+//! and robust statistics (median + MAD), printing criterion-style lines:
+//!
+//! ```text
+//! bench_name              time: [median 1.234 ms]  (n=52, mad 0.8%)
+//! ```
+
+use std::time::{Duration, Instant};
+
+pub struct Bencher {
+    /// Minimum total measurement time per benchmark.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    results: Vec<(String, f64)>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self {
+            measure_time: Duration::from_millis(
+                std::env::var("BENCH_MS")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(600),
+            ),
+            warmup_time: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which should perform one unit of work per call.
+    /// Returns the median time per call in seconds.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        // Warmup + estimate per-iteration cost.
+        let warm_start = Instant::now();
+        let mut iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || iters < 1 {
+            f();
+            iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / iters as f64;
+
+        // Aim for ~30 samples within the measurement budget; batch cheap
+        // functions so each sample is at least ~100 µs.
+        let batch = ((1e-4 / per_iter).ceil() as u64).max(1);
+        let target_samples = 30usize;
+        let mut samples = Vec::with_capacity(target_samples);
+        let meas_start = Instant::now();
+        while samples.len() < target_samples && meas_start.elapsed() < self.measure_time {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mad = {
+            let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+            dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            dev[dev.len() / 2]
+        };
+        println!(
+            "{:<44} time: [{:>12}]  (n={}, batch={}, mad {:.1}%)",
+            name,
+            fmt_time(median),
+            samples.len(),
+            batch,
+            100.0 * mad / median.max(1e-30),
+        );
+        self.results.push((name.to_string(), median));
+        median
+    }
+
+    /// Report a pre-measured scalar (e.g. simulated time or bytes) in the
+    /// same table format.
+    pub fn report(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{:<44} value: {:>14.4} {}", name, value, unit);
+        self.results.push((name.to_string(), value));
+    }
+
+    pub fn results(&self) -> &[(String, f64)] {
+        &self.results
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Human-readable byte count (GiB as "G" to match the paper's tables).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    if bytes >= 0.01 * G {
+        format!("{:.3}G", bytes / G)
+    } else if bytes >= M {
+        format!("{:.2}M", bytes / M)
+    } else if bytes >= K {
+        format!("{:.1}K", bytes / K)
+    } else {
+        format!("{bytes:.0}B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_positive_time() {
+        let mut b = Bencher::new();
+        b.measure_time = Duration::from_millis(30);
+        b.warmup_time = Duration::from_millis(5);
+        let t = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_time(2.0), "2.000 s");
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_bytes(1.5 * 1024.0 * 1024.0 * 1024.0).ends_with('G'));
+        assert!(fmt_bytes(2.0 * 1024.0 * 1024.0).ends_with('M'));
+    }
+}

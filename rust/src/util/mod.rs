@@ -1,0 +1,10 @@
+//! Self-contained utility substrates (the offline crate universe contains
+//! only `xla` + its deps, so RNG, JSON, threading, CLI parsing, benching
+//! and property testing are all implemented here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,94 @@
+//! Scoped thread pool.
+//!
+//! The coordinator simulates N data-parallel workers in-process and the
+//! linear-algebra kernels parallelize over row blocks. With no `rayon` in
+//! the offline crate universe we provide a small scoped parallel-for built
+//! on `std::thread::scope` with static chunking — adequate because our
+//! workloads are regular (equal-sized tiles / equal-sized workers).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use, clamped to available parallelism.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+/// Run `f(i)` for every `i in 0..n`, distributing indices over up to
+/// `threads` OS threads via an atomic work counter (dynamic scheduling —
+/// robust when iterations are uneven, e.g. mixed layer sizes).
+pub fn parallel_for(n: usize, threads: usize, f: impl Fn(usize) + Sync) {
+    if n == 0 {
+        return;
+    }
+    let t = threads.min(n).max(1);
+    if t == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..t {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<SendPtr<Option<T>>> =
+            out.iter_mut().map(|s| SendPtr(s as *mut Option<T>)).collect();
+        let slots = &slots;
+        parallel_for(n, threads, move |i| {
+            // SAFETY: each index i is visited exactly once, and slot i is
+            // only written by the thread that claimed i.
+            unsafe { slots[i].0.write(Some(f(i))) };
+        });
+    }
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn visits_every_index_once() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 8, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(257, 5, |i| i * i);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn handles_zero_and_one() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+        let v = parallel_map(1, 4, |i| i + 41);
+        assert_eq!(v, vec![41]);
+    }
+}

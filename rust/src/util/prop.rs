@@ -1,0 +1,68 @@
+//! Lightweight property-testing helper (no `proptest` in the offline
+//! universe).
+//!
+//! Runs a property over many randomly generated cases with a fixed base
+//! seed; on failure it reports the failing seed so the case can be
+//! reproduced with `check_with_seed`. Used for coordinator/linalg
+//! invariants (orthonormality, all-reduce identities, byte accounting).
+
+use crate::util::rng::Xoshiro256;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop(rng)` for `cases` random cases. `prop` should panic (e.g.
+/// via assert!) on violation; we re-panic with the offending seed.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Xoshiro256)) {
+    let base = 0xC0FF_EE00_D15E_A5Eu64;
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Reproduce a single failing case.
+pub fn check_with_seed(seed: u64, prop: impl Fn(&mut Xoshiro256)) {
+    let mut rng = Xoshiro256::new(seed);
+    prop(&mut rng);
+}
+
+/// Helpers for generating common shapes.
+pub fn dim(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 parity", 32, |rng| {
+            let x = rng.next_u64();
+            assert_eq!(x % 2, x & 1);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn reports_failing_seed() {
+        check("always fails", 4, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn dim_in_range() {
+        check("dim bounds", 64, |rng| {
+            let d = dim(rng, 3, 17);
+            assert!((3..=17).contains(&d));
+        });
+    }
+}

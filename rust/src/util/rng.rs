@@ -1,0 +1,205 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! TSR's randomized-SVD refresh (paper §3.5, Algorithm 1) requires every
+//! worker to draw the *same* Gaussian sketch matrix Ω from a shared seed.
+//! We therefore need a small, fully deterministic, splittable RNG that is
+//! identical across workers and across runs. No external crates are
+//! available in this build environment, so this module implements:
+//!
+//! * [`SplitMix64`] — seed expander (Steele et al., 2014).
+//! * [`Xoshiro256`] — xoshiro256** main generator (Blackman & Vigna).
+//! * Box–Muller standard normals for Gaussian sketches.
+
+/// SplitMix64: used to expand a single `u64` seed into generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** — fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// Cached second Box–Muller output.
+    gauss_spare: Option<f64>,
+}
+
+impl Xoshiro256 {
+    /// Construct from a seed; the state is expanded with SplitMix64 so any
+    /// seed (including 0) yields a well-mixed state.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive a stream-specific generator: identical (seed, stream) pairs
+    /// produce identical streams on every worker. Used for the shared
+    /// sketch Ω (stream = (layer id, refresh index)).
+    pub fn for_stream(seed: u64, stream: u64) -> Self {
+        // Mix the stream id through SplitMix so streams are decorrelated.
+        let mut sm = SplitMix64::new(seed ^ stream.wrapping_mul(0xA24B_AED4_963E_E407));
+        Self::new(sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) double.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        self.next_f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free for our (non-crypto) purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (caches the second deviate).
+    pub fn next_gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u1 = self.next_f64();
+            let u2 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * u2;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    #[inline]
+    pub fn next_gaussian_f32(&mut self) -> f32 {
+        self.next_gaussian() as f32
+    }
+
+    /// Fill a slice with i.i.d. N(0, 1) f32 values.
+    pub fn fill_gaussian(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_gaussian_f32();
+        }
+    }
+
+    /// Sample from a categorical distribution given cumulative weights
+    /// (ascending, last element = total mass). Returns the index.
+    pub fn next_categorical(&mut self, cumulative: &[f64]) -> usize {
+        let total = *cumulative.last().expect("empty categorical");
+        let x = self.next_f64() * total;
+        match cumulative.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(cumulative.len() - 1),
+            Err(i) => i.min(cumulative.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Xoshiro256::new(42);
+        let mut b = Xoshiro256::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Xoshiro256::for_stream(7, 0);
+        let mut b = Xoshiro256::for_stream(7, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2, "streams should be decorrelated");
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Xoshiro256::new(1);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256::new(3);
+        let n = 200_000;
+        let (mut sum, mut sumsq) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let g = r.next_gaussian();
+            sum += g;
+            sumsq += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut r = Xoshiro256::new(9);
+        for _ in 0..10_000 {
+            assert!(r.next_below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Xoshiro256::new(11);
+        let cum = vec![0.1, 0.1 + 0.7, 1.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..50_000 {
+            counts[r.next_categorical(&cum)] += 1;
+        }
+        assert!(counts[1] > counts[0] * 3);
+        assert!(counts[1] > counts[2] * 2);
+    }
+}
