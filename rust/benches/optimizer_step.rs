@@ -48,6 +48,8 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
                 ..Default::default()
             }),
         ),
+        ("signadam", MethodCfg::Sign { k_var: 1000 }),
+        ("topk", MethodCfg::TopK { keep_frac: 0.005 }),
     ] {
         let mut opt = cfg.build(&blocks, AdamHyper::default(), workers);
         let mut ledger = CommLedger::new();
@@ -75,10 +77,18 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
             });
             ledger.end_step();
         });
-        if label != "adamw" {
+        // Refresh-amortized reporting for every method with a periodic
+        // dense/sketch event; the interval comes from the config itself
+        // so it cannot drift from the method list above. Top-k has flat
+        // per-step traffic (no refresh to amortize), adamw is all-dense.
+        let k = match &cfg {
+            MethodCfg::OneSided { k, .. } => *k as f64,
+            MethodCfg::Tsr(c) => c.refresh_every as f64,
+            MethodCfg::Sign { k_var } => *k_var as f64,
+            _ => 0.0,
+        };
+        if k > 0.0 {
             b.report(&format!("{scale} {label} refresh step"), refresh_secs, "s");
-            // Amortized over the paper's intervals (GaLore K=200, TSR K=100).
-            let k = if label == "galore" { 200.0 } else { 100.0 };
             b.report(
                 &format!("{scale} {label} amortized (K={k})"),
                 (refresh_secs + (k - 1.0) * steady) / k,

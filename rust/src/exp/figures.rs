@@ -157,7 +157,9 @@ pub fn fig3(steps: usize, workers: usize) -> Json {
     j
 }
 
-/// Fig. 4: loss–communication Pareto frontier across scales.
+/// Fig. 4: loss–communication Pareto frontier across scales, including
+/// the compressed-communication baselines (sign + top-k) so the frontier
+/// spans all four compression families.
 pub fn fig4(steps: usize, workers: usize) -> Json {
     println!("\nFig 4 — Pareto frontier (final loss vs bytes/step, proxy scales)");
     let mut points = Vec::new();
@@ -172,6 +174,8 @@ pub fn fig4(steps: usize, workers: usize) -> Json {
             },
             MethodCfg::Tsr(proxy_tsr_cfg(scale)),
             MethodCfg::PowerSgd { rank: 8 },
+            MethodCfg::Sign { k_var: 100 },
+            MethodCfg::TopK { keep_frac: 0.01 },
         ];
         for m in &methods {
             let out = run_proxy(&spec, m, steps, workers, 0.02, 0.02, 0xFA4);

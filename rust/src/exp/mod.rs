@@ -7,5 +7,8 @@ pub mod runs;
 pub mod tables;
 pub mod theory;
 
-pub use analytic::{adamw_profile, onesided_profile, tsr_profile, CommProfile, TsrParams};
+pub use analytic::{
+    adamw_profile, onesided_profile, sign_profile, topk_profile, tsr_profile, CommProfile,
+    TsrParams,
+};
 pub use runs::{run_proxy, MethodCfg, RunOutput};

@@ -6,7 +6,8 @@ use crate::comm::{CommLedger, Topology};
 use crate::metrics::RunMetrics;
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::{
-    AdamHyper, DenseAdamW, DistOptimizer, LrSchedule, OneSidedAdam, PowerSgd, TsrAdam, TsrConfig,
+    AdamHyper, DenseAdamW, DistOptimizer, LrSchedule, OneSidedAdam, PowerSgd, SignAdam, TopKAdam,
+    TsrAdam, TsrConfig,
 };
 use crate::optim::onesided::OneSidedRefresh;
 use crate::train::gradsim::QuadraticSim;
@@ -25,6 +26,14 @@ pub enum MethodCfg {
     PowerSgd {
         rank: usize,
     },
+    /// 1-bit sign compression, dense variance refresh every `k_var`.
+    Sign {
+        k_var: usize,
+    },
+    /// Top-k sparse sync keeping `keep_frac` of each matrix block.
+    TopK {
+        keep_frac: f64,
+    },
 }
 
 impl MethodCfg {
@@ -34,6 +43,8 @@ impl MethodCfg {
             MethodCfg::OneSided { rank, .. } => format!("onesided-r{rank}"),
             MethodCfg::Tsr(c) => format!("tsr-r{}({})-k{}", c.rank, c.rank_emb, c.refresh_every),
             MethodCfg::PowerSgd { rank } => format!("powersgd-r{rank}"),
+            MethodCfg::Sign { k_var } => format!("signadam-k{k_var}"),
+            MethodCfg::TopK { keep_frac } => format!("topk-d{keep_frac:.3}"),
         }
     }
 
@@ -51,6 +62,12 @@ impl MethodCfg {
             MethodCfg::Tsr(cfg) => Box::new(TsrAdam::new(blocks, hyper, cfg.clone())),
             MethodCfg::PowerSgd { rank } => {
                 Box::new(PowerSgd::new(blocks, workers, hyper.lr, 0.9, *rank))
+            }
+            MethodCfg::Sign { k_var } => {
+                Box::new(SignAdam::new(blocks, hyper, *k_var, workers))
+            }
+            MethodCfg::TopK { keep_frac } => {
+                Box::new(TopKAdam::new(blocks, workers, hyper, *keep_frac))
             }
         }
     }
@@ -164,6 +181,8 @@ mod tests {
                 ..Default::default()
             }),
             MethodCfg::PowerSgd { rank: 8 },
+            MethodCfg::Sign { k_var: 20 },
+            MethodCfg::TopK { keep_frac: 0.05 },
         ];
         for m in &methods {
             let out = run_proxy(&spec, m, 40, 2, 0.01, 0.05, 7);

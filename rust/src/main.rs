@@ -74,7 +74,8 @@ fn main() {
                  \n  figures:  fig1 fig3 fig4 fig5 [--steps N --workers W]\
                  \n  theory:   theory [--horizons 50,100,...]\
                  \n  train:    train --manifest artifacts/tiny_manifest.json \
-                 [--method tsr|adamw|galore] [--steps N] [--workers W]\
+                 [--method tsr|adamw|galore|signadam|topk] [--steps N] [--workers W] \
+                 [--k-var N] [--keep-frac F]\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -155,6 +156,12 @@ fn run_train(args: &Args) {
             oversample: 8,
             ..Default::default()
         }),
+        "signadam" => MethodCfg::Sign {
+            k_var: args.get_usize("k-var", 100),
+        },
+        "topk" => MethodCfg::TopK {
+            keep_frac: args.get_f64("keep-frac", 0.01),
+        },
         other => panic!("unknown method {other}"),
     };
     let hyper = AdamHyper {

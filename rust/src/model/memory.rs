@@ -91,6 +91,20 @@ pub fn memory_bytes(spec: &ModelSpec, method: Method, r: usize, r_emb: usize) ->
     ((w + s) * 2) as u64
 }
 
+/// Memory for the error-feedback compression baselines (SignAdam /
+/// TopKAdam): dense Adam moments on every block plus one per-device
+/// residual matrix for each compressed (matrix) block.
+pub fn memory_bytes_error_feedback(spec: &ModelSpec) -> u64 {
+    let (w, s) = model_footprint(spec, Method::Adam, 0, 0);
+    let residual: usize = spec
+        .blocks()
+        .iter()
+        .filter(|b| b.class != LayerClass::Vector)
+        .map(|b| b.numel())
+        .sum();
+    ((w + s + residual) * 2) as u64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,6 +170,15 @@ mod tests {
         assert!((tsr - 0.17).abs() / 0.17 < 0.35, "tsr {tsr}");
         assert!(((tsr / adam) - 0.61).abs() < 0.15, "tsr/adam {}", tsr / adam);
         assert!(((galore / adam) - 0.75).abs() < 0.15, "galore/adam {}", galore / adam);
+    }
+
+    #[test]
+    fn error_feedback_memory_is_adam_plus_residual() {
+        let spec = ModelSpec::llama_60m();
+        let adam = memory_bytes(&spec, Method::Adam, 0, 0);
+        let ef = memory_bytes_error_feedback(&spec);
+        // The per-device residual adds one bf16 copy of the matrix blocks.
+        assert_eq!(ef, adam + spec.matrix_param_count() as u64 * 2);
     }
 
     #[test]

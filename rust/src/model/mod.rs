@@ -3,5 +3,7 @@
 pub mod memory;
 pub mod registry;
 
-pub use memory::{memory_bytes, model_footprint, state_elements, Method};
+pub use memory::{
+    memory_bytes, memory_bytes_error_feedback, model_footprint, state_elements, Method,
+};
 pub use registry::{BlockSpec, ModelSpec};

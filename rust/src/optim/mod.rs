@@ -7,7 +7,11 @@
 //! * [`tsr::TsrAdam`] — the paper's contribution (Algorithm 1),
 //! * [`tsr_sgd::TsrSgd`] — the analyzed momentum variant (Algorithm 2),
 //! * [`powersgd::PowerSgd`] — structured-compression baseline
-//!   (Vogels et al., related work §A).
+//!   (Vogels et al., related work §A),
+//! * [`sign_adam::SignAdam`] — 1-bit sign compression with error feedback
+//!   and 0/1-Adam-style variance freezing (Lu et al., 2022),
+//! * [`topk_adam::TopKAdam`] — per-block top-k sparse synchronization
+//!   with error feedback (SCAPE-style extreme sparsity).
 //!
 //! All optimizers operate on a replicated parameter set plus per-worker
 //! gradients, synchronize through the simulated collectives, and meter
@@ -17,6 +21,8 @@ pub mod adamw;
 pub mod onesided;
 pub mod powersgd;
 pub mod schedule;
+pub mod sign_adam;
+pub mod topk_adam;
 pub mod tsr;
 pub mod tsr_sgd;
 
@@ -28,6 +34,8 @@ pub use adamw::DenseAdamW;
 pub use onesided::OneSidedAdam;
 pub use powersgd::PowerSgd;
 pub use schedule::LrSchedule;
+pub use sign_adam::SignAdam;
+pub use topk_adam::TopKAdam;
 pub use tsr::{RefreshKind, TsrAdam, TsrConfig};
 pub use tsr_sgd::TsrSgd;
 

@@ -1,0 +1,323 @@
+//! SignAdam — 1-bit sign compression with error feedback and 0/1-Adam
+//! style variance freezing (Lu et al., 2022; PAPERS.md related work).
+//!
+//! The extreme-quantization baseline family the paper compares against:
+//! for each matrix block the per-step synchronized object is the sign
+//! bitmap of the error-compensated gradient (1 bit/element) plus one f32
+//! scale — Table 1 scaling O(mn/32). Adam's second moment cannot be
+//! maintained from sign-only traffic, so it is *frozen*: every `k_var`
+//! steps a full dense gradient all-reduce re-estimates v (the refresh
+//! peak of this family), and in between the update runs Adam with the
+//! frozen v and a momentum built from the compressed gradients. Vector
+//! blocks (biases/norms) stay dense, as in every method here (§3.4).
+//!
+//! Byte accounting is exact and mirrors `exp::analytic::sign_profile`:
+//! both sides meter [`sign_payload_bytes`] per matrix block per step and
+//! the full dense block every `k_var` steps.
+
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use crate::comm::{collective, LayerClass};
+use crate::linalg::Matrix;
+use crate::model::BlockSpec;
+
+/// Wire bytes of the compressed object for one m×n block: a 1-bit sign
+/// per element (packed) plus one f32 magnitude scale.
+pub fn sign_payload_bytes(numel: usize) -> usize {
+    numel.div_ceil(8) + crate::comm::BYTES_F32
+}
+
+enum BlockState {
+    Dense(DenseAdamState),
+    Sign(SignBlock),
+}
+
+struct SignBlock {
+    /// Momentum on the decompressed mean gradient.
+    m: Matrix,
+    /// Frozen second moment, re-estimated every `k_var` steps.
+    v: Matrix,
+    /// Per-worker error-feedback residuals.
+    errors: Vec<Matrix>,
+    /// Number of v updates so far (1-indexed bias correction for v).
+    tv: u64,
+}
+
+pub struct SignAdam {
+    hyper: AdamHyper,
+    /// Dense variance-refresh interval (the method's only dense traffic).
+    pub k_var: usize,
+    classes: Vec<LayerClass>,
+    blocks: Vec<BlockState>,
+    t: u64,
+}
+
+impl SignAdam {
+    pub fn new(blocks: &[BlockSpec], hyper: AdamHyper, k_var: usize, workers: usize) -> Self {
+        let states = blocks
+            .iter()
+            .map(|b| {
+                if b.class == LayerClass::Vector {
+                    BlockState::Dense(DenseAdamState::new(b.rows, b.cols))
+                } else {
+                    BlockState::Sign(SignBlock {
+                        m: Matrix::zeros(b.rows, b.cols),
+                        v: Matrix::zeros(b.rows, b.cols),
+                        errors: (0..workers).map(|_| Matrix::zeros(b.rows, b.cols)).collect(),
+                        tv: 0,
+                    })
+                }
+            })
+            .collect();
+        Self {
+            hyper,
+            k_var: k_var.max(1),
+            classes: blocks.iter().map(|b| b.class).collect(),
+            blocks: states,
+            t: 0,
+        }
+    }
+}
+
+impl DistOptimizer for SignAdam {
+    fn name(&self) -> &'static str {
+        "sign-adam"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        let t = self.t;
+        self.t += 1;
+        let t1 = self.t;
+        let h = self.hyper;
+        let workers = ctx.grads.len();
+
+        for b in 0..ctx.params.len() {
+            let class = self.classes[b];
+            match &mut self.blocks[b] {
+                BlockState::Dense(st) => {
+                    let mut per_worker: Vec<_> =
+                        ctx.grads.iter().map(|g| g[b].clone()).collect();
+                    collective::ring_allreduce_mean(&mut per_worker);
+                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
+                    ctx.ledger.record_bytes(class, bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                }
+                BlockState::Sign(blk) => {
+                    // Variance refresh: dense all-reduce every k_var steps
+                    // (step 0 included — v must exist before the first
+                    // compressed update). This is the family's peak-byte
+                    // event, analogous to GaLore's dense refresh.
+                    if t % self.k_var as u64 == 0 {
+                        let mut dense: Vec<Matrix> =
+                            ctx.grads.iter().map(|g| g[b].clone()).collect();
+                        collective::ring_allreduce_mean(&mut dense);
+                        let bytes = dense[0].numel() * crate::comm::BYTES_F32;
+                        ctx.ledger.record_bytes(class, bytes);
+                        ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                        ctx.ledger.mark_refresh();
+                        blk.tv += 1;
+                        let b2 = h.beta2;
+                        let gbar = &dense[0];
+                        for i in 0..blk.v.data.len() {
+                            let g = gbar.data[i];
+                            blk.v.data[i] = b2 * blk.v.data[i] + (1.0 - b2) * g * g;
+                        }
+                    }
+
+                    // Compressed path: per worker, sign-quantize the
+                    // error-compensated gradient x_i = g_i + e_i with a
+                    // per-block mean-|x| scale (1-bit SGD compressor),
+                    // aggregate the decompressed signs, update residuals.
+                    let mut ghat = Matrix::zeros(blk.m.rows, blk.m.cols);
+                    for (gw, e) in ctx.grads.iter().zip(blk.errors.iter_mut()) {
+                        let g = &gw[b];
+                        let numel = g.data.len();
+                        let mut scale = 0.0f32;
+                        for i in 0..numel {
+                            scale += (g.data[i] + e.data[i]).abs();
+                        }
+                        scale /= numel as f32;
+                        for i in 0..numel {
+                            let x = g.data[i] + e.data[i];
+                            let s = if x >= 0.0 { scale } else { -scale };
+                            ghat.data[i] += s;
+                            e.data[i] = x - s;
+                        }
+                    }
+                    ghat.scale(1.0 / workers as f32);
+                    let bytes = sign_payload_bytes(ghat.numel());
+                    ctx.ledger.record_bytes(class, bytes);
+                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+
+                    // Adam update: fresh momentum, frozen variance.
+                    let b1 = h.beta1;
+                    let bc1 = 1.0 - b1.powi(t1 as i32);
+                    let bc2 = 1.0 - h.beta2.powi(blk.tv as i32);
+                    let lr = h.lr * ctx.lr_mult;
+                    let w = &mut ctx.params[b];
+                    for i in 0..w.data.len() {
+                        blk.m.data[i] = b1 * blk.m.data[i] + (1.0 - b1) * ghat.data[i];
+                        let mhat = blk.m.data[i] / bc1;
+                        let vhat = blk.v.data[i] / bc2;
+                        let upd = mhat / (vhat.sqrt() + h.eps);
+                        w.data[i] -= lr * (h.scale * upd + h.weight_decay * w.data[i]);
+                    }
+                }
+            }
+        }
+    }
+
+    fn state_elements(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => st.elements(),
+                BlockState::Sign(blk) => {
+                    blk.m.numel()
+                        + blk.v.numel()
+                        + blk.errors.iter().map(|e| e.numel()).sum::<usize>()
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+    use crate::util::rng::Xoshiro256;
+
+    fn one_block(rows: usize, cols: usize) -> Vec<BlockSpec> {
+        vec![BlockSpec {
+            name: "w".into(),
+            rows,
+            cols,
+            class: LayerClass::Linear,
+        }]
+    }
+
+    #[test]
+    fn payload_is_bitmap_plus_scale() {
+        assert_eq!(sign_payload_bytes(64), 8 + 4);
+        assert_eq!(sign_payload_bytes(65), 9 + 4);
+        assert_eq!(sign_payload_bytes(1), 1 + 4);
+    }
+
+    #[test]
+    fn steady_steps_sync_one_bit_per_element() {
+        let blocks = one_block(40, 50);
+        let mut params = vec![Matrix::zeros(40, 50)];
+        let mut opt = SignAdam::new(&blocks, AdamHyper::default(), 100, 2);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..3 {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| vec![Matrix::gaussian(40, 50, 1.0, &mut rng)])
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        // Step 0: dense variance estimate + signs; steps 1-2 signs only.
+        let compressed = sign_payload_bytes(40 * 50);
+        assert_eq!(ledger.step(0).total, 40 * 50 * 4 + compressed);
+        assert!(ledger.step(0).refresh);
+        assert_eq!(ledger.step(1).total, compressed);
+        assert_eq!(ledger.step(2).total, compressed);
+    }
+
+    #[test]
+    fn error_feedback_recovers_constant_gradient() {
+        // With a constant gradient the EF residual keeps the quantization
+        // error bounded, so the accumulated update direction aligns with
+        // the true gradient.
+        let blocks = one_block(12, 10);
+        let mut rng = Xoshiro256::new(2);
+        let g = Matrix::gaussian(12, 10, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(12, 10)];
+        let mut opt = SignAdam::new(
+            &blocks,
+            AdamHyper {
+                lr: 0.01,
+                ..Default::default()
+            },
+            10,
+            1,
+        );
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(1);
+        for _ in 0..60 {
+            let mut grads = vec![vec![g.clone()]];
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        let cos = {
+            let num: f32 = params[0].data.iter().zip(&g.data).map(|(a, b)| a * b).sum();
+            -num / (params[0].frob_norm() * g.frob_norm())
+        };
+        // Adam whitening sends the update toward sign(g): for gaussian g
+        // the cosine between sign(g) and g concentrates near √(2/π)≈0.8.
+        assert!(cos > 0.6, "update direction cosine {cos}");
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        let blocks = one_block(24, 18);
+        let mut rng = Xoshiro256::new(9);
+        let target = Matrix::gaussian(24, 18, 1.0, &mut rng);
+        let mut params = vec![Matrix::zeros(24, 18)];
+        let mut opt = SignAdam::new(
+            &blocks,
+            AdamHyper {
+                lr: 0.02,
+                ..Default::default()
+            },
+            20,
+            2,
+        );
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let loss0 = params[0].dist(&target);
+        for _ in 0..200 {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    let mut g = params[0].clone();
+                    g.axpy(-1.0, &target);
+                    let noise = Matrix::gaussian(24, 18, 0.05, &mut rng);
+                    g.add_assign(&noise);
+                    vec![g]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        let loss1 = params[0].dist(&target);
+        assert!(loss1 < 0.5 * loss0, "loss {loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn state_counts_moments_and_residuals() {
+        let blocks = one_block(10, 8);
+        let opt = SignAdam::new(&blocks, AdamHyper::default(), 50, 3);
+        assert_eq!(opt.state_elements(), 80 + 80 + 3 * 80);
+    }
+}

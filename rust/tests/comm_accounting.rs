@@ -1,0 +1,112 @@
+//! Byte-accounting unit tests: `CommLedger` peak/average bookkeeping and
+//! the ring all-reduce volume against the closed-form 2(w−1)/w formula
+//! across multi-node topology shapes.
+
+use tsr::comm::{
+    collective, ring_volume_bytes, CommLedger, LayerClass, Topology, BYTES_F32,
+};
+use tsr::linalg::Matrix;
+use tsr::util::prop;
+use tsr::util::rng::Xoshiro256;
+
+/// Ledger average/peak/cumulative agree on a hand-built step sequence
+/// with refresh spikes.
+#[test]
+fn ledger_peak_and_average_with_refresh_spikes() {
+    let mut l = CommLedger::new();
+    // 4 steady steps of 1000 B + one refresh step of 5000 B.
+    for t in 0..5 {
+        l.record_bytes(LayerClass::Linear, 1000);
+        if t == 2 {
+            l.record_bytes(LayerClass::Embedding, 4000);
+            l.mark_refresh();
+        }
+        l.end_step();
+    }
+    assert_eq!(l.num_steps(), 5);
+    assert_eq!(l.peak_bytes(), 5000);
+    assert_eq!(l.bytes_per_step(), 9000.0 / 5.0);
+    assert_eq!(l.cumulative(), vec![1000, 2000, 7000, 8000, 9000]);
+    let (refresh_avg, steady_avg) = l.refresh_split();
+    assert_eq!(refresh_avg, 5000.0);
+    assert_eq!(steady_avg, 1000.0);
+    let (emb, lin, vec_b) = l.breakdown();
+    assert_eq!((emb, lin, vec_b), (4000, 5000, 0));
+}
+
+/// bytes_per_step is the exact integer-sum-over-steps divided by the
+/// step count — the contract the analytic profiles rely on for
+/// bit-exact comparison.
+#[test]
+fn ledger_average_is_exact_integer_division() {
+    prop::check("ledger mean == Σ/n", 32, |rng| {
+        let steps = prop::dim(rng, 1, 20);
+        let mut l = CommLedger::new();
+        let mut total = 0u64;
+        for _ in 0..steps {
+            let b = prop::dim(rng, 0, 100_000);
+            l.record_bytes(LayerClass::Linear, b);
+            total += b as u64;
+            l.end_step();
+        }
+        assert_eq!(l.bytes_per_step(), total as f64 / steps as f64);
+    });
+}
+
+/// `ring_volume_bytes` matches the closed-form 2(w−1)/w · numel · 4 on
+/// divisible payloads, for every worker count arising from the
+/// `Topology::multi_node` shapes the experiments use.
+#[test]
+fn ring_volume_matches_closed_form_across_topologies() {
+    let shapes = [(1usize, 1usize), (1, 4), (2, 1), (2, 2), (2, 4), (4, 4), (4, 8)];
+    for (nodes, gpus) in shapes {
+        let topo = Topology::multi_node(nodes, gpus);
+        let w = topo.workers();
+        assert_eq!(w, nodes * gpus);
+        // Divisible payload: the integer formula is exact.
+        let numel = w * 123;
+        let expect = if w > 1 {
+            // 2(w−1)/w · numel elements, 4 B each.
+            2 * (w - 1) * numel / w * BYTES_F32
+        } else {
+            0
+        };
+        assert_eq!(ring_volume_bytes(numel, w), expect, "{nodes}x{gpus}");
+        // And the actual collective reports exactly that volume.
+        let mut rng = Xoshiro256::new(7);
+        let mut ws: Vec<Matrix> = (0..w)
+            .map(|_| Matrix::gaussian(3, 41, 1.0, &mut rng))
+            .collect();
+        let reported = collective::ring_allreduce_mean(&mut ws);
+        assert_eq!(reported, ring_volume_bytes(3 * 41, w), "{nodes}x{gpus}");
+    }
+}
+
+/// The ring volume is monotone in workers and approaches 2× the payload:
+/// the standard bandwidth-optimality property the α–β cost model assumes.
+#[test]
+fn ring_volume_approaches_twice_payload() {
+    let numel = 1 << 12;
+    let payload = numel * BYTES_F32;
+    let mut last = 0usize;
+    for w in [2usize, 4, 8, 16, 64] {
+        let v = ring_volume_bytes(numel, w);
+        assert!(v > last, "volume must grow with w");
+        assert!(v < 2 * payload);
+        last = v;
+    }
+    // At w=64: 2·63/64 ≈ 1.97× payload.
+    assert!(last as f64 > 1.9 * payload as f64);
+}
+
+/// allreduce_time is consistent with the volume formula: doubling the
+/// payload doubles the bandwidth term (latency fixed).
+#[test]
+fn topology_time_consistent_with_volume() {
+    let topo = Topology::multi_node(2, 4);
+    let n = topo.workers();
+    let lat = 2.0 * (n as f64 - 1.0) * 25e-6;
+    let t1 = topo.allreduce_time(1 << 24) - lat;
+    let t2 = topo.allreduce_time(1 << 25) - lat;
+    assert!((t2 / t1 - 2.0).abs() < 1e-9, "bandwidth term ratio {}", t2 / t1);
+}

@@ -1,0 +1,125 @@
+//! Property tests for the linear-algebra substrate (via `util::prop`).
+//!
+//! The TSR optimizer family is only as trustworthy as its factorization
+//! primitives: every refresh runs qr_thin/orth on sketches, svd_gram on
+//! the reduced matrix, and the baselines rely on rsvd/svd_jacobi. These
+//! properties pin the numerical contracts — orthonormality defects,
+//! Eckart–Young-style reconstruction bounds, and cross-implementation
+//! spectrum agreement — over hundreds of random shapes.
+
+use tsr::linalg::{
+    matmul, orth, ortho_defect, qr_thin, rsvd, svd_gram, svd_jacobi, svd_truncated, Matrix,
+};
+use tsr::util::prop;
+use tsr::util::rng::Xoshiro256;
+
+fn low_rank_plus_noise(
+    m: usize,
+    n: usize,
+    d: usize,
+    noise: f32,
+    rng: &mut Xoshiro256,
+) -> Matrix {
+    let a = Matrix::gaussian(m, d, 1.0, rng);
+    let b = Matrix::gaussian(d, n, 1.0, rng);
+    let mut x = matmul(&a, &b);
+    if noise > 0.0 {
+        x.add_assign(&Matrix::gaussian(m, n, noise, rng));
+    }
+    x
+}
+
+/// `qr_thin` and `orth` produce orthonormal columns (defect < 1e-4) and
+/// an exact A = Q·R reconstruction across random tall shapes.
+#[test]
+fn prop_qr_orthonormality_and_reconstruction() {
+    prop::check("qr_thin orthonormal + reconstructs", 64, |rng| {
+        let k = prop::dim(rng, 1, 16);
+        let m = k + prop::dim(rng, 0, 48);
+        let a = Matrix::gaussian(m, k, 1.0, rng);
+        let (q, r) = qr_thin(&a);
+        let defect = ortho_defect(&q);
+        assert!(defect < 1e-4, "defect {defect} for {m}x{k}");
+        let qr = matmul(&q, &r);
+        assert!(
+            qr.dist(&a) < 1e-3 * (m as f32).max(1.0),
+            "{}x{} reconstruction {}",
+            m,
+            k,
+            qr.dist(&a)
+        );
+        // orth is the Q factor.
+        assert!(ortho_defect(&orth(&a)) < 1e-4);
+    });
+}
+
+/// Randomized SVD reconstruction error is bounded by a small constant
+/// times the exact truncated-SVD tail (Halko–Martinsson–Tropp): on
+/// low-rank-plus-noise matrices, rank-d rsvd with oversampling and two
+/// power iterations lands within 3× of the optimal rank-d error.
+#[test]
+fn prop_rsvd_error_bounded_by_exact_tail() {
+    prop::check("rsvd within constant of exact tail", 24, |rng| {
+        let d = prop::dim(rng, 2, 5);
+        let m = d + prop::dim(rng, 6, 24);
+        let n = d + prop::dim(rng, 6, 24);
+        let a = low_rank_plus_noise(m, n, d, 0.02, rng);
+        // Optimal rank-d error: the exact SVD tail √(Σ_{i>d} σ_i²).
+        let (_, sigma, _) = svd_jacobi(&a);
+        let tail: f32 = sigma[d.min(sigma.len())..]
+            .iter()
+            .map(|s| s * s)
+            .sum::<f32>()
+            .sqrt();
+        let approx = rsvd(&a, d, 5, 2, rng);
+        let err = approx.reconstruct().dist(&a);
+        assert!(
+            err <= 3.0 * tail + 1e-3,
+            "{m}x{n} d={d}: rsvd err {err} vs exact tail {tail}"
+        );
+        // The factors themselves must be orthonormal.
+        assert!(ortho_defect(&approx.u) < 1e-3);
+        assert!(ortho_defect(&approx.v) < 1e-3);
+    });
+}
+
+/// `svd_gram` (the fast refresh path) agrees with `svd_jacobi` (the
+/// oracle) on the singular spectrum of random wide matrices.
+#[test]
+fn prop_svd_gram_matches_jacobi_spectrum() {
+    prop::check("svd_gram spectrum == jacobi", 32, |rng| {
+        let k = prop::dim(rng, 2, 10);
+        let n = k + prop::dim(rng, 0, 40);
+        let b = Matrix::gaussian(k, n, 1.0, rng);
+        let (_, s_jac, _) = svd_jacobi(&b);
+        let (_, s_gram, _) = svd_gram(&b);
+        assert_eq!(s_jac.len(), s_gram.len());
+        let s0 = s_jac[0].max(1e-6);
+        for i in 0..k {
+            assert!(
+                (s_jac[i] - s_gram[i]).abs() < 1e-2 * s0 + 1e-4,
+                "{k}x{n} σ{i}: jacobi {} vs gram {}",
+                s_jac[i],
+                s_gram[i]
+            );
+        }
+    });
+}
+
+/// `svd_truncated` at full rank reproduces the matrix; at the intrinsic
+/// rank of a low-rank matrix it is (numerically) lossless.
+#[test]
+fn prop_truncated_svd_lossless_at_intrinsic_rank() {
+    prop::check("svd_truncated exact at intrinsic rank", 16, |rng| {
+        let d = prop::dim(rng, 1, 4);
+        let m = d + prop::dim(rng, 4, 20);
+        let n = d + prop::dim(rng, 4, 20);
+        let a = low_rank_plus_noise(m, n, d, 0.0, rng);
+        let rec = svd_truncated(&a, d).reconstruct();
+        assert!(
+            rec.dist(&a) < 1e-2 * a.frob_norm().max(1e-3),
+            "{m}x{n} d={d}: {}",
+            rec.dist(&a)
+        );
+    });
+}
