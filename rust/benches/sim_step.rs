@@ -1,0 +1,45 @@
+//! Discrete-event engine throughput: how fast the step-time simulator
+//! itself runs. One "op" simulates a full refresh period (100 steps) of
+//! a method's payload schedule on a 4×8 cluster — the unit of work the
+//! `tsr simtime` experiment performs per (method, topology) cell.
+//!
+//! Run: `cargo bench --bench sim_step`
+
+use tsr::comm::Topology;
+use tsr::exp::simtime::method_roster;
+use tsr::model::ModelSpec;
+use tsr::optim::AdamHyper;
+use tsr::sim::{simulate_method, simulate_step, SimCfg};
+use tsr::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let spec = ModelSpec::llama_60m();
+    let blocks = spec.blocks();
+    let topo = Topology::multi_node(4, 8);
+    let cfg = SimCfg::default();
+
+    for m in method_roster("60m") {
+        // Construct once (single replica — schedules are shape-only);
+        // the bench isolates the engine, not optimizer construction.
+        let opt = m.build(&blocks, AdamHyper::default(), 1);
+        b.bench(&format!("simulate_method 100 steps {}", m.label()), || {
+            let tl = simulate_method(opt.as_ref(), &blocks, &topo, &cfg, 100);
+            assert!(tl.avg_step_secs > 0.0);
+        });
+    }
+
+    // Single-step cost across bucket sizes (bucketing granularity sweep).
+    let opt = method_roster("60m")[0].build(&blocks, AdamHyper::default(), 1);
+    let plan = opt.sync_plan(1);
+    for kb in [0usize, 1024, 25 * 1024] {
+        let cfg = SimCfg {
+            bucket_bytes: kb * 1024,
+            ..Default::default()
+        };
+        b.bench(&format!("simulate_step adamw bucket={kb}KiB"), || {
+            let tl = simulate_step(&blocks, &plan, &topo, &cfg);
+            assert!(tl.step_secs > 0.0);
+        });
+    }
+}

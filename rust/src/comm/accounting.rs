@@ -30,6 +30,11 @@ pub struct StepRecord {
     pub embedding: usize,
     pub linear: usize,
     pub vector: usize,
+    /// Aggregate wire bytes moved over intra-node (NVLink-class) links
+    /// this step, summed over workers (`collective::sync_mean`).
+    pub intra: usize,
+    /// Aggregate wire bytes moved over inter-node links this step.
+    pub inter: usize,
     /// True if any layer refreshed its subspace this step.
     pub refresh: bool,
 }
@@ -60,6 +65,17 @@ impl CommLedger {
             LayerClass::Linear => self.current.linear += bytes,
             LayerClass::Vector => self.current.vector += bytes,
         }
+    }
+
+    /// Record wire bytes per link class for one collective: the payload
+    /// columns above count the synchronized object once; these columns
+    /// count what actually crossed each class of link, summed over
+    /// workers. For the two-level schedule they obey the exact
+    /// conservation `intra + inter == 2(N−1) · payload` (see
+    /// `collective::hier_volume_bytes`).
+    pub fn record_link(&mut self, intra_bytes: usize, inter_bytes: usize) {
+        self.current.intra += intra_bytes;
+        self.current.inter += inter_bytes;
     }
 
     pub fn mark_refresh(&mut self) {
@@ -106,6 +122,18 @@ impl CommLedger {
                 acc
             })
             .collect()
+    }
+
+    /// (intra, inter) aggregate wire-byte totals over the run — the
+    /// per-link-class split of the hierarchical collectives.
+    pub fn link_totals(&self) -> (u64, u64) {
+        let mut intra = 0u64;
+        let mut inter = 0u64;
+        for s in &self.steps {
+            intra += s.intra as u64;
+            inter += s.inter as u64;
+        }
+        (intra, inter)
     }
 
     /// (embedding, linear, vector) byte totals — Fig. 5(a).
@@ -161,6 +189,22 @@ mod tests {
         assert_eq!((e, lin, v), (200, 1600, 0));
         let (r, n) = l.refresh_split();
         assert_eq!((r, n), (1200.0, 600.0));
+    }
+
+    #[test]
+    fn link_columns_accumulate_separately_from_payload() {
+        let mut l = CommLedger::new();
+        l.record(LayerClass::Linear, 100); // 400 B payload
+        l.record_link(300, 200);
+        l.record_link(30, 20);
+        l.end_step();
+        l.record(LayerClass::Vector, 10);
+        l.end_step();
+        assert_eq!(l.step(0).total, 400);
+        assert_eq!(l.step(0).intra, 330);
+        assert_eq!(l.step(0).inter, 220);
+        assert_eq!((l.step(1).intra, l.step(1).inter), (0, 0));
+        assert_eq!(l.link_totals(), (330, 220));
     }
 
     #[test]

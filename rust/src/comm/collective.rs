@@ -2,19 +2,49 @@
 //!
 //! Workers are in-process (one parameter replica each); collectives move
 //! real data between their buffers so the numerics are identical to a
-//! true multi-process run. The ring all-reduce is implemented as an
-//! actual reduce-scatter + all-gather over chunks (not a shortcut mean)
-//! so that algorithmic properties — chunking, ordering, determinism —
-//! are exercised and testable; a direct mean implementation serves as
-//! the test oracle.
+//! true multi-process run. Two implementations exist:
+//!
+//! * [`ring_allreduce_mean`] — flat ring reduce-scatter + all-gather over
+//!   all workers, the classic single-level algorithm;
+//! * [`hier_allreduce_mean`] — the two-level hierarchical schedule used
+//!   on NVLink-island clusters: intra-node ring reduce-scatter, then one
+//!   inter-node ring per reduced chunk among its per-node owners (for
+//!   one GPU per node these owners are exactly the node leaders), then
+//!   an intra-node all-gather that broadcasts the global chunks back.
+//!
+//! Both are actual data-moving implementations (chunking, ordering, and
+//! determinism are exercised and testable); a direct f64 mean serves as
+//! the numerical oracle. [`sync_mean`] is the topology-aware front door
+//! used by every optimizer: it picks the hierarchical schedule when the
+//! worker count matches the topology shape, meters the per-link wire
+//! volume into the [`CommLedger`]'s intra/inter columns, and meters the
+//! synchronized-object payload per layer class exactly as before.
 
+use crate::comm::{CommLedger, LayerClass, Topology, BYTES_F32};
 use crate::linalg::Matrix;
+
+/// Aggregate wire bytes moved on each link class by one hierarchical
+/// all-reduce (summed over all workers).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HierVolume {
+    pub intra_bytes: usize,
+    pub inter_bytes: usize,
+}
+
+impl HierVolume {
+    pub fn total(&self) -> usize {
+        self.intra_bytes + self.inter_bytes
+    }
+}
 
 /// All-reduce (average) a set of equally-shaped per-worker matrices
 /// in-place via ring reduce-scatter + all-gather.
 ///
-/// Returns the per-worker payload bytes this collective transmitted
-/// (the standard ring volume: 2·(N−1)/N · |x| · 4 bytes).
+/// Returns the **per-worker** (busiest participant) bytes transmitted —
+/// see [`ring_volume_bytes`]. Note the unit difference from
+/// [`hier_allreduce_mean`], which returns **aggregate** wire bytes
+/// summed over all workers (what the ledger's intra/inter columns
+/// meter); do not mix the two.
 pub fn ring_allreduce_mean(workers: &mut [Matrix]) -> usize {
     let n = workers.len();
     assert!(n > 0);
@@ -25,47 +55,214 @@ pub fn ring_allreduce_mean(workers: &mut [Matrix]) -> usize {
     if n == 1 {
         return 0;
     }
-
-    // Chunk boundaries: chunk c covers [starts[c], starts[c+1]).
-    let starts: Vec<usize> = (0..=n).map(|c| c * numel / n).collect();
-
-    // Reduce-scatter: after n-1 steps worker i holds the full sum of
-    // chunk (i+1) mod n.
-    for step in 0..n - 1 {
-        for i in 0..n {
-            // Worker i sends chunk (i - step) mod n to worker (i+1) mod n.
-            let c = (i + n - step) % n;
-            let (lo, hi) = (starts[c], starts[c + 1]);
-            let dst = (i + 1) % n;
-            // split_at_mut dance to borrow two workers at once.
-            let (src_chunk, dst_chunk) = two_slices(workers, i, dst, lo, hi);
-            for (d, s) in dst_chunk.iter_mut().zip(src_chunk.iter()) {
-                *d += *s;
-            }
-        }
-    }
-    // All-gather: circulate the reduced chunks.
-    for step in 0..n - 1 {
-        for i in 0..n {
-            let c = (i + 1 + n - step) % n;
-            let (lo, hi) = (starts[c], starts[c + 1]);
-            let dst = (i + 1) % n;
-            let (src_chunk, dst_chunk) = two_slices(workers, i, dst, lo, hi);
-            dst_chunk.copy_from_slice(&src_chunk);
-        }
-    }
-    // Scale sums to means.
-    let inv = 1.0 / n as f32;
-    for w in workers.iter_mut() {
-        for v in &mut w.data {
-            *v *= inv;
-        }
-    }
+    let group: Vec<usize> = (0..n).collect();
+    ring_reduce_scatter(workers, &group, 0, numel);
+    ring_all_gather(workers, &group, 0, numel);
+    scale_to_mean(workers, n as f32);
     ring_volume_bytes(numel, n)
 }
 
+/// Two-level hierarchical all-reduce (average) in-place.
+///
+/// `workers` is laid out node-major: worker `w` lives on node
+/// `w / gpus_per_node` with local index `w % gpus_per_node`. Three
+/// phases, each a real ring over the relevant group:
+///
+/// 1. **intra reduce-scatter** — within every node, local worker `i`
+///    ends holding the node-sum of chunk `(i+1) % g`;
+/// 2. **inter ring all-reduce** — for each chunk, the per-node owners of
+///    that chunk run a ring all-reduce across nodes (the "leader ring";
+///    with one chunk per node these are literally the node leaders);
+/// 3. **intra all-gather** — the globally reduced chunks circulate back
+///    inside each node, the broadcast leg of the schedule.
+///
+/// Returns the aggregate wire bytes per link class. Summed over workers
+/// these obey the exact per-level decomposition (ragged chunks
+/// included): intra = `2·nodes·(g−1)·numel·4`, inter =
+/// `2·(nodes−1)·numel·4` — i.e. `2(w−1)/w` of the payload per
+/// participant at each level — and intra + inter equals the flat ring's
+/// aggregate `2·(N−1)·numel·4`: the hierarchy re-routes bytes from the
+/// slow link to the fast one without moving more of them.
+pub fn hier_allreduce_mean(
+    workers: &mut [Matrix],
+    nodes: usize,
+    gpus_per_node: usize,
+) -> HierVolume {
+    let n = workers.len();
+    assert!(n > 0);
+    assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
+    let numel = workers[0].numel();
+    for w in workers.iter() {
+        assert_eq!(w.numel(), numel, "ragged all-reduce");
+    }
+    if n == 1 {
+        return HierVolume::default();
+    }
+    let g = gpus_per_node;
+    // Degenerate shapes collapse to a single flat ring on one link class.
+    if nodes == 1 || g == 1 {
+        let group: Vec<usize> = (0..n).collect();
+        let mut wire = ring_reduce_scatter(workers, &group, 0, numel);
+        wire += ring_all_gather(workers, &group, 0, numel);
+        scale_to_mean(workers, n as f32);
+        return if nodes == 1 {
+            HierVolume {
+                intra_bytes: wire,
+                inter_bytes: 0,
+            }
+        } else {
+            HierVolume {
+                intra_bytes: 0,
+                inter_bytes: wire,
+            }
+        };
+    }
+
+    let starts: Vec<usize> = (0..=g).map(|c| c * numel / g).collect();
+    let mut intra = 0usize;
+    let mut inter = 0usize;
+
+    // Phase 1: intra-node ring reduce-scatter.
+    for node in 0..nodes {
+        let group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
+        intra += ring_reduce_scatter(workers, &group, 0, numel);
+    }
+    // Phase 2: one cross-node ring per chunk, run by the local workers
+    // that own it after phase 1 (local index i owns chunk (i+1) % g).
+    for chunk in 0..g {
+        let owner = (chunk + g - 1) % g;
+        let group: Vec<usize> = (0..nodes).map(|node| node * g + owner).collect();
+        inter += ring_reduce_scatter(workers, &group, starts[chunk], starts[chunk + 1]);
+        inter += ring_all_gather(workers, &group, starts[chunk], starts[chunk + 1]);
+    }
+    // Phase 3: intra-node all-gather (broadcast of the global chunks).
+    for node in 0..nodes {
+        let group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
+        intra += ring_all_gather(workers, &group, 0, numel);
+    }
+    scale_to_mean(workers, n as f32);
+    HierVolume {
+        intra_bytes: intra,
+        inter_bytes: inter,
+    }
+}
+
+/// Per-level wire split for a payload of `bytes` moved by the two-level
+/// schedule (collapsing to one flat ring when either level is trivial).
+/// The single source of the `2(w−1)/w` decomposition — shared by the
+/// element-count closed form ([`hier_volume_bytes`]), the virtual-sync
+/// metering ([`record_virtual_sync`]), and [`sync_mean`]'s flat
+/// fallback — so the conservation identity intra + inter = 2(N−1)·bytes
+/// cannot drift between them.
+pub fn hier_wire_split(bytes: usize, nodes: usize, gpus_per_node: usize) -> HierVolume {
+    let n = nodes * gpus_per_node;
+    if n <= 1 {
+        return HierVolume::default();
+    }
+    if nodes == 1 {
+        return HierVolume {
+            intra_bytes: 2 * (n - 1) * bytes,
+            inter_bytes: 0,
+        };
+    }
+    if gpus_per_node == 1 {
+        return HierVolume {
+            intra_bytes: 0,
+            inter_bytes: 2 * (n - 1) * bytes,
+        };
+    }
+    HierVolume {
+        intra_bytes: 2 * nodes * (gpus_per_node - 1) * bytes,
+        inter_bytes: 2 * (nodes - 1) * bytes,
+    }
+}
+
+/// Closed-form aggregate wire bytes of [`hier_allreduce_mean`] for a
+/// payload of `numel` f32 elements — the per-level decomposition the
+/// tests assert against. Exact for every `numel` (chunk raggedness
+/// cancels in the aggregate).
+pub fn hier_volume_bytes(numel: usize, nodes: usize, gpus_per_node: usize) -> HierVolume {
+    hier_wire_split(numel * BYTES_F32, nodes, gpus_per_node)
+}
+
+/// Topology-aware all-reduce (mean) with full metering: the front door
+/// every optimizer synchronizes through.
+///
+/// * moves the data with [`hier_allreduce_mean`] when the worker count
+///   matches the topology shape (flat ring otherwise),
+/// * meters the aggregate wire volume per link class into the ledger's
+///   intra/inter columns,
+/// * meters the synchronized-object payload under `class` (unchanged
+///   semantics — the analytic byte profiles stay exact),
+/// * adds the serial α–β time oracle ([`Topology::allreduce_time`]) to
+///   `ledger.sim_time`; the bucketed/overlapped estimate lives in
+///   `sim::engine`.
+///
+/// Returns the payload bytes metered.
+pub fn sync_mean(
+    workers: &mut [Matrix],
+    class: LayerClass,
+    ledger: &mut CommLedger,
+    topo: &Topology,
+) -> usize {
+    let n = workers.len();
+    assert!(n > 0);
+    let numel = workers[0].numel();
+    let payload = numel * BYTES_F32;
+    if n > 1 {
+        if n == topo.workers() {
+            let vol = hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node);
+            ledger.record_link(vol.intra_bytes, vol.inter_bytes);
+        } else {
+            // Worker count does not tile the topology: fall back to a
+            // flat ring, attributed to the slowest link class it crosses.
+            // (Aggregate volume via the shared closed form —
+            // ring_allreduce_mean's return is per-worker, not aggregate,
+            // and must not be metered here.)
+            ring_allreduce_mean(workers);
+            let vol = if topo.nodes > 1 {
+                hier_wire_split(payload, n, 1)
+            } else {
+                hier_wire_split(payload, 1, n)
+            };
+            ledger.record_link(vol.intra_bytes, vol.inter_bytes);
+        }
+    }
+    ledger.record_bytes(class, payload);
+    ledger.add_sim_time(topo.allreduce_time(payload));
+    payload
+}
+
+/// Meter the wire volume of a *virtual* collective moving `bytes` of an
+/// already-aggregated payload.
+///
+/// SignAdam and TopKAdam compress, exchange, and decompress in-process
+/// (no `Matrix` collective runs for the compressed object), but the
+/// ledger's serial time oracle already charges `allreduce_time(bytes)`
+/// for it — so the intra/inter wire columns must charge the matching
+/// two-level volume, or the three accountings drift apart. Same
+/// conservation as the real schedule: intra + inter = 2(N−1)·bytes.
+pub fn record_virtual_sync(
+    workers: usize,
+    bytes: usize,
+    ledger: &mut CommLedger,
+    topo: &Topology,
+) {
+    if workers <= 1 {
+        return;
+    }
+    let vol = if workers == topo.workers() {
+        hier_wire_split(bytes, topo.nodes, topo.gpus_per_node)
+    } else if topo.nodes > 1 {
+        hier_wire_split(bytes, workers, 1)
+    } else {
+        hier_wire_split(bytes, 1, workers)
+    };
+    ledger.record_link(vol.intra_bytes, vol.inter_bytes);
+}
+
 /// Oracle: direct mean, broadcast to all workers. Same result as the
-/// ring implementation up to f32 reduction-order rounding.
+/// ring implementations up to f32 reduction-order rounding.
 pub fn direct_allreduce_mean(workers: &mut [Matrix]) {
     let n = workers.len();
     if n <= 1 {
@@ -86,25 +283,110 @@ pub fn direct_allreduce_mean(workers: &mut [Matrix]) {
     }
 }
 
-/// Per-worker bytes moved by a ring all-reduce of `numel` f32 elements.
+/// Per-worker bytes moved by a ring all-reduce of `numel` f32 elements,
+/// computed from the actual chunk boundaries (`starts[c] = c·numel/n`):
+/// over the 2(n−1) steps a worker sends every chunk except two, so the
+/// busiest worker moves `2·numel − c_a − c_b` elements with `c_a, c_b`
+/// its two skipped chunks. For `numel % n == 0` this is exactly
+/// `2(n−1)/n · numel · 4`; for ragged payloads the truncating closed
+/// form under-counts, so we take the max over workers (the participant
+/// that paces the ring).
 pub fn ring_volume_bytes(numel: usize, n: usize) -> usize {
     if n <= 1 {
         return 0;
     }
-    (2 * (n - 1) * numel / n) * std::mem::size_of::<f32>()
+    let starts: Vec<usize> = (0..=n).map(|c| c * numel / n).collect();
+    let chunk = |c: usize| starts[c + 1] - starts[c];
+    (0..n)
+        .map(|i| 2 * numel - chunk((i + 1) % n) - chunk((i + 2) % n))
+        .max()
+        .unwrap_or(0)
+        * BYTES_F32
 }
 
-/// Borrow chunk [lo,hi) of workers[src] (shared) and workers[dst] (mut).
+// ---------------------------------------------------------------------
+// Ring primitives shared by the flat and hierarchical schedules. Both
+// operate on the element range [lo, hi) split into `group.len()` chunks
+// at boundaries `lo + c·len/m`, and return the aggregate bytes sent by
+// the whole group.
+// ---------------------------------------------------------------------
+
+/// Ring reduce-scatter (sum) over `group`: after `m−1` steps the worker
+/// at group position `i` holds the full group-sum of chunk `(i+1) % m`.
+fn ring_reduce_scatter(workers: &mut [Matrix], group: &[usize], lo: usize, hi: usize) -> usize {
+    let m = group.len();
+    if m <= 1 {
+        return 0;
+    }
+    let len = hi - lo;
+    let starts: Vec<usize> = (0..=m).map(|c| lo + c * len / m).collect();
+    let mut sent = 0usize;
+    for step in 0..m - 1 {
+        for i in 0..m {
+            // Position i sends chunk (i - step) mod m to position i+1.
+            let c = (i + m - step) % m;
+            let (clo, chi) = (starts[c], starts[c + 1]);
+            let dst = (i + 1) % m;
+            let (src_chunk, dst_chunk) = two_slices(workers, group[i], group[dst], clo, chi);
+            for (d, s) in dst_chunk.iter_mut().zip(src_chunk.iter()) {
+                *d += *s;
+            }
+            sent += chi - clo;
+        }
+    }
+    sent * BYTES_F32
+}
+
+/// Ring all-gather over `group`, assuming the ownership layout produced
+/// by [`ring_reduce_scatter`]: circulates the reduced chunks until every
+/// group member holds all of [lo, hi).
+fn ring_all_gather(workers: &mut [Matrix], group: &[usize], lo: usize, hi: usize) -> usize {
+    let m = group.len();
+    if m <= 1 {
+        return 0;
+    }
+    let len = hi - lo;
+    let starts: Vec<usize> = (0..=m).map(|c| lo + c * len / m).collect();
+    let mut sent = 0usize;
+    for step in 0..m - 1 {
+        for i in 0..m {
+            let c = (i + 1 + m - step) % m;
+            let (clo, chi) = (starts[c], starts[c + 1]);
+            let dst = (i + 1) % m;
+            let (src_chunk, dst_chunk) = two_slices(workers, group[i], group[dst], clo, chi);
+            dst_chunk.copy_from_slice(src_chunk);
+            sent += chi - clo;
+        }
+    }
+    sent * BYTES_F32
+}
+
+fn scale_to_mean(workers: &mut [Matrix], n: f32) {
+    let inv = 1.0 / n;
+    for w in workers.iter_mut() {
+        for v in &mut w.data {
+            *v *= inv;
+        }
+    }
+}
+
+/// Borrow chunk [lo,hi) of workers[src] (shared) and workers[dst] (mut)
+/// simultaneously via `split_at_mut` — no per-chunk allocation.
 fn two_slices(
     workers: &mut [Matrix],
     src: usize,
     dst: usize,
     lo: usize,
     hi: usize,
-) -> (Vec<f32>, &mut [f32]) {
-    // Copy src chunk out (small chunk; models the "send buffer").
-    let src_copy = workers[src].data[lo..hi].to_vec();
-    (src_copy, &mut workers[dst].data[lo..hi])
+) -> (&[f32], &mut [f32]) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (left, right) = workers.split_at_mut(dst);
+        (&left[src].data[lo..hi], &mut right[0].data[lo..hi])
+    } else {
+        let (left, right) = workers.split_at_mut(src);
+        (&right[0].data[lo..hi], &mut left[dst].data[lo..hi])
+    }
 }
 
 #[cfg(test)]
@@ -141,9 +423,18 @@ mod tests {
 
     #[test]
     fn volume_formula() {
-        // 2(N-1)/N × numel × 4.
+        // Divisible: 2(N-1)/N × numel × 4.
         assert_eq!(ring_volume_bytes(100, 4), 2 * 3 * 100 / 4 * 4);
         assert_eq!(ring_volume_bytes(100, 1), 0);
+    }
+
+    #[test]
+    fn ragged_volume_counts_actual_chunks() {
+        // numel=10, n=3: chunks are 3,3,4 — the busiest worker skips the
+        // two 3-element chunks and moves 2·10−3−3 = 14 elements. The old
+        // truncating formula said ⌊2·2·10/3⌋ = 13.
+        assert_eq!(ring_volume_bytes(10, 3), 14 * 4);
+        assert!(ring_volume_bytes(10, 3) > 2 * 2 * 10 / 3 * 4);
     }
 
     #[test]
@@ -156,6 +447,77 @@ mod tests {
             for &v in &w.data {
                 assert!((v - 1.5).abs() < 1e-6);
             }
+        }
+    }
+
+    #[test]
+    fn hier_matches_direct_mean() {
+        prop::check("hier == mean", 20, |rng| {
+            let nodes = prop::dim(rng, 1, 4);
+            let g = prop::dim(rng, 1, 4);
+            let r = prop::dim(rng, 1, 11);
+            let c = prop::dim(rng, 1, 11);
+            let mut ws: Vec<Matrix> = (0..nodes * g)
+                .map(|_| Matrix::gaussian(r, c, 1.0, rng))
+                .collect();
+            let mut oracle = ws.clone();
+            hier_allreduce_mean(&mut ws, nodes, g);
+            direct_allreduce_mean(&mut oracle);
+            for (a, b) in ws.iter().zip(&oracle) {
+                assert!(a.dist(b) < 1e-4 * (r * c) as f32, "{nodes}x{g} {r}x{c}");
+            }
+        });
+    }
+
+    #[test]
+    fn hier_volume_matches_closed_form() {
+        // Ragged numel on purpose: the aggregate closed form is exact.
+        let numel = 37;
+        let mut rng = Xoshiro256::new(3);
+        for (nodes, g) in [(2usize, 3usize), (3, 2), (4, 4), (1, 5), (5, 1)] {
+            let mut ws: Vec<Matrix> = (0..nodes * g)
+                .map(|_| Matrix::gaussian(1, numel, 1.0, &mut rng))
+                .collect();
+            let vol = hier_allreduce_mean(&mut ws, nodes, g);
+            assert_eq!(vol, hier_volume_bytes(numel, nodes, g), "{nodes}x{g}");
+            // Conservation: the hierarchy moves exactly the flat ring's
+            // aggregate 2(N−1)·numel bytes, re-routed across link classes.
+            let n = nodes * g;
+            assert_eq!(vol.total(), 2 * (n - 1) * numel * BYTES_F32, "{nodes}x{g}");
+        }
+    }
+
+    #[test]
+    fn sync_mean_meters_payload_and_wire() {
+        let topo = Topology::multi_node(2, 2);
+        let mut ledger = CommLedger::new();
+        let mut rng = Xoshiro256::new(9);
+        let mut ws: Vec<Matrix> = (0..4).map(|_| Matrix::gaussian(5, 8, 1.0, &mut rng)).collect();
+        let payload = sync_mean(&mut ws, LayerClass::Linear, &mut ledger, &topo);
+        ledger.end_step();
+        assert_eq!(payload, 40 * 4);
+        assert_eq!(ledger.step(0).total, 40 * 4);
+        let expect = hier_volume_bytes(40, 2, 2);
+        assert_eq!(ledger.step(0).intra, expect.intra_bytes);
+        assert_eq!(ledger.step(0).inter, expect.inter_bytes);
+        assert!(ledger.sim_time > 0.0);
+    }
+
+    #[test]
+    fn sync_mean_falls_back_to_flat_ring_on_shape_mismatch() {
+        // 3 workers under a 2×2 topology: flat ring, attributed inter.
+        let topo = Topology::multi_node(2, 2);
+        let mut ledger = CommLedger::new();
+        let mut rng = Xoshiro256::new(10);
+        let mut ws: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(4, 4, 1.0, &mut rng)).collect();
+        let mut oracle = ws.clone();
+        sync_mean(&mut ws, LayerClass::Vector, &mut ledger, &topo);
+        direct_allreduce_mean(&mut oracle);
+        ledger.end_step();
+        assert_eq!(ledger.step(0).intra, 0);
+        assert_eq!(ledger.step(0).inter, 2 * 2 * 16 * 4);
+        for (a, b) in ws.iter().zip(&oracle) {
+            assert!(a.dist(b) < 1e-4);
         }
     }
 }

@@ -7,6 +7,9 @@ pub mod accounting;
 pub mod collective;
 pub mod topology;
 
-pub use accounting::{CommLedger, LayerClass, BYTES_BF16, BYTES_F32};
-pub use collective::{direct_allreduce_mean, ring_allreduce_mean, ring_volume_bytes};
+pub use accounting::{CommLedger, LayerClass, StepRecord, BYTES_BF16, BYTES_F32};
+pub use collective::{
+    direct_allreduce_mean, hier_allreduce_mean, hier_volume_bytes, hier_wire_split,
+    record_virtual_sync, ring_allreduce_mean, ring_volume_bytes, sync_mean, HierVolume,
+};
 pub use topology::Topology;

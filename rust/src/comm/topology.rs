@@ -66,6 +66,14 @@ impl Topology {
     /// over all workers. Standard model: 2(N−1)/N · bytes / BW_bottleneck
     /// + 2(N−1) · α_bottleneck. With a two-level hierarchy the bottleneck
     /// is the slow link iff the ring crosses nodes.
+    ///
+    /// This closed form is the documented *oracle* for the discrete-event
+    /// engine in `sim::engine`: for the degenerate configuration — flat
+    /// ring (single level), a single bucket carrying the whole step
+    /// payload, no compute/comm overlap — the engine reproduces it with
+    /// exact f64 equality (`tests/sim_engine.rs`). The engine exists for
+    /// everything this formula collapses: per-level α–β channels,
+    /// bucketed sync, and overlap with backward compute.
     pub fn allreduce_time(&self, bytes: usize) -> f64 {
         let n = self.workers();
         if n <= 1 {

@@ -4,6 +4,7 @@
 pub mod analytic;
 pub mod figures;
 pub mod runs;
+pub mod simtime;
 pub mod tables;
 pub mod theory;
 

@@ -7,7 +7,7 @@ use crate::metrics::RunMetrics;
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::{
     AdamHyper, DenseAdamW, DistOptimizer, LrSchedule, OneSidedAdam, PowerSgd, SignAdam, TopKAdam,
-    TsrAdam, TsrConfig,
+    TsrAdam, TsrConfig, TsrSgd,
 };
 use crate::optim::onesided::OneSidedRefresh;
 use crate::train::gradsim::QuadraticSim;
@@ -23,6 +23,9 @@ pub enum MethodCfg {
         refresh: OneSidedRefresh,
     },
     Tsr(TsrConfig),
+    /// Algorithm 2: core-momentum SGD with the same two-sided refresh
+    /// (lr taken from the Adam hyper-parameters, β = 0.9).
+    TsrSgd(TsrConfig),
     PowerSgd {
         rank: usize,
     },
@@ -42,6 +45,7 @@ impl MethodCfg {
             MethodCfg::Adam => "adamw".into(),
             MethodCfg::OneSided { rank, .. } => format!("onesided-r{rank}"),
             MethodCfg::Tsr(c) => format!("tsr-r{}({})-k{}", c.rank, c.rank_emb, c.refresh_every),
+            MethodCfg::TsrSgd(c) => format!("tsr-sgd-r{}-k{}", c.rank, c.refresh_every),
             MethodCfg::PowerSgd { rank } => format!("powersgd-r{rank}"),
             MethodCfg::Sign { k_var } => format!("signadam-k{k_var}"),
             MethodCfg::TopK { keep_frac } => format!("topk-d{keep_frac:.3}"),
@@ -60,6 +64,7 @@ impl MethodCfg {
                 Box::new(OneSidedAdam::new(blocks, hyper, *rank, *k, *refresh))
             }
             MethodCfg::Tsr(cfg) => Box::new(TsrAdam::new(blocks, hyper, cfg.clone())),
+            MethodCfg::TsrSgd(cfg) => Box::new(TsrSgd::new(blocks, hyper.lr, 0.9, cfg.clone())),
             MethodCfg::PowerSgd { rank } => {
                 Box::new(PowerSgd::new(blocks, workers, hyper.lr, 0.9, *rank))
             }

@@ -24,5 +24,6 @@ pub mod metrics;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod sim;
 pub mod train;
 pub mod util;

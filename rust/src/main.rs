@@ -3,6 +3,7 @@
 //! Subcommands (see DESIGN.md §3 for the experiment index):
 //!   table1|table2|table3|table4|table6   regenerate paper tables
 //!   fig1|fig3|fig4|fig5                  regenerate paper figure data
+//!   simtime                              Fig 6: step-time breakdown (sim/)
 //!   theory                               Theorem 1 validation sweep
 //!   train                                PJRT end-to-end training run
 //!   info                                 platform / artifact status
@@ -53,6 +54,23 @@ fn main() {
         Some("fig5") => {
             figures::fig5(args.get_usize("steps", 300), args.get_usize("workers", 4));
         }
+        Some("simtime") => {
+            let cfg = tsr::sim::SimCfg {
+                bucket_bytes: args.get_usize("bucket-kb", 25 * 1024) * 1024,
+                flops: args.get_f64("flops", 312e12),
+                tokens_per_step: args.get_usize("tokens", 8192),
+                overlap: !args.flag("no-overlap"),
+                hierarchical: !args.flag("flat"),
+            };
+            let j = tsr::exp::simtime::simtime(
+                args.get_or("scale", "60m"),
+                args.get_usize("nodes", 4),
+                args.get_usize("gpus", 8),
+                args.get_usize("steps", 100),
+                &cfg,
+            );
+            write_results("fig6_simtime.json", &j);
+        }
         Some("theory") => {
             let horizons: Vec<usize> = args
                 .get_or("horizons", "50,100,200,400,800")
@@ -72,6 +90,8 @@ fn main() {
                 "usage: tsr <subcommand> [--options]\n\
                  \n  tables:   table1 table2 table3 [--loss-steps N] table4 table6\
                  \n  figures:  fig1 fig3 fig4 fig5 [--steps N --workers W]\
+                 \n  simtime:  simtime [--scale 60m --nodes 4 --gpus 8 --steps N \
+                 --bucket-kb K --tokens T --flops F --no-overlap --flat]\
                  \n  theory:   theory [--horizons 50,100,...]\
                  \n  train:    train --manifest artifacts/tiny_manifest.json \
                  [--method tsr|adamw|galore|signadam|topk] [--steps N] [--workers W] \
@@ -178,6 +198,10 @@ fn run_train(args: &Args) {
     );
     trainer.verbose = true;
     trainer.log_every = args.get_usize("log-every", 10);
+    trainer.sim = Some(tsr::sim::SimCfg {
+        tokens_per_step: manifest.batch * manifest.seq,
+        ..Default::default()
+    });
     let t0 = std::time::Instant::now();
     let (metrics, ledger) = trainer.run(&mut source, opt.as_mut(), &mut params, steps);
     let wall = t0.elapsed().as_secs_f64();
@@ -197,7 +221,18 @@ fn run_train(args: &Args) {
         tsr::util::bench::fmt_bytes(*metrics.cum_bytes.last().unwrap_or(&0) as f64)
     );
     println!("optimizer state : {} elements", opt.state_elements());
-    println!("sim comm time   : {:.3}s (α–β model)", ledger.sim_time);
+    let (intra, inter) = ledger.link_totals();
+    println!(
+        "wire bytes      : {} intra-node + {} inter-node",
+        tsr::util::bench::fmt_bytes(intra as f64),
+        tsr::util::bench::fmt_bytes(inter as f64)
+    );
+    println!("sim comm time   : {:.3}s (serial α–β oracle)", ledger.sim_time);
+    println!(
+        "predicted step  : {:.2}ms avg, {:.2}ms exposed comm (event engine)",
+        1e3 * metrics.predicted_step_secs / steps as f64,
+        1e3 * metrics.exposed_comm_secs / steps as f64
+    );
     println!("wall time       : {wall:.1}s  ({:.3}s/step)", wall / steps as f64);
 
     let out = args.get_or("out", "results/train_run.json");

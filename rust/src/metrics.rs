@@ -13,8 +13,15 @@ pub struct RunMetrics {
     pub cum_bytes: Vec<u64>,
     /// Wall-clock seconds per optimizer step (measured, this host).
     pub step_secs: Vec<f64>,
-    /// Simulated communication seconds (α–β model).
+    /// Simulated communication seconds (serial α–β model — the ledger's
+    /// closed-form oracle, no bucketing or overlap).
     pub sim_comm_secs: f64,
+    /// Total predicted step seconds from the discrete-event engine
+    /// (bucketed, hierarchical, overlapped) when `Trainer::sim` is set.
+    pub predicted_step_secs: f64,
+    /// Total exposed (non-overlapped) communication seconds predicted by
+    /// the engine.
+    pub exposed_comm_secs: f64,
 }
 
 impl RunMetrics {
@@ -72,6 +79,8 @@ impl RunMetrics {
             ),
             ("mean_step_secs", Json::num(self.mean_step_secs())),
             ("sim_comm_secs", Json::num(self.sim_comm_secs)),
+            ("predicted_step_secs", Json::num(self.predicted_step_secs)),
+            ("exposed_comm_secs", Json::num(self.exposed_comm_secs)),
         ])
     }
 }

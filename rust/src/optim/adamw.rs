@@ -1,7 +1,7 @@
 //! Dense AdamW under full gradient synchronization (paper §3.1) — the
 //! O(mn) baseline of Tables 1 & 3.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::model::BlockSpec;
 
@@ -37,13 +37,27 @@ impl DistOptimizer for DenseAdamW {
         for b in 0..nblocks {
             // All-reduce the dense gradient: S_t = { Ḡ } (mn elements).
             let mut per_worker: Vec<_> = ctx.grads.iter_mut().map(|g| g[b].clone()).collect();
-            collective::ring_allreduce_mean(&mut per_worker);
+            collective::sync_mean(&mut per_worker, self.classes[b], ctx.ledger, ctx.topo);
             let gbar = &per_worker[0];
-            let bytes = gbar.numel() * crate::comm::BYTES_F32;
-            ctx.ledger.record_bytes(self.classes[b], bytes);
-            ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
 
             self.state[b].update(&mut ctx.params[b], gbar, &self.hyper, ctx.lr_mult, self.t);
+        }
+    }
+
+    fn sync_plan(&self, _t: u64) -> SyncPlan {
+        // Every parameter, every step.
+        SyncPlan {
+            items: self
+                .state
+                .iter()
+                .enumerate()
+                .map(|(b, st)| SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    refresh: false,
+                })
+                .collect(),
         }
     }
 

@@ -26,7 +26,7 @@ pub mod topk_adam;
 pub mod tsr;
 pub mod tsr_sgd;
 
-use crate::comm::{CommLedger, Topology};
+use crate::comm::{CommLedger, LayerClass, Topology};
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
 
@@ -76,6 +76,38 @@ pub struct StepCtx<'a> {
     pub lr_mult: f32,
 }
 
+/// One block's contribution to step-`t` gradient synchronization.
+#[derive(Clone, Debug)]
+pub struct SyncItem {
+    /// Block index in forward (model) order.
+    pub block: usize,
+    pub class: LayerClass,
+    /// Payload bytes the method synchronizes for this block at step t.
+    pub bytes: usize,
+    /// True when this step carries the block's refresh extra (sketches,
+    /// dense SVD gradient, variance re-estimate, …).
+    pub refresh: bool,
+}
+
+/// A method's payload schedule for one step: what `step()` will meter,
+/// predicted without running it. The discrete-event engine (`sim/`)
+/// buckets and times these payloads; `tests/sim_engine.rs` asserts the
+/// schedule matches the metered ledger byte-for-byte for every method.
+#[derive(Clone, Debug, Default)]
+pub struct SyncPlan {
+    pub items: Vec<SyncItem>,
+}
+
+impl SyncPlan {
+    pub fn total_bytes(&self) -> usize {
+        self.items.iter().map(|i| i.bytes).sum()
+    }
+
+    pub fn has_refresh(&self) -> bool {
+        self.items.iter().any(|i| i.refresh)
+    }
+}
+
 pub trait DistOptimizer {
     fn name(&self) -> &'static str;
 
@@ -84,6 +116,13 @@ pub trait DistOptimizer {
     /// 2. update any internal state (moments, bases),
     /// 3. write the new parameters into `ctx.params`.
     fn step(&mut self, ctx: &mut StepCtx);
+
+    /// Per-block payload schedule for (0-indexed) step `t` of a run that
+    /// starts from this optimizer's initial state. Deterministic in `t`:
+    /// refresh cadences are fixed by configuration, so the schedule can
+    /// be queried without executing steps — this is what the
+    /// discrete-event step-time simulator consumes.
+    fn sync_plan(&self, t: u64) -> SyncPlan;
 
     /// Total optimizer-state elements currently held (memory accounting).
     fn state_elements(&self) -> usize;

@@ -8,7 +8,7 @@
 //! gradient every K steps — the refresh-peak behaviour the paper
 //! contrasts against (Fig. 2b). Embeddings stay dense, as in GaLore.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::{matmul, matmul_nt, matmul_tn, rsvd, svd_truncated, Matrix};
 use crate::model::BlockSpec;
@@ -105,10 +105,7 @@ impl DistOptimizer for OneSidedAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
                 }
                 BlockState::Projected(blk) => {
@@ -118,10 +115,7 @@ impl DistOptimizer for OneSidedAdam {
                         // → this is what spikes PeakBytes.
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
-                        collective::ring_allreduce_mean(&mut dense);
-                        let bytes = dense[0].numel() * crate::comm::BYTES_F32;
-                        ctx.ledger.record_bytes(class, bytes);
-                        ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo);
                         ctx.ledger.mark_refresh();
                         let gbar = &dense[0];
                         let factors = match self.refresh {
@@ -148,10 +142,7 @@ impl DistOptimizer for OneSidedAdam {
                             }
                         })
                         .collect();
-                    collective::ring_allreduce_mean(&mut proj);
-                    let bytes = proj[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut proj, class, ctx.ledger, ctx.topo);
                     let cbar = &proj[0];
 
                     // Adam moments in projected space.
@@ -183,6 +174,40 @@ impl DistOptimizer for OneSidedAdam {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| match s {
+                BlockState::Dense(st) => SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    refresh: false,
+                },
+                BlockState::Projected(blk) => {
+                    let refresh = t % blk.refresh_every as u64 == 0;
+                    // Projected object every step; full dense gradient on
+                    // refresh steps (the GaLore peak-byte event).
+                    let dense = if blk.left {
+                        blk.basis.rows * blk.m.cols
+                    } else {
+                        blk.m.rows * blk.basis.rows
+                    };
+                    let elems = blk.m.numel() + if refresh { dense } else { 0 };
+                    SyncItem {
+                        block: b,
+                        class: self.classes[b],
+                        bytes: elems * crate::comm::BYTES_F32,
+                        refresh,
+                    }
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

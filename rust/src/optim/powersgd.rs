@@ -5,7 +5,7 @@
 //! error feedback: per step synchronize P = (G+E)Q (m×r) and
 //! Q' = (G+E)ᵀP̂ (n×r); comm O(r(m+n)) — Table 1's LoRA-like scaling row.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::{matmul, matmul_nt, matmul_tn, orth, Matrix};
 use crate::model::BlockSpec;
@@ -85,10 +85,7 @@ impl DistOptimizer for PowerSgd {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     st.update(&mut ctx.params[b], &per_worker[0], &self.hyper, ctx.lr_mult, t1);
                 }
                 BlockState::Compressed(blk) => {
@@ -105,17 +102,12 @@ impl DistOptimizer for PowerSgd {
                         .collect();
                     // P_i = X_i Q ; all-reduce; orthonormalize.
                     let mut ps: Vec<Matrix> = comp.iter().map(|x| matmul(x, &blk.q)).collect();
-                    collective::ring_allreduce_mean(&mut ps);
-                    let p_bytes = ps[0].numel() * crate::comm::BYTES_F32;
+                    collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo);
                     let phat = orth(&ps[0]);
                     // Q'_i = X_iᵀ P̂ ; all-reduce.
                     let mut qs: Vec<Matrix> =
                         comp.iter().map(|x| matmul_tn(x, &phat)).collect();
-                    collective::ring_allreduce_mean(&mut qs);
-                    let q_bytes = qs[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, p_bytes + q_bytes);
-                    ctx.ledger
-                        .add_sim_time(ctx.topo.allreduce_time(p_bytes + q_bytes));
+                    collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo);
                     blk.q = qs.swap_remove(0);
 
                     // Decompressed averaged gradient Ĝ = P̂ Qᵀ.
@@ -135,6 +127,31 @@ impl DistOptimizer for PowerSgd {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, _t: u64) -> SyncPlan {
+        // Flat O(r(m+n)) traffic: P (m×r) + Q' (n×r) every step.
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| {
+                let elems = match s {
+                    BlockState::Dense(st) => st.m.numel(),
+                    BlockState::Compressed(blk) => {
+                        let r = blk.q.cols;
+                        blk.momentum.rows * r + blk.q.rows * r
+                    }
+                };
+                SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: elems * crate::comm::BYTES_F32,
+                    refresh: false,
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

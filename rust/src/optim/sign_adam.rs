@@ -15,7 +15,7 @@
 //! both sides meter [`sign_payload_bytes`] per matrix block per step and
 //! the full dense block every `k_var` steps.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
@@ -96,10 +96,7 @@ impl DistOptimizer for SignAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
                 }
                 BlockState::Sign(blk) => {
@@ -110,10 +107,7 @@ impl DistOptimizer for SignAdam {
                     if t % self.k_var as u64 == 0 {
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
-                        collective::ring_allreduce_mean(&mut dense);
-                        let bytes = dense[0].numel() * crate::comm::BYTES_F32;
-                        ctx.ledger.record_bytes(class, bytes);
-                        ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo);
                         ctx.ledger.mark_refresh();
                         blk.tv += 1;
                         let b2 = h.beta2;
@@ -147,6 +141,7 @@ impl DistOptimizer for SignAdam {
                     ghat.scale(1.0 / workers as f32);
                     let bytes = sign_payload_bytes(ghat.numel());
                     ctx.ledger.record_bytes(class, bytes);
+                    collective::record_virtual_sync(workers, bytes, ctx.ledger, ctx.topo);
                     ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
 
                     // Adam update: fresh momentum, frozen variance.
@@ -165,6 +160,38 @@ impl DistOptimizer for SignAdam {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| match s {
+                BlockState::Dense(st) => SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    refresh: false,
+                },
+                BlockState::Sign(blk) => {
+                    let refresh = t % self.k_var as u64 == 0;
+                    let numel = blk.m.numel();
+                    let dense = if refresh {
+                        numel * crate::comm::BYTES_F32
+                    } else {
+                        0
+                    };
+                    SyncItem {
+                        block: b,
+                        class: self.classes[b],
+                        bytes: sign_payload_bytes(numel) + dense,
+                        refresh,
+                    }
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

@@ -14,7 +14,7 @@
 //! Byte accounting is exact and mirrors `exp::analytic::topk_profile`:
 //! both sides derive k from [`topk_elems`] on the same block shapes.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
@@ -94,10 +94,7 @@ impl DistOptimizer for TopKAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
                 }
                 BlockState::Sparse(blk) => {
@@ -129,6 +126,7 @@ impl DistOptimizer for TopKAdam {
                     ghat.scale(1.0 / workers as f32);
                     let bytes = topk_payload_bytes(blk.k);
                     ctx.ledger.record_bytes(class, bytes);
+                    collective::record_virtual_sync(workers, bytes, ctx.ledger, ctx.topo);
                     ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
 
                     blk.state
@@ -136,6 +134,28 @@ impl DistOptimizer for TopKAdam {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, _t: u64) -> SyncPlan {
+        // Perfectly flat: 8·k bytes per matrix block, dense vectors.
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| {
+                let bytes = match s {
+                    BlockState::Dense(st) => st.m.numel() * crate::comm::BYTES_F32,
+                    BlockState::Sparse(blk) => topk_payload_bytes(blk.k),
+                };
+                SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes,
+                    refresh: false,
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

@@ -8,7 +8,7 @@
 //! Embedding blocks use their own (r_emb, K_emb) (§3.6). Vector blocks
 //! (biases/norms) are synchronized and updated densely (§3.4).
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx};
+use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::{matmul, matmul_tn, matrix::Matrix, orth, svd_gram};
 use crate::linalg::matmul::{core_project, lift};
@@ -170,11 +170,8 @@ impl TsrAdam {
             .collect();
 
         // All-reduce the two sketches — the ONLY refresh communication.
-        collective::ring_allreduce_mean(&mut bs);
-        collective::ring_allreduce_mean(&mut qs);
-        let sketch_bytes = (bs[0].numel() + qs[0].numel()) * crate::comm::BYTES_F32;
-        ctx_ledger.record_bytes(class, sketch_bytes);
-        ctx_ledger.add_sim_time(topo.allreduce_time(sketch_bytes));
+        collective::sync_mean(&mut bs, class, ctx_ledger, topo);
+        collective::sync_mean(&mut qs, class, ctx_ledger, topo);
         ctx_ledger.mark_refresh();
 
         let mut qbar = qs.swap_remove(0);
@@ -201,10 +198,7 @@ impl TsrAdam {
     ) {
         blk.refresh_count += 1;
         let mut dense: Vec<Matrix> = grads.iter().map(|g| (*g).clone()).collect();
-        collective::ring_allreduce_mean(&mut dense);
-        let bytes = dense[0].numel() * crate::comm::BYTES_F32;
-        ctx_ledger.record_bytes(class, bytes);
-        ctx_ledger.add_sim_time(topo.allreduce_time(bytes));
+        collective::sync_mean(&mut dense, class, ctx_ledger, topo);
         ctx_ledger.mark_refresh();
         let out = crate::linalg::svd_truncated(&dense[0], blk.rank);
         blk.u = out.u;
@@ -232,10 +226,7 @@ impl DistOptimizer for TsrAdam {
                     // §3.4: non-matrix parameters sync dense.
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
                 }
                 BlockState::LowRank(blk) => {
@@ -269,10 +260,7 @@ impl DistOptimizer for TsrAdam {
                         .iter()
                         .map(|g| core_project(&blk.u, g, &blk.v))
                         .collect();
-                    collective::ring_allreduce_mean(&mut cores);
-                    let core_bytes = cores[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, core_bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(core_bytes));
+                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo);
                     let cbar = &cores[0];
 
                     // AdamW in core space (§3.4).
@@ -301,6 +289,43 @@ impl DistOptimizer for TsrAdam {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| match s {
+                BlockState::Dense(st) => SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    refresh: false,
+                },
+                BlockState::LowRank(blk) => {
+                    let refresh = t % blk.refresh_every as u64 == 0;
+                    let (m, n) = (blk.u.rows, blk.v.rows);
+                    let extra = if !refresh {
+                        0
+                    } else {
+                        match self.cfg.refresh_kind {
+                            // Sketches Q̄ (m×k) + B̄ (k×n).
+                            RefreshKind::Randomized => m * blk.k + blk.k * n,
+                            // Full dense gradient for the exact SVD.
+                            RefreshKind::ExactDense => m * n,
+                        }
+                    };
+                    SyncItem {
+                        block: b,
+                        class: self.classes[b],
+                        bytes: (blk.rank * blk.rank + extra) * crate::comm::BYTES_F32,
+                        refresh,
+                    }
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

@@ -7,7 +7,7 @@
 //! which empirically checks the T^{−1/3} stationarity decay.
 
 use super::tsr::TsrConfig;
-use super::{DistOptimizer, StepCtx};
+use super::{DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::matmul::{core_project, lift};
 use crate::linalg::{matmul, matmul_tn, orth, svd_gram, Matrix};
@@ -102,10 +102,7 @@ impl DistOptimizer for TsrSgd {
                 BlockState::Dense { m } => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::ring_allreduce_mean(&mut per_worker);
-                    let bytes = per_worker[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
                     let g = &per_worker[0];
                     for i in 0..m.data.len() {
                         m.data[i] = beta * m.data[i] + (1.0 - beta) * g.data[i];
@@ -145,12 +142,8 @@ impl DistOptimizer for TsrSgd {
                             .zip(grads_b.iter())
                             .map(|(q, g)| matmul_tn(q, g))
                             .collect();
-                        collective::ring_allreduce_mean(&mut bs);
-                        collective::ring_allreduce_mean(&mut qs);
-                        let bytes =
-                            (bs[0].numel() + qs[0].numel()) * crate::comm::BYTES_F32;
-                        ctx.ledger.record_bytes(class, bytes);
-                        ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                        collective::sync_mean(&mut bs, class, ctx.ledger, ctx.topo);
+                        collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo);
                         ctx.ledger.mark_refresh();
                         let mut qbar = qs.swap_remove(0);
                         if self.cfg.reorth_qbar {
@@ -177,10 +170,7 @@ impl DistOptimizer for TsrSgd {
                         .iter()
                         .map(|g| core_project(&blk.u, g, &blk.v))
                         .collect();
-                    collective::ring_allreduce_mean(&mut cores);
-                    let bytes = cores[0].numel() * crate::comm::BYTES_F32;
-                    ctx.ledger.record_bytes(class, bytes);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo);
                     let cbar = &cores[0];
 
                     for i in 0..blk.m.data.len() {
@@ -194,6 +184,36 @@ impl DistOptimizer for TsrSgd {
                 }
             }
         }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        // Same schedule as TSR-Adam's randomized path: r×r core each
+        // step, sketches Q̄ + B̄ on refresh steps.
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| match s {
+                BlockState::Dense { m } => SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: m.numel() * crate::comm::BYTES_F32,
+                    refresh: false,
+                },
+                BlockState::LowRank(blk) => {
+                    let refresh = t % blk.refresh_every as u64 == 0;
+                    let (m, n) = (blk.u.rows, blk.v.rows);
+                    let extra = if refresh { m * blk.k + blk.k * n } else { 0 };
+                    SyncItem {
+                        block: b,
+                        class: self.classes[b],
+                        bytes: (blk.rank * blk.rank + extra) * crate::comm::BYTES_F32,
+                        refresh,
+                    }
+                }
+            })
+            .collect();
+        SyncPlan { items }
     }
 
     fn state_elements(&self) -> usize {

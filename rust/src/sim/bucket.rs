@@ -1,0 +1,143 @@
+//! Gradient bucketing (PyTorch-DDP style).
+//!
+//! Small per-block collectives are latency-bound — exactly the paper's
+//! r×r core regime, where the α term dominates and halving bytes barely
+//! changes the time. Data-parallel frameworks therefore fuse per-block
+//! payloads into fixed-capacity buckets and launch one collective per
+//! bucket, in the order gradients become ready during the backward pass
+//! (reverse forward order).
+
+use crate::optim::SyncPlan;
+
+/// One fused collective: a contiguous run of blocks in gradient-ready
+/// order, carrying their combined payload.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    /// Block indices (forward-order ids) in the order they become ready.
+    pub blocks: Vec<usize>,
+    /// Fused payload bytes.
+    pub bytes: usize,
+}
+
+/// A step's bucket schedule for one method.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+    pub cap_bytes: usize,
+}
+
+impl BucketPlan {
+    /// Fuse `plan`'s per-block payloads into buckets of at most
+    /// `cap_bytes`, walking blocks in reverse forward order (the order
+    /// the backward pass produces gradients). A single block larger than
+    /// the capacity gets a bucket of its own; zero-byte items ride along
+    /// with their neighbours. `cap_bytes == 0` disables fusion (one
+    /// bucket per block).
+    pub fn build(plan: &SyncPlan, cap_bytes: usize) -> Self {
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut current = Bucket {
+            blocks: Vec::new(),
+            bytes: 0,
+        };
+        for item in plan.items.iter().rev() {
+            let overflows = !current.blocks.is_empty()
+                && (cap_bytes == 0 || current.bytes + item.bytes > cap_bytes);
+            if overflows {
+                buckets.push(std::mem::replace(
+                    &mut current,
+                    Bucket {
+                        blocks: Vec::new(),
+                        bytes: 0,
+                    },
+                ));
+            }
+            current.blocks.push(item.block);
+            current.bytes += item.bytes;
+        }
+        if !current.blocks.is_empty() {
+            buckets.push(current);
+        }
+        Self { buckets, cap_bytes }
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LayerClass;
+    use crate::optim::SyncItem;
+
+    fn plan(bytes: &[usize]) -> SyncPlan {
+        SyncPlan {
+            items: bytes
+                .iter()
+                .enumerate()
+                .map(|(b, &n)| SyncItem {
+                    block: b,
+                    class: LayerClass::Linear,
+                    bytes: n,
+                    refresh: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn fuses_in_reverse_order_up_to_capacity() {
+        let p = plan(&[100, 200, 300, 50]);
+        let bp = BucketPlan::build(&p, 400);
+        // Reverse order: 50, 300 (fits: 350), then 200, 100 (300).
+        assert_eq!(bp.len(), 2);
+        assert_eq!(bp.buckets[0].blocks, vec![3, 2]);
+        assert_eq!(bp.buckets[0].bytes, 350);
+        assert_eq!(bp.buckets[1].blocks, vec![1, 0]);
+        assert_eq!(bp.buckets[1].bytes, 300);
+        assert_eq!(bp.total_bytes(), 650);
+    }
+
+    #[test]
+    fn oversized_block_gets_own_bucket() {
+        let p = plan(&[10, 5000, 10]);
+        let bp = BucketPlan::build(&p, 100);
+        assert_eq!(bp.len(), 3);
+        assert_eq!(bp.buckets[1].blocks, vec![1]);
+        assert_eq!(bp.buckets[1].bytes, 5000);
+    }
+
+    #[test]
+    fn zero_capacity_disables_fusion() {
+        let p = plan(&[1, 2, 3]);
+        let bp = BucketPlan::build(&p, 0);
+        assert_eq!(bp.len(), 3);
+    }
+
+    #[test]
+    fn every_block_appears_exactly_once() {
+        let p = plan(&[7; 13]);
+        let bp = BucketPlan::build(&p, 20);
+        let mut seen: Vec<usize> = bp.buckets.iter().flat_map(|b| b.blocks.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..13).collect::<Vec<_>>());
+        assert_eq!(bp.total_bytes(), 7 * 13);
+    }
+
+    #[test]
+    fn huge_capacity_gives_single_bucket() {
+        let p = plan(&[10, 20, 30]);
+        let bp = BucketPlan::build(&p, usize::MAX);
+        assert_eq!(bp.len(), 1);
+        assert_eq!(bp.buckets[0].bytes, 60);
+    }
+}

@@ -1,0 +1,364 @@
+//! Discrete-event step-time engine.
+//!
+//! Simulates one training step as two interleaved timelines:
+//!
+//! * **compute** — the backward pass produces block gradients in reverse
+//!   forward order; block `b`'s gradient costs `4·numel·tokens / flops`
+//!   seconds (two GEMMs — grad-input and grad-weight — at 2·mn FLOPs per
+//!   token each);
+//! * **communication** — a single in-order stream (NCCL semantics)
+//!   drains buckets as they become ready. A bucket is ready when the
+//!   last of its blocks has a gradient; its collective costs the
+//!   two-level α–β time of [`collective_secs`].
+//!
+//! With overlap on, bucket `i` starts at `max(ready_i, end_{i−1})`;
+//! exposed communication is whatever the step spends past the end of
+//! backward compute. With overlap off, all communication serializes
+//! after compute — the classic no-overlap model, and the configuration
+//! in which the engine reproduces `Topology::allreduce_time` exactly
+//! (the documented closed-form oracle; see `tests/sim_engine.rs`).
+
+use crate::comm::Topology;
+use crate::model::BlockSpec;
+use crate::optim::{DistOptimizer, SyncPlan};
+use crate::sim::bucket::BucketPlan;
+
+/// Engine configuration: cluster compute rate + bucketing + toggles.
+#[derive(Clone, Debug)]
+pub struct SimCfg {
+    /// Bucket capacity in bytes (PyTorch DDP defaults to 25 MiB).
+    pub bucket_bytes: usize,
+    /// Per-worker accelerator throughput for the backward pass, FLOP/s.
+    pub flops: f64,
+    /// Tokens per worker per step (micro-batch × sequence length).
+    pub tokens_per_step: usize,
+    /// Overlap bucket communication with backward compute.
+    pub overlap: bool,
+    /// Use the two-level hierarchical collective schedule (flat ring
+    /// otherwise).
+    pub hierarchical: bool,
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        Self {
+            bucket_bytes: 25 << 20,
+            flops: 312e12, // A100 bf16 peak
+            tokens_per_step: 8192,
+            overlap: true,
+            hierarchical: true,
+        }
+    }
+}
+
+/// Timings of one simulated step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTimeline {
+    /// End of the backward pass.
+    pub compute_secs: f64,
+    /// Total time the comm stream is busy.
+    pub comm_busy_secs: f64,
+    /// Communication not hidden behind compute: `step − compute`.
+    pub exposed_comm_secs: f64,
+    /// Predicted step wall-clock.
+    pub step_secs: f64,
+    /// Fraction of comm-busy time hidden behind compute.
+    pub overlap_frac: f64,
+    pub buckets: usize,
+}
+
+/// Backward-compute seconds for one block.
+pub fn backward_secs(block: &BlockSpec, cfg: &SimCfg) -> f64 {
+    4.0 * block.numel() as f64 * cfg.tokens_per_step as f64 / cfg.flops
+}
+
+/// α–β seconds for one all-reduce of `bytes` over the cluster.
+///
+/// Flat (single-level) topologies use `Topology::allreduce_time`
+/// verbatim — that closed form is the degenerate-case oracle. A genuine
+/// two-level shape pays three phases: intra-node reduce-scatter, the
+/// cross-node ring over each node's chunk, and the intra-node
+/// all-gather/broadcast.
+///
+/// Rail assumption: the `g` per-chunk cross-node rings are modeled as
+/// concurrent, i.e. `inter_bw` is per-GPU-rail bandwidth (DGX-style
+/// multi-NIC nodes, one rail per local rank). On a single-NIC node the
+/// rings share the link and the inter term is ~g× larger — which is the
+/// flat-ring figure; compare against `--flat` for that regime.
+pub fn collective_secs(topo: &Topology, cfg: &SimCfg, bytes: usize) -> f64 {
+    let n = topo.nodes;
+    let g = topo.gpus_per_node;
+    if topo.workers() <= 1 {
+        return 0.0;
+    }
+    if !cfg.hierarchical || n <= 1 || g <= 1 {
+        return topo.allreduce_time(bytes);
+    }
+    let b = bytes as f64;
+    let gf = g as f64;
+    let nf = n as f64;
+    // Intra reduce-scatter and all-gather: (g−1)/g · B each way.
+    let intra = 2.0 * ((gf - 1.0) / gf * b / topo.intra_bw + (gf - 1.0) * topo.intra_lat);
+    // Inter ring all-reduce over the per-chunk groups: payload B/g.
+    let inter = 2.0 * (nf - 1.0) / nf * (b / gf) / topo.inter_bw
+        + 2.0 * (nf - 1.0) * topo.inter_lat;
+    intra + inter
+}
+
+/// Simulate one step of `plan` on `topo`.
+pub fn simulate_step(
+    blocks: &[BlockSpec],
+    plan: &SyncPlan,
+    topo: &Topology,
+    cfg: &SimCfg,
+) -> StepTimeline {
+    // Backward compute finishes block-by-block in reverse forward order.
+    let nblocks = blocks.len();
+    let mut compute_end = vec![0.0f64; nblocks];
+    let mut clock = 0.0f64;
+    for b in (0..nblocks).rev() {
+        clock += backward_secs(&blocks[b], cfg);
+        compute_end[b] = clock;
+    }
+    let compute_secs = clock;
+
+    let bp = BucketPlan::build(plan, cfg.bucket_bytes);
+    let mut comm_busy = 0.0f64;
+    let mut stream_free = 0.0f64;
+    let mut last_end = 0.0f64;
+    for bucket in &bp.buckets {
+        let cost = collective_secs(topo, cfg, bucket.bytes);
+        comm_busy += cost;
+        if cfg.overlap {
+            let ready = bucket
+                .blocks
+                .iter()
+                .map(|&b| compute_end[b])
+                .fold(0.0f64, f64::max);
+            let start = ready.max(stream_free);
+            stream_free = start + cost;
+            last_end = stream_free;
+        }
+    }
+    let (step_secs, exposed) = if cfg.overlap {
+        let step = compute_secs.max(last_end);
+        (step, step - compute_secs)
+    } else {
+        // All communication serializes after the backward pass; exposed
+        // is comm_busy itself (kept exact — the oracle-equality test in
+        // tests/sim_engine.rs relies on bit-for-bit f64 agreement).
+        (compute_secs + comm_busy, comm_busy)
+    };
+    let overlap_frac = if comm_busy > 0.0 {
+        (1.0 - exposed / comm_busy).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    StepTimeline {
+        compute_secs,
+        comm_busy_secs: comm_busy,
+        exposed_comm_secs: exposed,
+        step_secs,
+        overlap_frac,
+        buckets: bp.len(),
+    }
+}
+
+/// Averaged timings over a horizon of steps (covers refresh cadences).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MethodTimeline {
+    pub avg_step_secs: f64,
+    pub avg_compute_secs: f64,
+    pub avg_comm_busy_secs: f64,
+    pub avg_exposed_secs: f64,
+    /// Worst single step (the refresh spike).
+    pub peak_step_secs: f64,
+    /// Hidden fraction of all comm-busy time over the horizon.
+    pub overlap_frac: f64,
+    pub avg_payload_bytes: f64,
+}
+
+/// Simulate `steps` consecutive steps of `opt`'s payload schedule and
+/// average. `steps` should cover one refresh period to amortize spikes
+/// the way the byte profiles do.
+pub fn simulate_method(
+    opt: &dyn DistOptimizer,
+    blocks: &[BlockSpec],
+    topo: &Topology,
+    cfg: &SimCfg,
+    steps: usize,
+) -> MethodTimeline {
+    let plans: Vec<SyncPlan> = (0..steps.max(1)).map(|t| opt.sync_plan(t as u64)).collect();
+    simulate_plans(&plans, blocks, topo, cfg)
+}
+
+/// Average a pre-extracted schedule horizon. Schedules depend only on
+/// shapes and cadence, so callers sweeping topologies or link speeds
+/// (e.g. `exp::simtime`) extract them once per method, drop the
+/// optimizer (its moments/error buffers are model-scale), and reuse the
+/// plans across every sweep point.
+pub fn simulate_plans(
+    plans: &[SyncPlan],
+    blocks: &[BlockSpec],
+    topo: &Topology,
+    cfg: &SimCfg,
+) -> MethodTimeline {
+    let steps = plans.len().max(1);
+    let mut out = MethodTimeline::default();
+    let mut busy = 0.0f64;
+    let mut exposed = 0.0f64;
+    for plan in plans {
+        let tl = simulate_step(blocks, plan, topo, cfg);
+        out.avg_step_secs += tl.step_secs;
+        out.avg_compute_secs += tl.compute_secs;
+        out.avg_comm_busy_secs += tl.comm_busy_secs;
+        out.avg_exposed_secs += tl.exposed_comm_secs;
+        out.peak_step_secs = out.peak_step_secs.max(tl.step_secs);
+        out.avg_payload_bytes += plan.total_bytes() as f64;
+        busy += tl.comm_busy_secs;
+        exposed += tl.exposed_comm_secs;
+    }
+    let inv = 1.0 / steps as f64;
+    out.avg_step_secs *= inv;
+    out.avg_compute_secs *= inv;
+    out.avg_comm_busy_secs *= inv;
+    out.avg_exposed_secs *= inv;
+    out.avg_payload_bytes *= inv;
+    out.overlap_frac = if busy > 0.0 {
+        (1.0 - exposed / busy).clamp(0.0, 1.0)
+    } else {
+        0.0
+    };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LayerClass;
+    use crate::optim::SyncItem;
+
+    fn blocks3() -> Vec<BlockSpec> {
+        vec![
+            BlockSpec {
+                name: "emb".into(),
+                rows: 100,
+                cols: 32,
+                class: LayerClass::Embedding,
+            },
+            BlockSpec {
+                name: "w".into(),
+                rows: 32,
+                cols: 64,
+                class: LayerClass::Linear,
+            },
+            BlockSpec {
+                name: "b".into(),
+                rows: 1,
+                cols: 64,
+                class: LayerClass::Vector,
+            },
+        ]
+    }
+
+    fn dense_plan(blocks: &[BlockSpec]) -> SyncPlan {
+        SyncPlan {
+            items: blocks
+                .iter()
+                .enumerate()
+                .map(|(b, s)| SyncItem {
+                    block: b,
+                    class: s.class,
+                    bytes: s.numel() * 4,
+                    refresh: false,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn compute_runs_in_reverse_order() {
+        let blocks = blocks3();
+        let cfg = SimCfg::default();
+        let plan = dense_plan(&blocks);
+        let tl = simulate_step(&blocks, &plan, &Topology::single_node(4), &cfg);
+        let expect: f64 = blocks.iter().map(|b| backward_secs(b, &cfg)).sum();
+        assert!((tl.compute_secs - expect).abs() < 1e-18);
+    }
+
+    #[test]
+    fn overlap_never_slower_and_no_overlap_is_additive() {
+        let blocks = blocks3();
+        let plan = dense_plan(&blocks);
+        let topo = Topology::multi_node(2, 2);
+        let mut cfg = SimCfg {
+            bucket_bytes: 0,
+            ..Default::default()
+        };
+        cfg.overlap = false;
+        let serial = simulate_step(&blocks, &plan, &topo, &cfg);
+        assert_eq!(serial.step_secs, serial.compute_secs + serial.comm_busy_secs);
+        assert_eq!(serial.overlap_frac, 0.0);
+        cfg.overlap = true;
+        let over = simulate_step(&blocks, &plan, &topo, &cfg);
+        assert!(over.step_secs <= serial.step_secs);
+        assert!(over.exposed_comm_secs <= serial.exposed_comm_secs);
+        assert!(over.overlap_frac >= 0.0 && over.overlap_frac <= 1.0);
+    }
+
+    #[test]
+    fn bigger_buckets_amortize_latency() {
+        // Many tiny payloads: fused sync pays α once, unfused pays it
+        // per block — the r×r-core regime effect bucketing exists for.
+        let blocks: Vec<BlockSpec> = (0..40)
+            .map(|i| BlockSpec {
+                name: format!("w{i}"),
+                rows: 4,
+                cols: 4,
+                class: LayerClass::Linear,
+            })
+            .collect();
+        let plan = dense_plan(&blocks);
+        let topo = Topology::multi_node(4, 2);
+        let base = SimCfg {
+            overlap: false,
+            ..Default::default()
+        };
+        let unfused = simulate_step(
+            &blocks,
+            &plan,
+            &topo,
+            &SimCfg {
+                bucket_bytes: 0,
+                ..base.clone()
+            },
+        );
+        let fused = simulate_step(&blocks, &plan, &topo, &base);
+        assert_eq!(fused.buckets, 1);
+        assert_eq!(unfused.buckets, 40);
+        assert!(
+            fused.comm_busy_secs < 0.5 * unfused.comm_busy_secs,
+            "{} vs {}",
+            fused.comm_busy_secs,
+            unfused.comm_busy_secs
+        );
+    }
+
+    #[test]
+    fn hierarchical_beats_flat_ring_on_slow_inter_links() {
+        // 2(N−1)/N of the payload over the slow link (flat) vs only
+        // 2(n−1)/n of a 1/g chunk (hierarchical).
+        let topo = Topology::multi_node(4, 8);
+        let bytes = 64 << 20;
+        let hier = collective_secs(&topo, &SimCfg::default(), bytes);
+        let flat = collective_secs(
+            &topo,
+            &SimCfg {
+                hierarchical: false,
+                ..Default::default()
+            },
+            bytes,
+        );
+        assert!(hier < flat, "{hier} vs {flat}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Discrete-event cluster simulator: from bytes to step time.
+//!
+//! The byte ledger (`comm/accounting`) answers *how much* each method
+//! synchronizes; this subsystem answers *how long a training step takes*
+//! on a two-level cluster, which is what the paper's motivation is
+//! actually about — on NVLink-vs-PCIe hierarchies the slow link
+//! dominates step time, and in the r×r core regime latency (α) matters
+//! as much as bandwidth (β).
+//!
+//! Three pieces:
+//!
+//! * [`bucket`] — PyTorch-DDP-style gradient bucketing: per-block
+//!   payloads from an optimizer's [`SyncPlan`](crate::optim::SyncPlan)
+//!   are fused, in gradient-ready (reverse forward) order, into
+//!   configurable-size buckets so α is paid once per bucket instead of
+//!   once per block.
+//! * [`engine`] — the event timeline: backward compute produces block
+//!   gradients in reverse order while a single in-order communication
+//!   stream drains ready buckets through per-link α–β channels
+//!   (hierarchical reduce-scatter → leader ring → broadcast). Reports
+//!   predicted step time, exposed (non-overlapped) communication, and
+//!   the overlap fraction.
+//! * the closed-form `Topology::allreduce_time` remains the documented
+//!   degenerate-case oracle: flat ring + single bucket + no overlap
+//!   reproduces it exactly (`tests/sim_engine.rs`).
+//!
+//! Surfaced as the `tsr simtime` CLI experiment (`exp::simtime`), the
+//! `sim_step` bench, and `Trainer`'s optional per-run time prediction.
+
+pub mod bucket;
+pub mod engine;
+
+pub use bucket::{Bucket, BucketPlan};
+pub use engine::{
+    simulate_method, simulate_plans, simulate_step, MethodTimeline, SimCfg, StepTimeline,
+};

@@ -11,6 +11,7 @@ use crate::linalg::Matrix;
 use crate::metrics::RunMetrics;
 use crate::model::BlockSpec;
 use crate::optim::{DistOptimizer, LrSchedule, StepCtx};
+use crate::sim::{engine, SimCfg};
 use std::time::Instant;
 
 /// Anything that can produce per-worker gradients for the current params.
@@ -31,6 +32,10 @@ pub struct Trainer {
     pub schedule: LrSchedule,
     pub log_every: usize,
     pub verbose: bool,
+    /// When set, each step's payload schedule is also run through the
+    /// discrete-event engine, accumulating predicted step time and
+    /// exposed-communication time into the run metrics.
+    pub sim: Option<SimCfg>,
 }
 
 impl Trainer {
@@ -40,6 +45,7 @@ impl Trainer {
             schedule,
             log_every: 50,
             verbose: false,
+            sim: None,
         }
     }
 
@@ -69,6 +75,13 @@ impl Trainer {
             opt.step(&mut ctx);
             let dt = t0.elapsed().as_secs_f64();
             ledger.end_step();
+
+            if let Some(cfg) = &self.sim {
+                let plan = opt.sync_plan(t as u64);
+                let tl = engine::simulate_step(source.blocks(), &plan, &self.topo, cfg);
+                metrics.predicted_step_secs += tl.step_secs;
+                metrics.exposed_comm_secs += tl.exposed_comm_secs;
+            }
 
             metrics.loss.push(loss);
             metrics.step_secs.push(dt);

@@ -3,7 +3,7 @@
 //! across multi-node topology shapes.
 
 use tsr::comm::{
-    collective, ring_volume_bytes, CommLedger, LayerClass, Topology, BYTES_F32,
+    collective, hier_volume_bytes, ring_volume_bytes, CommLedger, LayerClass, Topology, BYTES_F32,
 };
 use tsr::linalg::Matrix;
 use tsr::util::prop;
@@ -97,6 +97,68 @@ fn ring_volume_approaches_twice_payload() {
     }
     // At w=64: 2·63/64 ≈ 1.97× payload.
     assert!(last as f64 > 1.9 * payload as f64);
+}
+
+/// `ring_volume_bytes` is computed from actual chunk boundaries: for a
+/// ragged payload the busiest worker moves more than the truncating
+/// 2(w−1)/w closed form admits. Regression for the integer-division
+/// rounding bug (numel % n != 0 truncated before the ×4).
+#[test]
+fn ring_volume_ragged_payload_counts_real_chunks() {
+    // numel=10, n=3 → chunks 3,3,4; busiest worker: 2·10 − 3 − 3 = 14.
+    assert_eq!(ring_volume_bytes(10, 3), 14 * BYTES_F32);
+    let old_truncating = 2 * (3 - 1) * 10 / 3 * BYTES_F32;
+    assert!(ring_volume_bytes(10, 3) > old_truncating);
+    // The collective reports the boundary-exact figure.
+    let mut rng = Xoshiro256::new(5);
+    let mut ws: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(2, 5, 1.0, &mut rng)).collect();
+    assert_eq!(collective::ring_allreduce_mean(&mut ws), 14 * BYTES_F32);
+    // Divisible payloads still match the closed form exactly.
+    assert_eq!(ring_volume_bytes(12, 3), 2 * 2 * 12 / 3 * BYTES_F32);
+}
+
+/// The hierarchical collective matches the direct-mean oracle across
+/// `Topology::multi_node` shapes, and its metered intra/inter bytes
+/// match the closed-form per-level 2(w−1)/w decomposition — summing to
+/// the flat ring's aggregate volume (the hierarchy re-routes bytes, it
+/// does not add any).
+#[test]
+fn hierarchical_allreduce_matches_oracle_and_level_decomposition() {
+    let shapes = [(1usize, 4usize), (2, 2), (2, 4), (3, 2), (4, 4), (4, 1)];
+    let mut rng = Xoshiro256::new(17);
+    for (nodes, gpus) in shapes {
+        let topo = Topology::multi_node(nodes, gpus);
+        let w = topo.workers();
+        for (rows, cols) in [(6, 8), (3, 13)] {
+            let numel = rows * cols;
+            let mut ws: Vec<Matrix> = (0..w)
+                .map(|_| Matrix::gaussian(rows, cols, 1.0, &mut rng))
+                .collect();
+            let mut oracle = ws.clone();
+            let mut ledger = CommLedger::new();
+            collective::sync_mean(&mut ws, LayerClass::Linear, &mut ledger, &topo);
+            ledger.end_step();
+            collective::direct_allreduce_mean(&mut oracle);
+            for (a, b) in ws.iter().zip(&oracle) {
+                assert!(a.dist(b) < 1e-4 * numel as f32, "{nodes}x{gpus} {rows}x{cols}");
+            }
+            // Per-level closed forms (aggregate over workers):
+            //   intra = 2·nodes·(g−1)·numel·4, inter = 2·(nodes−1)·numel·4.
+            let expect = hier_volume_bytes(numel, nodes, gpus);
+            assert_eq!(ledger.step(0).intra, expect.intra_bytes, "{nodes}x{gpus}");
+            assert_eq!(ledger.step(0).inter, expect.inter_bytes, "{nodes}x{gpus}");
+            // Conservation against the flat ring aggregate 2(N−1)·numel.
+            if w > 1 {
+                assert_eq!(
+                    ledger.step(0).intra + ledger.step(0).inter,
+                    2 * (w - 1) * numel * BYTES_F32,
+                    "{nodes}x{gpus}"
+                );
+            }
+            // Payload metering is untouched by the hierarchy.
+            assert_eq!(ledger.step(0).total, numel * BYTES_F32);
+        }
+    }
 }
 
 /// allreduce_time is consistent with the volume formula: doubling the

@@ -218,6 +218,64 @@ fn qualitative_orderings_hold_end_to_end() {
     }
 }
 
+/// Per-link-class wire metering: on a 2×2 cluster every synchronized
+/// object is moved by the hierarchical collective (or, for the
+/// in-process compressed payloads of Sign/TopK, metered by the matching
+/// virtual sync), so each step's intra/inter wire bytes are exact
+/// multiples of its payload bytes — intra = 2·nodes·(g−1)·payload and
+/// inter = 2·(nodes−1)·payload — and their sum equals the flat ring's
+/// aggregate 2(N−1)·payload. Combined with
+/// `simulated_bytes_match_analytic_profiles`, the per-class split
+/// therefore still sums to the analytic profiles with exact f64
+/// equality.
+#[test]
+fn wire_bytes_decompose_per_level_for_every_method() {
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let k = 5usize;
+    let workers = 4; // == multi_node(2, 2): nodes=2, g=2
+    let cfg = TsrConfig {
+        rank: 8,
+        rank_emb: 6,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 4,
+        ..Default::default()
+    };
+    for m in [
+        MethodCfg::Adam,
+        MethodCfg::Tsr(cfg),
+        MethodCfg::Sign { k_var: k },
+        MethodCfg::TopK { keep_frac: 0.02 },
+    ] {
+        let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
+        let blocks = sim.blocks().to_vec();
+        let mut opt = m.build(&blocks, AdamHyper::default(), workers);
+        let mut params = sim.init_params(1);
+        let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+        let topo = Topology::multi_node(2, 2);
+        let mut ledger = CommLedger::new();
+        for t in 0..k {
+            sim.compute(&params, t, &mut grads);
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+            });
+            ledger.end_step();
+        }
+        for t in 0..k {
+            let s = ledger.step(t);
+            assert_eq!(s.intra, 4 * s.total, "{} step {t}", m.label());
+            assert_eq!(s.inter, 2 * s.total, "{} step {t}", m.label());
+            assert_eq!(s.intra + s.inter, 2 * (workers - 1) * s.total);
+        }
+        let (intra, inter) = ledger.link_totals();
+        assert!(intra > inter, "fast links must carry more wire bytes");
+    }
+}
+
 /// Shared-seed sketches: two workers independently construct Ω for the
 /// same (layer, refresh) stream and must agree bit-for-bit — the
 /// precondition for Algorithm 1's seed-based Ω broadcast elision.
