@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""p50 regression check for BENCH_*.json artifacts.
+
+The bench harness (rust/src/util/bench.rs) reports the *median* (p50)
+seconds-per-op for each benchmark when BENCH_JSON_DIR is set:
+
+    { "bench": "optimizer_step", "stat": "p50",
+      "results": [ {"name": "60m adamw steady step (2w)", "value": 0.0123}, ... ] }
+
+Usage:
+    ci/bench_regression.py --current BENCH_x.json [--baseline old.json]
+                           [--threshold 0.30]
+
+* With a baseline: fail (exit 1) if any benchmark's current p50 exceeds
+  baseline * (1 + threshold). Benchmarks present on only one side are
+  reported but never fail the check (benches come and go).
+* Without a baseline (the default on CI until a baseline artifact is
+  promoted): validate the artifact's shape, print the table, exit 0 —
+  the uploaded JSON is the first point of the perf trajectory.
+
+The default threshold is 30%: shared CI runners are noisy and the smoke
+configuration (BENCH_MS small) takes few samples, so anything tighter
+flakes. Tighten it once a pinned-runner baseline exists.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if "results" not in doc or not isinstance(doc["results"], list):
+        sys.exit(f"{path}: not a bench artifact (missing 'results' list)")
+    out = {}
+    for entry in doc["results"]:
+        if "name" not in entry or "value" not in entry:
+            sys.exit(f"{path}: malformed entry {entry!r}")
+        out[entry["name"]] = float(entry["value"])
+    return doc.get("bench", "?"), out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
+    ap.add_argument("--baseline", help="baseline BENCH_*.json to compare against")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.30,
+        help="allowed p50 regression fraction (default 0.30 = +30%%)",
+    )
+    args = ap.parse_args()
+
+    bench, cur = load(args.current)
+    if not cur:
+        sys.exit(f"{args.current}: empty results")
+    if not args.baseline:
+        print(f"[{bench}] no baseline — artifact validated, {len(cur)} entries:")
+        for name, v in cur.items():
+            print(f"  {name:<50} {v:.6g}")
+        return
+
+    _, base = load(args.baseline)
+    failures = []
+    for name, v in sorted(cur.items()):
+        if name not in base:
+            print(f"  NEW   {name:<50} {v:.6g}")
+            continue
+        b = base[name]
+        ratio = v / b if b > 0 else float("inf")
+        status = "OK"
+        if ratio > 1.0 + args.threshold:
+            status = "REGRESSED"
+            failures.append((name, b, v, ratio))
+        print(f"  {status:<9} {name:<50} {b:.6g} -> {v:.6g}  ({ratio - 1.0:+.1%})")
+    for name in sorted(set(base) - set(cur)):
+        print(f"  GONE  {name}")
+
+    if failures:
+        print(f"\n[{bench}] {len(failures)} benchmark(s) regressed beyond "
+              f"+{args.threshold:.0%} p50 threshold:", file=sys.stderr)
+        for name, b, v, ratio in failures:
+            print(f"  {name}: {b:.6g} -> {v:.6g} ({ratio - 1.0:+.1%})", file=sys.stderr)
+        sys.exit(1)
+    print(f"\n[{bench}] p50 check passed ({len(cur)} benchmarks).")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,9 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
     let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
     sim.compute(&params, 0, &mut grads);
     let topo = Topology::multi_node(2, 1);
+    // Honour TSR_BACKEND so the smoke job can also time the threaded
+    // backend; resolved once, outside the timed loops.
+    let exec = tsr::exec::ExecBackend::from_env();
 
     for (label, cfg) in [
         ("adamw", MethodCfg::Adam),
@@ -64,6 +67,7 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &exec,
         });
         ledger.end_step();
         let refresh_secs = t0.elapsed().as_secs_f64();
@@ -74,6 +78,7 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &exec,
             });
             ledger.end_step();
         });
@@ -112,5 +117,7 @@ fn main() {
             other => eprintln!("skip unknown scale {other}"),
         }
     }
+    // CI bench-smoke artifact (no-op unless BENCH_JSON_DIR is set).
+    b.write_json("optimizer_step");
     println!("\n(1B: run `tsr table3 --timing` — full-scale steps need >16 GB of grads)");
 }

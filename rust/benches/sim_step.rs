@@ -42,4 +42,7 @@ fn main() {
             assert!(tl.step_secs > 0.0);
         });
     }
+
+    // CI bench-smoke artifact (no-op unless BENCH_JSON_DIR is set).
+    b.write_json("sim_step");
 }

@@ -21,6 +21,7 @@
 //! synchronized-object payload per layer class exactly as before.
 
 use crate::comm::{CommLedger, LayerClass, Topology, BYTES_F32};
+use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 
 /// Aggregate wire bytes moved on each link class by one hierarchical
@@ -189,9 +190,13 @@ pub fn hier_volume_bytes(numel: usize, nodes: usize, gpus_per_node: usize) -> Hi
 /// every optimizer synchronizes through.
 ///
 /// * moves the data with [`hier_allreduce_mean`] when the worker count
-///   matches the topology shape (flat ring otherwise),
+///   matches the topology shape (flat ring otherwise) — on the
+///   [`ExecBackend::Threaded`] backend the same schedule runs as a
+///   rendezvous ring over one OS thread per worker
+///   (`exec::threaded::allreduce_mean`), bitwise-identically,
 /// * meters the aggregate wire volume per link class into the ledger's
-///   intra/inter columns,
+///   intra/inter columns (threaded: *measured* from the chunks that
+///   crossed thread boundaries),
 /// * meters the synchronized-object payload under `class` (unchanged
 ///   semantics — the analytic byte profiles stay exact),
 /// * adds the serial α–β time oracle ([`Topology::allreduce_time`]) to
@@ -204,6 +209,7 @@ pub fn sync_mean(
     class: LayerClass,
     ledger: &mut CommLedger,
     topo: &Topology,
+    exec: &ExecBackend,
 ) -> usize {
     let n = workers.len();
     assert!(n > 0);
@@ -211,15 +217,26 @@ pub fn sync_mean(
     let payload = numel * BYTES_F32;
     if n > 1 {
         if n == topo.workers() {
-            let vol = hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node);
+            let vol = if exec.is_threaded() {
+                crate::exec::threaded::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+            } else {
+                hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+            };
             ledger.record_link(vol.intra_bytes, vol.inter_bytes);
         } else {
             // Worker count does not tile the topology: fall back to a
             // flat ring, attributed to the slowest link class it crosses.
             // (Aggregate volume via the shared closed form —
             // ring_allreduce_mean's return is per-worker, not aggregate,
-            // and must not be metered here.)
-            ring_allreduce_mean(workers);
+            // and must not be metered here. The threaded flat ring's
+            // measured total equals the closed form exactly, ragged
+            // payloads included, so both backends meter identically.)
+            if exec.is_threaded() {
+                let measured = crate::exec::threaded::allreduce_mean(workers, 1, n);
+                debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
+            } else {
+                ring_allreduce_mean(workers);
+            }
             let vol = if topo.nodes > 1 {
                 hier_wire_split(payload, n, 1)
             } else {
@@ -493,7 +510,13 @@ mod tests {
         let mut ledger = CommLedger::new();
         let mut rng = Xoshiro256::new(9);
         let mut ws: Vec<Matrix> = (0..4).map(|_| Matrix::gaussian(5, 8, 1.0, &mut rng)).collect();
-        let payload = sync_mean(&mut ws, LayerClass::Linear, &mut ledger, &topo);
+        let payload = sync_mean(
+            &mut ws,
+            LayerClass::Linear,
+            &mut ledger,
+            &topo,
+            &ExecBackend::Sequential,
+        );
         ledger.end_step();
         assert_eq!(payload, 40 * 4);
         assert_eq!(ledger.step(0).total, 40 * 4);
@@ -511,13 +534,46 @@ mod tests {
         let mut rng = Xoshiro256::new(10);
         let mut ws: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(4, 4, 1.0, &mut rng)).collect();
         let mut oracle = ws.clone();
-        sync_mean(&mut ws, LayerClass::Vector, &mut ledger, &topo);
+        sync_mean(
+            &mut ws,
+            LayerClass::Vector,
+            &mut ledger,
+            &topo,
+            &ExecBackend::Sequential,
+        );
         direct_allreduce_mean(&mut oracle);
         ledger.end_step();
         assert_eq!(ledger.step(0).intra, 0);
         assert_eq!(ledger.step(0).inter, 2 * 2 * 16 * 4);
         for (a, b) in ws.iter().zip(&oracle) {
             assert!(a.dist(b) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sync_mean_ledger_columns_are_backend_invariant() {
+        // Both the matched-shape hierarchical path and the flat-ring
+        // fallback must meter identical intra/inter columns on either
+        // backend, and produce bitwise-identical buffers.
+        for workers in [4usize, 3] {
+            let topo = Topology::multi_node(2, 2);
+            let mut rng = Xoshiro256::new(17);
+            let ws0: Vec<Matrix> = (0..workers)
+                .map(|_| Matrix::gaussian(3, 7, 1.0, &mut rng))
+                .collect();
+            let mut runs = Vec::new();
+            for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+                let mut ws = ws0.clone();
+                let mut ledger = CommLedger::new();
+                sync_mean(&mut ws, LayerClass::Linear, &mut ledger, &topo, &exec);
+                ledger.end_step();
+                let bits: Vec<Vec<u32>> = ws
+                    .iter()
+                    .map(|w| w.data.iter().map(|v| v.to_bits()).collect())
+                    .collect();
+                runs.push((bits, ledger.step(0).intra, ledger.step(0).inter));
+            }
+            assert_eq!(runs[0], runs[1], "workers={workers}");
         }
     }
 }

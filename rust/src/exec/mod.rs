@@ -1,0 +1,144 @@
+//! Execution backends: how the simulated data-parallel worker group
+//! actually runs on this host (DESIGN.md §8).
+//!
+//! Two backends implement the same step semantics:
+//!
+//! * [`ExecBackend::Sequential`] — the original in-place loop: one OS
+//!   thread iterates workers and moves collective chunks between their
+//!   buffers directly. Cheap, allocation-free, and the reference
+//!   implementation for every numeric contract in the test suite.
+//! * [`ExecBackend::Threaded`] — one OS thread per simulated worker.
+//!   Each thread owns its worker's gradient shard; collectives are a
+//!   real rendezvous ring over shared-memory chunks with a barrier per
+//!   ring step ([`threaded`]), so the `CommLedger`'s intra/inter wire
+//!   columns are metered from bytes that genuinely crossed a thread
+//!   boundary. The backend also shards the dense-Adam moment update and
+//!   fans the per-worker rSVD sketch / projection work out over threads,
+//!   which is what makes it faster wall-clock on multi-core hosts.
+//!
+//! **Determinism contract.** For any method, topology, and seed, both
+//! backends produce bitwise-identical weights and identical ledger byte
+//! columns. The threaded rings replay the sequential schedule exactly —
+//! the chunk a worker reduces at ring step `s` is fixed by `(position,
+//! s)`, each element receives its additions in the same order, and a
+//! barrier separates steps — so no atomics-order nondeterminism can
+//! creep into the f32 sums. Elementwise shards (dense Adam) and
+//! per-worker fan-outs (sketches, core projections) are trivially
+//! order-free. `tests/exec_parity.rs` enforces this for all seven
+//! optimizers; CI diffs two full `tsr train` runs byte-for-byte.
+
+pub mod threaded;
+
+/// Which execution engine drives collectives and hot-path loops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// Single-threaded in-place reference loop.
+    #[default]
+    Sequential,
+    /// One OS thread per simulated worker for collectives; up to
+    /// `threads` OS threads for elementwise / per-worker fan-out work.
+    Threaded { threads: usize },
+}
+
+impl ExecBackend {
+    /// Threaded backend sized to this host's available parallelism.
+    pub fn threaded() -> Self {
+        Self::Threaded {
+            threads: crate::util::pool::default_threads(),
+        }
+    }
+
+    /// Parse a CLI/env backend name (`sequential` | `threaded`).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name.trim() {
+            "sequential" | "seq" => Some(Self::Sequential),
+            "threaded" | "thread" => Some(Self::threaded()),
+            _ => None,
+        }
+    }
+
+    /// Backend selected by the `TSR_BACKEND` environment variable
+    /// (default `sequential`). CI runs the whole test suite once with
+    /// `TSR_BACKEND=threaded` to exercise the threaded paths everywhere
+    /// a `Trainer` or experiment driver is constructed.
+    pub fn from_env() -> Self {
+        std::env::var("TSR_BACKEND")
+            .ok()
+            .and_then(|v| Self::parse(&v))
+            .unwrap_or(Self::Sequential)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sequential => "sequential",
+            Self::Threaded { .. } => "threaded",
+        }
+    }
+
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, Self::Threaded { .. })
+    }
+
+    /// Worker-thread budget for elementwise shards and fan-outs (1 for
+    /// the sequential backend).
+    pub fn threads(&self) -> usize {
+        match self {
+            Self::Sequential => 1,
+            Self::Threaded { threads } => (*threads).max(1),
+        }
+    }
+
+    /// Map `f` over `0..n` (one simulated worker each), collecting
+    /// results in index order. Threaded: real OS threads via the scoped
+    /// pool. The results are bitwise backend-independent because each
+    /// index's computation touches only its own inputs.
+    pub fn map_workers<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+        match self {
+            Self::Sequential => (0..n).map(f).collect(),
+            Self::Threaded { threads } => crate::util::pool::parallel_map(n, (*threads).max(1), f),
+        }
+    }
+}
+
+/// Contiguous shard boundaries `c·len/shards` for `c = 0..=shards` —
+/// the same splitting rule the ring collectives use for chunks, so
+/// shard sizes differ by at most one element for ragged `len`.
+pub fn shard_bounds(len: usize, shards: usize) -> Vec<usize> {
+    let s = shards.max(1);
+    (0..=s).map(|c| c * len / s).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        assert_eq!(ExecBackend::parse("sequential"), Some(ExecBackend::Sequential));
+        assert!(ExecBackend::parse("threaded").unwrap().is_threaded());
+        assert_eq!(ExecBackend::parse("gpu"), None);
+        assert_eq!(ExecBackend::Sequential.name(), "sequential");
+        assert_eq!(ExecBackend::threaded().name(), "threaded");
+        assert_eq!(ExecBackend::Sequential.threads(), 1);
+        assert!(ExecBackend::threaded().threads() >= 1);
+    }
+
+    #[test]
+    fn map_workers_matches_serial_map() {
+        let serial = ExecBackend::Sequential.map_workers(13, |i| i * i);
+        let par = ExecBackend::Threaded { threads: 4 }.map_workers(13, |i| i * i);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn shard_bounds_cover_range_exactly() {
+        for (len, s) in [(10usize, 3usize), (0, 4), (7, 7), (100, 1), (5, 9)] {
+            let b = shard_bounds(len, s);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), len);
+            for w in b.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+}

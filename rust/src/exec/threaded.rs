@@ -1,0 +1,320 @@
+//! Rendezvous ring collectives over real OS threads.
+//!
+//! One thread per simulated worker; each thread owns its worker's
+//! buffer. A ring step is a *pull*: every thread reads the chunk its
+//! ring predecessor is sending and reduces (or copies) it into its own
+//! buffer, then all threads meet at a [`Barrier`] before the next step.
+//! The chunk schedule is exactly the sequential one in
+//! `comm::collective` — position `i` sends chunk `(i − s) mod m` at
+//! reduce-scatter step `s` and chunk `(i + 1 − s) mod m` at all-gather
+//! step `s` — so every buffer element receives the same additions in
+//! the same order as the sequential backend and the result is bitwise
+//! identical (see the determinism contract in [`super`]).
+//!
+//! Safety model: threads address each other's buffers through raw
+//! pointers, but within any barrier-delimited step each buffer is
+//! written only by its owner (the chunk it receives) and read only at a
+//! *different* chunk (the one it sends) — ranges are disjoint, and the
+//! barrier's happens-before edge publishes each step's writes to the
+//! next step's readers. No locks, no atomics on the data path.
+//!
+//! Wire metering is *measured*, not computed: each thread counts the
+//! bytes it actually pulled across the thread boundary, and the summed
+//! counters are what `sync_mean` records in the ledger's intra/inter
+//! columns. `hier_volume_matches_sequential_closed_form` (below) and
+//! `tests/exec_parity.rs` pin these measurements to the analytic
+//! `2(w−1)/w` decomposition.
+
+use crate::comm::collective::HierVolume;
+use crate::comm::BYTES_F32;
+use crate::linalg::Matrix;
+use std::sync::Barrier;
+
+/// Per-worker base pointers into the (equally shaped) worker buffers.
+struct SharedBufs {
+    ptrs: Vec<*mut f32>,
+    numel: usize,
+}
+
+// SAFETY: the raw pointers are only dereferenced under the disjointness
+// discipline described in the module docs; the barrier provides the
+// required happens-before edges between steps.
+unsafe impl Sync for SharedBufs {}
+
+/// Chunk boundaries `lo + c·(hi−lo)/m` for `c = 0..=m` — the single
+/// splitting rule every ring in this module uses. Must stay identical
+/// to the boundaries in `comm::collective`'s sequential primitives (the
+/// parity suite pins the two implementations to each other).
+fn chunk_starts(lo: usize, hi: usize, m: usize) -> Vec<usize> {
+    let len = hi - lo;
+    (0..=m).map(|c| lo + c * len / m).collect()
+}
+
+/// Two-level hierarchical all-reduce (average) run by one OS thread per
+/// worker. Same layout contract as `collective::hier_allreduce_mean`:
+/// worker `w` lives on node `w / gpus_per_node`. Degenerate shapes
+/// (`nodes == 1` or `gpus_per_node == 1`) collapse to a flat ring on
+/// the corresponding link class, exactly like the sequential schedule.
+///
+/// Returns the aggregate wire bytes per link class, measured from the
+/// chunks each thread pulled from its ring predecessor.
+pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize) -> HierVolume {
+    let n = workers.len();
+    assert!(n > 0);
+    assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
+    let numel = workers[0].numel();
+    for w in workers.iter() {
+        assert_eq!(w.numel(), numel, "ragged all-reduce");
+    }
+    if n == 1 {
+        return HierVolume::default();
+    }
+    let bufs = SharedBufs {
+        ptrs: workers.iter_mut().map(|m| m.data.as_mut_ptr()).collect(),
+        numel,
+    };
+    let barrier = Barrier::new(n);
+    let mut volumes: Vec<(usize, usize)> = Vec::with_capacity(n);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|me| {
+                let bufs = &bufs;
+                let barrier = &barrier;
+                scope.spawn(move || worker_thread(me, bufs, barrier, nodes, gpus_per_node))
+            })
+            .collect();
+        volumes = handles
+            .into_iter()
+            .map(|h| h.join().expect("collective worker thread panicked"))
+            .collect();
+    });
+    let (intra, inter) = volumes
+        .iter()
+        .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
+    HierVolume {
+        intra_bytes: intra,
+        inter_bytes: inter,
+    }
+}
+
+/// One worker's life: the phase schedule of the hierarchical (or
+/// degenerate flat) all-reduce, then scale its own buffer to the mean.
+/// Every thread executes the same number of barrier waits in the same
+/// order — the phase step counts depend only on (nodes, g).
+fn worker_thread(
+    me: usize,
+    bufs: &SharedBufs,
+    barrier: &Barrier,
+    nodes: usize,
+    g: usize,
+) -> (usize, usize) {
+    let n = nodes * g;
+    let numel = bufs.numel;
+    let mut intra = 0usize;
+    let mut inter = 0usize;
+
+    if nodes == 1 || g == 1 {
+        // Flat ring over everyone, attributed to the single link class.
+        let group: Vec<usize> = (0..n).collect();
+        let wire = ring_reduce_scatter(me, &group, 0, numel, bufs, barrier)
+            + ring_all_gather(me, &group, 0, numel, bufs, barrier);
+        if nodes == 1 {
+            intra = wire;
+        } else {
+            inter = wire;
+        }
+    } else {
+        let node = me / g;
+        let local = me % g;
+        let intra_group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
+        // Phase 1: intra-node ring reduce-scatter (all nodes' rings run
+        // concurrently on disjoint buffers).
+        intra += ring_reduce_scatter(local, &intra_group, 0, numel, bufs, barrier);
+        // Phase 2: after phase 1 local index i owns chunk (i+1) % g, so
+        // each thread runs exactly one cross-node ring over its chunk.
+        let chunk = (local + 1) % g;
+        let starts = chunk_starts(0, numel, g);
+        let inter_group: Vec<usize> = (0..nodes).map(|nd| nd * g + local).collect();
+        let (clo, chi) = (starts[chunk], starts[chunk + 1]);
+        inter += ring_reduce_scatter(node, &inter_group, clo, chi, bufs, barrier);
+        inter += ring_all_gather(node, &inter_group, clo, chi, bufs, barrier);
+        // Phase 3: intra-node all-gather broadcasts the global chunks.
+        intra += ring_all_gather(local, &intra_group, 0, numel, bufs, barrier);
+    }
+
+    // All pulls done everywhere; now each thread owns its buffer alone.
+    barrier.wait();
+    // SAFETY: after the final barrier no other thread touches buffer
+    // `me` again; `me` is this thread's exclusive index.
+    let own = unsafe { std::slice::from_raw_parts_mut(bufs.ptrs[me], numel) };
+    let inv = 1.0 / n as f32;
+    for v in own {
+        *v *= inv;
+    }
+    (intra, inter)
+}
+
+/// Ring reduce-scatter (sum) over `group`, pull form, from the
+/// perspective of the thread at group position `pos`. Element range
+/// [lo, hi) splits into `m` chunks at `lo + c·len/m` — identical
+/// boundaries to the sequential primitive. Returns bytes pulled.
+fn ring_reduce_scatter(
+    pos: usize,
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    bufs: &SharedBufs,
+    barrier: &Barrier,
+) -> usize {
+    let m = group.len();
+    if m <= 1 {
+        return 0;
+    }
+    let starts = chunk_starts(lo, hi, m);
+    let pred = (pos + m - 1) % m;
+    let mut pulled = 0usize;
+    for step in 0..m - 1 {
+        // Sequential schedule: position `pred` sends chunk (pred − step)
+        // mod m to `pos` — we pull it and reduce in place.
+        let c = (pred + m - step) % m;
+        let (clo, chi) = (starts[c], starts[c + 1]);
+        // SAFETY: during this step, buffer group[pred] is written only
+        // by its owner at chunk (pred − 1 − step) mod m ≠ c, and buffer
+        // group[pos] is read only by its successor at chunk
+        // (pos − step) mod m ≠ c; both ranges are disjoint from [clo,
+        // chi). The barrier below sequences steps.
+        unsafe {
+            let src = std::slice::from_raw_parts(bufs.ptrs[group[pred]].add(clo), chi - clo);
+            let dst = std::slice::from_raw_parts_mut(bufs.ptrs[group[pos]].add(clo), chi - clo);
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                *d += *s;
+            }
+        }
+        pulled += chi - clo;
+        barrier.wait();
+    }
+    pulled * BYTES_F32
+}
+
+/// Ring all-gather over `group`, pull form, assuming the ownership
+/// layout `ring_reduce_scatter` produces. Returns bytes pulled.
+fn ring_all_gather(
+    pos: usize,
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    bufs: &SharedBufs,
+    barrier: &Barrier,
+) -> usize {
+    let m = group.len();
+    if m <= 1 {
+        return 0;
+    }
+    let starts = chunk_starts(lo, hi, m);
+    let pred = (pos + m - 1) % m;
+    let mut pulled = 0usize;
+    for step in 0..m - 1 {
+        let c = (pred + 1 + m - step) % m;
+        let (clo, chi) = (starts[c], starts[c + 1]);
+        // SAFETY: same disjointness argument as the reduce-scatter —
+        // owner writes chunk (pred − step) mod m ≠ c this step.
+        unsafe {
+            let src = std::slice::from_raw_parts(bufs.ptrs[group[pred]].add(clo), chi - clo);
+            let dst = std::slice::from_raw_parts_mut(bufs.ptrs[group[pos]].add(clo), chi - clo);
+            dst.copy_from_slice(src);
+        }
+        pulled += chi - clo;
+        barrier.wait();
+    }
+    pulled * BYTES_F32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective::{hier_allreduce_mean, hier_volume_bytes, ring_allreduce_mean};
+    use crate::util::prop;
+    use crate::util::rng::Xoshiro256;
+
+    fn bits(ws: &[Matrix]) -> Vec<Vec<u32>> {
+        ws.iter()
+            .map(|w| w.data.iter().map(|v| v.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn flat_ring_is_bitwise_identical_to_sequential() {
+        prop::check("threaded flat == sequential", 20, |rng| {
+            let n = prop::dim(rng, 2, 9);
+            let r = prop::dim(rng, 1, 13);
+            let c = prop::dim(rng, 1, 13);
+            let mut ws: Vec<Matrix> = (0..n).map(|_| Matrix::gaussian(r, c, 1.0, rng)).collect();
+            let mut seq = ws.clone();
+            let vol = allreduce_mean(&mut ws, 1, n);
+            ring_allreduce_mean(&mut seq);
+            assert_eq!(bits(&ws), bits(&seq), "n={n} {r}x{c}");
+            assert_eq!(vol, hier_volume_bytes(r * c, 1, n));
+        });
+    }
+
+    #[test]
+    fn hier_is_bitwise_identical_to_sequential() {
+        prop::check("threaded hier == sequential", 16, |rng| {
+            let nodes = prop::dim(rng, 1, 4);
+            let g = prop::dim(rng, 1, 4);
+            if nodes * g < 2 {
+                return;
+            }
+            let r = prop::dim(rng, 1, 11);
+            let c = prop::dim(rng, 1, 11);
+            let mut ws: Vec<Matrix> = (0..nodes * g)
+                .map(|_| Matrix::gaussian(r, c, 1.0, rng))
+                .collect();
+            let mut seq = ws.clone();
+            let vol = allreduce_mean(&mut ws, nodes, g);
+            let seq_vol = hier_allreduce_mean(&mut seq, nodes, g);
+            assert_eq!(bits(&ws), bits(&seq), "{nodes}x{g} {r}x{c}");
+            assert_eq!(vol, seq_vol, "{nodes}x{g}");
+        });
+    }
+
+    #[test]
+    fn hier_volume_matches_sequential_closed_form() {
+        // Ragged numel on purpose: measured pulls must still sum to the
+        // exact aggregate decomposition.
+        let numel = 37;
+        let mut rng = Xoshiro256::new(8);
+        for (nodes, g) in [(2usize, 3usize), (3, 2), (4, 4), (1, 5), (5, 1)] {
+            let mut ws: Vec<Matrix> = (0..nodes * g)
+                .map(|_| Matrix::gaussian(1, numel, 1.0, &mut rng))
+                .collect();
+            let vol = allreduce_mean(&mut ws, nodes, g);
+            assert_eq!(vol, hier_volume_bytes(numel, nodes, g), "{nodes}x{g}");
+        }
+    }
+
+    #[test]
+    fn ragged_chunks_single_element_and_tiny_payloads() {
+        // numel < workers: some ring chunks are empty — the schedule
+        // must still terminate and agree with the sequential backend.
+        for numel in [1usize, 2, 3] {
+            let mut rng = Xoshiro256::new(numel as u64);
+            let mut ws: Vec<Matrix> = (0..4)
+                .map(|_| Matrix::gaussian(1, numel, 1.0, &mut rng))
+                .collect();
+            let mut seq = ws.clone();
+            let vol = allreduce_mean(&mut ws, 2, 2);
+            let seq_vol = hier_allreduce_mean(&mut seq, 2, 2);
+            assert_eq!(bits(&ws), bits(&seq), "numel={numel}");
+            assert_eq!(vol, seq_vol, "numel={numel}");
+        }
+    }
+
+    #[test]
+    fn single_worker_is_a_no_op() {
+        let mut ws = vec![Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0])];
+        let vol = allreduce_mean(&mut ws, 1, 1);
+        assert_eq!(vol, HierVolume::default());
+        assert_eq!(ws[0].data, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -12,4 +12,4 @@ pub use analytic::{
     adamw_profile, onesided_profile, sign_profile, topk_profile, tsr_profile, CommProfile,
     TsrParams,
 };
-pub use runs::{run_proxy, MethodCfg, RunOutput};
+pub use runs::{run_proxy, run_proxy_exec, MethodCfg, RunOutput};

@@ -127,7 +127,11 @@ pub struct RunOutput {
     pub state_elements: usize,
 }
 
-/// Train `method` on the quadratic proxy for `steps` steps.
+/// Train `method` on the quadratic proxy for `steps` steps, on the
+/// backend selected by `TSR_BACKEND` (so the whole experiment harness —
+/// tables, figures, benches — flips to the threaded backend from the
+/// environment). Backends are bitwise-identical, so every result is
+/// reproducible either way.
 pub fn run_proxy(
     spec: &ModelSpec,
     method: &MethodCfg,
@@ -136,6 +140,30 @@ pub fn run_proxy(
     noise: f32,
     lr: f32,
     seed: u64,
+) -> RunOutput {
+    run_proxy_exec(
+        spec,
+        method,
+        steps,
+        workers,
+        noise,
+        lr,
+        seed,
+        crate::exec::ExecBackend::from_env(),
+    )
+}
+
+/// [`run_proxy`] with an explicit execution backend — what the CLI's
+/// `--backend` flag and the cross-backend parity suite drive.
+pub fn run_proxy_exec(
+    spec: &ModelSpec,
+    method: &MethodCfg,
+    steps: usize,
+    workers: usize,
+    noise: f32,
+    lr: f32,
+    seed: u64,
+    exec: crate::exec::ExecBackend,
 ) -> RunOutput {
     // Intrinsic dimension ≥ the ranks under test: when r exceeds the
     // gradient's true rank, the surplus core coordinates carry pure
@@ -152,7 +180,8 @@ pub fn run_proxy(
     };
     let mut opt = method.build(&blocks, hyper, workers);
     let mut params = sim.init_params(seed ^ 0xF00D);
-    let trainer = Trainer::new(Topology::multi_node(2, workers.div_ceil(2)), LrSchedule::paper(steps));
+    let topo = Topology::multi_node(2, workers.div_ceil(2));
+    let trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(exec);
     let (mut metrics, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, steps);
     metrics.name = method.label();
     RunOutput {

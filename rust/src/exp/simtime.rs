@@ -88,7 +88,17 @@ fn timeline_json(label: &str, tl: &MethodTimeline) -> Json {
 }
 
 /// The full experiment: all seven methods × the three cluster shapes.
-pub fn simtime(scale: &str, nodes: usize, gpus: usize, steps: usize, cfg: &SimCfg) -> Json {
+/// The per-method (plan extraction + three-topology simulation) cells
+/// are independent, so the threaded backend fans them out over OS
+/// threads; results are collected in roster order either way.
+pub fn simtime(
+    scale: &str,
+    nodes: usize,
+    gpus: usize,
+    steps: usize,
+    cfg: &SimCfg,
+    exec: &crate::exec::ExecBackend,
+) -> Json {
     let spec = ModelSpec::by_name(scale).expect("unknown scale (60m|130m|350m|1b|roberta)");
     let topos = [
         ("single_node", Topology::single_node(nodes * gpus)),
@@ -106,17 +116,16 @@ pub fn simtime(scale: &str, nodes: usize, gpus: usize, steps: usize, cfg: &SimCf
     // One optimizer build per method (state is model-scale); the
     // extracted schedules are reused across all three topologies.
     let blocks = spec.blocks();
-    let per_method: Vec<(String, Vec<MethodTimeline>)> = method_roster(scale)
-        .iter()
-        .map(|m| {
-            let plans = method_plans(&blocks, m, steps);
-            let tls = topos
-                .iter()
-                .map(|(_, topo)| simulate_plans(&plans, &blocks, topo, cfg))
-                .collect();
-            (m.label(), tls)
-        })
-        .collect();
+    let roster = method_roster(scale);
+    let per_method: Vec<(String, Vec<MethodTimeline>)> = exec.map_workers(roster.len(), |mi| {
+        let m = &roster[mi];
+        let plans = method_plans(&blocks, m, steps);
+        let tls = topos
+            .iter()
+            .map(|(_, topo)| simulate_plans(&plans, &blocks, topo, cfg))
+            .collect();
+        (m.label(), tls)
+    });
     let mut panels = Vec::new();
     for (ti, (tname, topo)) in topos.iter().enumerate() {
         println!(

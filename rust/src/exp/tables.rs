@@ -157,6 +157,7 @@ fn measure_update_time(spec: &ModelSpec, method: &MethodCfg, workers: usize) -> 
     let topo = Topology::multi_node(2, workers.div_ceil(2));
     let mut ledger = CommLedger::new();
     // Warm (includes the init refresh), then time the steady-state step.
+    let exec = crate::exec::ExecBackend::from_env();
     let mut run_once = |params: &mut Vec<crate::linalg::Matrix>,
                         grads: &mut Vec<Vec<crate::linalg::Matrix>>,
                         ledger: &mut CommLedger| {
@@ -166,6 +167,7 @@ fn measure_update_time(spec: &ModelSpec, method: &MethodCfg, workers: usize) -> 
             ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &exec,
         };
         opt.step(&mut ctx);
         ledger.end_step();

@@ -88,6 +88,7 @@ pub fn run_horizon(t_total: usize, workers: usize, k_refresh: usize, seed: u64) 
     let mut params = vec![Matrix::gaussian(m, n, 0.3, &mut rng)];
     let mut ledger = CommLedger::new();
     let topo = Topology::single_node(workers);
+    let exec = crate::exec::ExecBackend::from_env();
     let mut grad_sq_sum = 0.0f64;
     for _ in 0..t_total {
         // True gradient for the stationarity measure.
@@ -102,6 +103,7 @@ pub fn run_horizon(t_total: usize, workers: usize, k_refresh: usize, seed: u64) 
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &exec,
         });
         ledger.end_step();
     }

@@ -18,6 +18,7 @@
 
 pub mod comm;
 pub mod data;
+pub mod exec;
 pub mod exp;
 pub mod linalg;
 pub mod metrics;

@@ -68,6 +68,7 @@ fn main() {
                 args.get_usize("gpus", 8),
                 args.get_usize("steps", 100),
                 &cfg,
+                &backend_from_args(args),
             );
             write_results("fig6_simtime.json", &j);
         }
@@ -96,6 +97,13 @@ fn main() {
                  \n  train:    train --manifest artifacts/tiny_manifest.json \
                  [--method tsr|adamw|galore|signadam|topk] [--steps N] [--workers W] \
                  [--k-var N] [--keep-frac F]\
+                 \n            --workers N       simulated data-parallel workers (default 4)\
+                 \n            --backend B       execution backend: sequential | threaded \
+                 (default $TSR_BACKEND or sequential; both are bitwise-identical — \
+                 threaded runs one OS thread per worker, see DESIGN.md §8)\
+                 \n            --source quad     synthetic low-rank quadratic instead of a \
+                 PJRT manifest (no artifacts needed; deterministic metrics JSON \
+                 for CI's cross-backend gate)\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -109,59 +117,26 @@ fn write_results(name: &str, j: &tsr::util::json::Json) {
     println!("\n-> wrote {}", p.display());
 }
 
-fn info() {
-    match tsr::runtime::Engine::cpu() {
-        Ok(e) => println!("PJRT platform: {}", e.platform()),
-        Err(e) => println!("PJRT unavailable: {e}"),
-    }
-    for name in ["tiny_manifest.json", "e2e_manifest.json"] {
-        let p = std::path::Path::new("artifacts").join(name);
-        println!(
-            "artifact {}: {}",
-            p.display(),
-            if p.exists() { "present" } else { "missing (run `make artifacts`)" }
-        );
+/// `--backend sequential|threaded`, falling back to `$TSR_BACKEND`.
+fn backend_from_args(args: &Args) -> tsr::exec::ExecBackend {
+    match args.get("backend") {
+        Some(name) => tsr::exec::ExecBackend::parse(name)
+            .unwrap_or_else(|| panic!("unknown backend {name} (sequential|threaded)")),
+        None => tsr::exec::ExecBackend::from_env(),
     }
 }
 
-/// End-to-end PJRT training: the real L1+L2+L3 composition.
-fn run_train(args: &Args) {
-    use tsr::comm::Topology;
-    use tsr::data::{Batcher, SyntheticCorpus};
+/// Method config shared by both train sources; rank defaults derive
+/// from the model's hidden dimension.
+fn method_cfg_from_args(args: &Args, hidden: usize) -> tsr::exp::MethodCfg {
     use tsr::exp::MethodCfg;
     use tsr::optim::onesided::OneSidedRefresh;
-    use tsr::optim::{AdamHyper, LrSchedule, TsrConfig};
-    use tsr::train::pjrt_source::PjrtSource;
-    use tsr::train::{GradSource, Trainer};
+    use tsr::optim::TsrConfig;
 
-    let manifest_path = args.get_or("manifest", "artifacts/tiny_manifest.json");
-    let steps = args.get_usize("steps", 200);
-    let workers = args.get_usize("workers", 4);
-    let method = args.get_or("method", "tsr");
-    let lr = args.get_f64("lr", 0.01) as f32;
-
-    let manifest = tsr::runtime::Manifest::load(manifest_path).expect("load manifest");
-    let engine = tsr::runtime::Engine::cpu().expect("pjrt cpu client");
-    println!(
-        "loaded {} (vocab {}, hidden {}, layers {}, batch {}, seq {}) on {}",
-        manifest.name,
-        manifest.vocab,
-        manifest.hidden,
-        manifest.layers,
-        manifest.batch,
-        manifest.seq,
-        engine.platform()
-    );
-    let model = engine.load_model(manifest.clone()).expect("compile artifact");
-    let corpus = SyntheticCorpus::new(manifest.vocab, 0xC0);
-    let batcher = Batcher::new(corpus, workers, manifest.batch, manifest.seq, 0xDA7A);
-    let mut source = PjrtSource::new(model, batcher);
-    let blocks = source.blocks().to_vec();
-
-    let rank = args.get_usize("rank", (manifest.hidden / 4).max(4));
-    let rank_emb = args.get_usize("rank-emb", (manifest.hidden / 8).max(4));
+    let rank = args.get_usize("rank", (hidden / 4).max(4));
+    let rank_emb = args.get_usize("rank-emb", (hidden / 8).max(4));
     let k = args.get_usize("k", 50);
-    let mcfg = match method {
+    match args.get_or("method", "tsr") {
         "adamw" => MethodCfg::Adam,
         "galore" => MethodCfg::OneSided {
             rank,
@@ -183,7 +158,141 @@ fn run_train(args: &Args) {
             keep_frac: args.get_f64("keep-frac", 0.01),
         },
         other => panic!("unknown method {other}"),
+    }
+}
+
+fn info() {
+    match tsr::runtime::Engine::cpu() {
+        Ok(e) => println!("PJRT platform: {}", e.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    for name in ["tiny_manifest.json", "e2e_manifest.json"] {
+        let p = std::path::Path::new("artifacts").join(name);
+        println!(
+            "artifact {}: {}",
+            p.display(),
+            if p.exists() { "present" } else { "missing (run `make artifacts`)" }
+        );
+    }
+}
+
+/// `tsr train` front door: dispatch on gradient source.
+fn run_train(args: &Args) {
+    match args.get_or("source", "pjrt") {
+        "quad" => run_train_quad(args),
+        "pjrt" => run_train_pjrt(args),
+        other => panic!("unknown --source {other} (pjrt|quad)"),
+    }
+}
+
+/// Synthetic low-rank quadratic training — no PJRT artifacts needed.
+/// Emits the *deterministic* metrics JSON (no wall-clock fields, plus a
+/// final-weight fingerprint), which CI's determinism gate runs twice
+/// per backend and diffs byte-for-byte.
+fn run_train_quad(args: &Args) {
+    use tsr::comm::Topology;
+    use tsr::exp::runs::proxy_spec;
+    use tsr::optim::{AdamHyper, LrSchedule};
+    use tsr::train::gradsim::QuadraticSim;
+    use tsr::train::{GradSource, Trainer};
+
+    let steps = args.get_usize("steps", 40);
+    let workers = args.get_usize("workers", 4);
+    let lr = args.get_f64("lr", 0.05) as f32;
+    let noise = args.get_f64("noise", 0.01) as f32;
+    let seed = args.get_u64("seed", 42);
+    let backend = backend_from_args(args);
+    let scale = args.get_or("scale", "tiny");
+    let spec = if scale == "tiny" {
+        tsr::model::ModelSpec::proxy(200, 32, 64, 2, 2)
+    } else {
+        proxy_spec(scale)
     };
+    let topo = match args.get_or("topo", "multi_node") {
+        "single_node" => Topology::single_node(workers),
+        "multi_node" => Topology::multi_node(2, workers.div_ceil(2)),
+        "ethernet" => Topology::ethernet(2, workers.div_ceil(2)),
+        other => panic!("unknown --topo {other} (single_node|multi_node|ethernet)"),
+    };
+
+    let mut sim = QuadraticSim::new(&spec, workers, (spec.hidden / 2).max(8), noise, seed);
+    let blocks = sim.blocks().to_vec();
+    let mcfg = method_cfg_from_args(args, spec.hidden);
+    let hyper = AdamHyper {
+        lr,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = mcfg.build(&blocks, hyper, workers);
+    let mut params = sim.init_params(seed ^ 0xF00D);
+    let trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend);
+    let (mut metrics, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, steps);
+    metrics.name = mcfg.label();
+
+    println!(
+        "== {} on quad:{} ({} workers, {} backend) ==",
+        mcfg.label(),
+        spec.name,
+        workers,
+        backend.name()
+    );
+    println!("final loss      : {:.4}", metrics.final_loss());
+    println!(
+        "bytes/step      : {}",
+        tsr::util::bench::fmt_bytes(ledger.bytes_per_step())
+    );
+    println!(
+        "weights fp      : {:016x}",
+        tsr::metrics::params_fingerprint(&params)
+    );
+
+    let out = args.get_or("out", "results/train_quad.json");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(
+        out,
+        metrics
+            .to_json_deterministic(&ledger, &params)
+            .to_string_pretty(),
+    )
+    .expect("write run json");
+    println!("-> wrote {out}");
+}
+
+/// End-to-end PJRT training: the real L1+L2+L3 composition.
+fn run_train_pjrt(args: &Args) {
+    use tsr::comm::Topology;
+    use tsr::data::{Batcher, SyntheticCorpus};
+    use tsr::optim::{AdamHyper, LrSchedule};
+    use tsr::train::pjrt_source::PjrtSource;
+    use tsr::train::{GradSource, Trainer};
+
+    let manifest_path = args.get_or("manifest", "artifacts/tiny_manifest.json");
+    let steps = args.get_usize("steps", 200);
+    let workers = args.get_usize("workers", 4);
+    let lr = args.get_f64("lr", 0.01) as f32;
+
+    let manifest = tsr::runtime::Manifest::load(manifest_path).expect("load manifest");
+    let engine = tsr::runtime::Engine::cpu().expect("pjrt cpu client");
+    println!(
+        "loaded {} (vocab {}, hidden {}, layers {}, batch {}, seq {}) on {}",
+        manifest.name,
+        manifest.vocab,
+        manifest.hidden,
+        manifest.layers,
+        manifest.batch,
+        manifest.seq,
+        engine.platform()
+    );
+    let model = engine.load_model(manifest.clone()).expect("compile artifact");
+    let corpus = SyntheticCorpus::new(manifest.vocab, 0xC0);
+    let batcher = Batcher::new(corpus, workers, manifest.batch, manifest.seq, 0xDA7A);
+    let mut source = PjrtSource::new(model, batcher);
+    let blocks = source.blocks().to_vec();
+
+    let mcfg = method_cfg_from_args(args, manifest.hidden);
     let hyper = AdamHyper {
         lr,
         weight_decay: 0.0,
@@ -195,7 +304,8 @@ fn run_train(args: &Args) {
     let mut trainer = Trainer::new(
         Topology::multi_node(2, workers.div_ceil(2)),
         LrSchedule::paper(steps),
-    );
+    )
+    .with_backend(backend_from_args(args));
     trainer.verbose = true;
     trainer.log_every = args.get_usize("log-every", 10);
     trainer.sim = Some(tsr::sim::SimCfg {
@@ -207,6 +317,7 @@ fn run_train(args: &Args) {
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n== {} on {} ==", mcfg.label(), manifest.name);
+    println!("backend         : {} ({} workers)", trainer.exec.name(), workers);
     println!("final loss      : {:.4}", metrics.final_loss());
     println!(
         "bytes/step      : {}",

@@ -1,9 +1,29 @@
 //! Run metrics: loss curves, byte curves, CSV/JSON emission for the
 //! table/figure regeneration harness.
 
+use crate::comm::CommLedger;
+use crate::linalg::Matrix;
 use crate::util::json::Json;
 use std::io::Write;
 use std::path::Path;
+
+/// FNV-1a over the little-endian bit patterns of every parameter — a
+/// cheap bitwise-equality witness. Two runs produce the same
+/// fingerprint iff every weight bit matches; CI's determinism gate
+/// diffs it (inside [`RunMetrics::to_json_deterministic`]) across
+/// repeated runs and across execution backends.
+pub fn params_fingerprint(params: &[Matrix]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for p in params {
+        for v in &p.data {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0100_0000_01b3);
+            }
+        }
+    }
+    h
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -65,6 +85,40 @@ impl RunMetrics {
         Ok(())
     }
 
+    /// Backend-determinism witness: every field here is a deterministic
+    /// function of (method, topology, seed) — losses, byte curves,
+    /// ledger columns, simulated times, and the final-weight
+    /// fingerprint, but **no wall-clock measurements**. CI runs `tsr
+    /// train --source quad` twice per backend and diffs this output
+    /// byte-for-byte; any nondeterminism (or cross-backend divergence)
+    /// fails the gate.
+    pub fn to_json_deterministic(&self, ledger: &CommLedger, params: &[Matrix]) -> Json {
+        let (intra, inter) = ledger.link_totals();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("final_loss", Json::num(self.final_loss() as f64)),
+            (
+                "loss",
+                Json::Arr(self.loss.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+            (
+                "cum_bytes",
+                Json::Arr(self.cum_bytes.iter().map(|&b| Json::num(b as f64)).collect()),
+            ),
+            ("bytes_per_step", Json::num(ledger.bytes_per_step())),
+            ("peak_bytes", Json::num(ledger.peak_bytes() as f64)),
+            ("wire_intra_bytes", Json::num(intra as f64)),
+            ("wire_inter_bytes", Json::num(inter as f64)),
+            ("sim_comm_secs", Json::num(self.sim_comm_secs)),
+            ("predicted_step_secs", Json::num(self.predicted_step_secs)),
+            ("exposed_comm_secs", Json::num(self.exposed_comm_secs)),
+            (
+                "params_fingerprint",
+                Json::str(format!("{:016x}", params_fingerprint(params))),
+            ),
+        ])
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -114,6 +168,32 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.contains("step,loss,cum_bytes"));
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn fingerprint_is_bit_sensitive() {
+        let a = vec![Matrix::from_vec(1, 2, vec![1.0, 2.0])];
+        let mut b = vec![Matrix::from_vec(1, 2, vec![1.0, 2.0])];
+        assert_eq!(params_fingerprint(&a), params_fingerprint(&b));
+        // Flip the lowest mantissa bit of one element only.
+        b[0].data[1] = f32::from_bits(b[0].data[1].to_bits() ^ 1);
+        assert_ne!(params_fingerprint(&a), params_fingerprint(&b));
+    }
+
+    #[test]
+    fn deterministic_json_has_no_wall_clock_fields() {
+        let mut m = RunMetrics::new("det");
+        m.loss = vec![1.0, 0.5];
+        m.cum_bytes = vec![8, 16];
+        m.step_secs = vec![0.123, 0.456]; // wall clock — must NOT leak
+        let mut ledger = CommLedger::new();
+        ledger.record(crate::comm::LayerClass::Linear, 2);
+        ledger.end_step();
+        let params = vec![Matrix::from_vec(1, 2, vec![0.25, -1.5])];
+        let s = m.to_json_deterministic(&ledger, &params).to_string_pretty();
+        assert!(s.contains("params_fingerprint"));
+        assert!(s.contains("wire_intra_bytes"));
+        assert!(!s.contains("step_secs\": [") && !s.contains("mean_step_secs"));
     }
 
     #[test]

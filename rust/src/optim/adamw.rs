@@ -37,10 +37,19 @@ impl DistOptimizer for DenseAdamW {
         for b in 0..nblocks {
             // All-reduce the dense gradient: S_t = { Ḡ } (mn elements).
             let mut per_worker: Vec<_> = ctx.grads.iter_mut().map(|g| g[b].clone()).collect();
-            collective::sync_mean(&mut per_worker, self.classes[b], ctx.ledger, ctx.topo);
+            collective::sync_mean(&mut per_worker, self.classes[b], ctx.ledger, ctx.topo, ctx.exec);
             let gbar = &per_worker[0];
 
-            self.state[b].update(&mut ctx.params[b], gbar, &self.hyper, ctx.lr_mult, self.t);
+            // The dense-Adam hot path: sharded over worker threads on
+            // the threaded backend (bitwise-identical either way).
+            self.state[b].update_exec(
+                &mut ctx.params[b],
+                gbar,
+                &self.hyper,
+                ctx.lr_mult,
+                self.t,
+                ctx.exec,
+            );
         }
     }
 
@@ -96,6 +105,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         };
         opt.step(&mut ctx);
         ledger.end_step();
@@ -132,6 +142,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         });
         for (b, st) in ref_state.iter_mut().enumerate() {
             st.update(&mut reference[b], &shared[b], &AdamHyper::default(), 1.0, 1);

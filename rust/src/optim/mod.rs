@@ -27,6 +27,7 @@ pub mod tsr;
 pub mod tsr_sgd;
 
 use crate::comm::{CommLedger, LayerClass, Topology};
+use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
 
@@ -74,6 +75,9 @@ pub struct StepCtx<'a> {
     pub topo: &'a Topology,
     /// Learning-rate multiplier from the schedule (warmup/cosine).
     pub lr_mult: f32,
+    /// Execution backend driving collectives and hot-path parallelism
+    /// (DESIGN.md §8). Both backends are bitwise-identical.
+    pub exec: &'a ExecBackend,
 }
 
 /// One block's contribution to step-`t` gradient synchronization.
@@ -149,22 +153,89 @@ impl DenseAdamState {
     }
 
     /// Standard AdamW update on `w` given the aggregated gradient `g`.
-    /// `t` is 1-indexed for bias correction.
+    /// `t` is 1-indexed for bias correction. Equivalent to
+    /// [`Self::update_exec`] on the sequential backend.
     pub fn update(&mut self, w: &mut Matrix, g: &Matrix, h: &AdamHyper, lr_mult: f32, t: u64) {
-        let b1 = h.beta1;
-        let b2 = h.beta2;
-        let bc1 = 1.0 - b1.powi(t as i32);
-        let bc2 = 1.0 - b2.powi(t as i32);
+        self.update_exec(w, g, h, lr_mult, t, &ExecBackend::Sequential);
+    }
+
+    /// AdamW update, sharded over `exec.threads()` OS threads on the
+    /// threaded backend. The update is elementwise, so shard boundaries
+    /// cannot change any result bit — the dense-Adam hot path simply
+    /// runs on all cores instead of one.
+    pub fn update_exec(
+        &mut self,
+        w: &mut Matrix,
+        g: &Matrix,
+        h: &AdamHyper,
+        lr_mult: f32,
+        t: u64,
+        exec: &ExecBackend,
+    ) {
+        let len = w.data.len();
+        let bc1 = 1.0 - h.beta1.powi(t as i32);
+        let bc2 = 1.0 - h.beta2.powi(t as i32);
         let lr = h.lr * lr_mult;
-        for i in 0..w.data.len() {
-            let gi = g.data[i];
-            self.m.data[i] = b1 * self.m.data[i] + (1.0 - b1) * gi;
-            self.v.data[i] = b2 * self.v.data[i] + (1.0 - b2) * gi * gi;
-            let mhat = self.m.data[i] / bc1;
-            let vhat = self.v.data[i] / bc2;
-            let upd = mhat / (vhat.sqrt() + h.eps);
-            w.data[i] -= lr * (h.scale * upd + h.weight_decay * w.data[i]);
+        // Below ~64 KiB of elements the spawn cost dominates any win.
+        const MIN_PAR_ELEMS: usize = 16 * 1024;
+        let shards = if len < MIN_PAR_ELEMS { 1 } else { exec.threads() };
+        if shards <= 1 {
+            adam_update_slice(
+                &mut self.m.data,
+                &mut self.v.data,
+                &mut w.data,
+                &g.data,
+                h,
+                lr,
+                bc1,
+                bc2,
+            );
+            return;
         }
+        let bounds = crate::exec::shard_bounds(len, shards);
+        std::thread::scope(|scope| {
+            let mut m_rest: &mut [f32] = &mut self.m.data;
+            let mut v_rest: &mut [f32] = &mut self.v.data;
+            let mut w_rest: &mut [f32] = &mut w.data;
+            let mut g_rest: &[f32] = &g.data;
+            for c in 0..shards {
+                let cut = bounds[c + 1] - bounds[c];
+                let (ms, mr) = std::mem::take(&mut m_rest).split_at_mut(cut);
+                let (vs, vr) = std::mem::take(&mut v_rest).split_at_mut(cut);
+                let (ws, wr) = std::mem::take(&mut w_rest).split_at_mut(cut);
+                let (gs, gr) = g_rest.split_at(cut);
+                m_rest = mr;
+                v_rest = vr;
+                w_rest = wr;
+                g_rest = gr;
+                scope.spawn(move || adam_update_slice(ms, vs, ws, gs, h, lr, bc1, bc2));
+            }
+        });
+    }
+}
+
+/// The elementwise AdamW kernel both backends share: identical math on
+/// any contiguous shard of (m, v, w, g).
+fn adam_update_slice(
+    m: &mut [f32],
+    v: &mut [f32],
+    w: &mut [f32],
+    g: &[f32],
+    h: &AdamHyper,
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+) {
+    let b1 = h.beta1;
+    let b2 = h.beta2;
+    for i in 0..w.len() {
+        let gi = g[i];
+        m[i] = b1 * m[i] + (1.0 - b1) * gi;
+        v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        let upd = mhat / (vhat.sqrt() + h.eps);
+        w[i] -= lr * (h.scale * upd + h.weight_decay * w[i]);
     }
 }
 
@@ -212,6 +283,34 @@ mod tests {
         };
         st.update(&mut w, &g, &h, 1.0, 1);
         assert!(w.data[0] < 2.0 && w.data[0] > 1.9);
+    }
+
+    #[test]
+    fn sharded_update_is_bitwise_identical_to_serial() {
+        use crate::util::rng::Xoshiro256;
+        // Large enough to cross the parallel threshold.
+        let n = 40_000;
+        let mut rng = Xoshiro256::new(12);
+        let g = Matrix::gaussian(1, n, 1.0, &mut rng);
+        let w0 = Matrix::gaussian(1, n, 1.0, &mut rng);
+        let h = AdamHyper {
+            lr: 0.01,
+            weight_decay: 0.02,
+            ..Default::default()
+        };
+        let mut st_a = DenseAdamState::new(1, n);
+        let mut st_b = st_a.clone();
+        let mut w_a = w0.clone();
+        let mut w_b = w0;
+        for t in 1..=3u64 {
+            st_a.update_exec(&mut w_a, &g, &h, 0.7, t, &ExecBackend::Sequential);
+            st_b.update_exec(&mut w_b, &g, &h, 0.7, t, &ExecBackend::Threaded { threads: 5 });
+        }
+        for i in 0..n {
+            assert_eq!(w_a.data[i].to_bits(), w_b.data[i].to_bits(), "w[{i}]");
+            assert_eq!(st_a.m.data[i].to_bits(), st_b.m.data[i].to_bits(), "m[{i}]");
+            assert_eq!(st_a.v.data[i].to_bits(), st_b.v.data[i].to_bits(), "v[{i}]");
+        }
     }
 
     #[test]

@@ -105,8 +105,15 @@ impl DistOptimizer for OneSidedAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
-                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
+                    st.update_exec(
+                        &mut ctx.params[b],
+                        &per_worker[0],
+                        &h,
+                        ctx.lr_mult,
+                        t1,
+                        ctx.exec,
+                    );
                 }
                 BlockState::Projected(blk) => {
                     let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
@@ -115,7 +122,7 @@ impl DistOptimizer for OneSidedAdam {
                         // → this is what spikes PeakBytes.
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
-                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo);
+                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo, ctx.exec);
                         ctx.ledger.mark_refresh();
                         let gbar = &dense[0];
                         let factors = match self.refresh {
@@ -130,19 +137,17 @@ impl DistOptimizer for OneSidedAdam {
                         blk.initialized = true;
                     }
 
-                    // Project per worker, then all-reduce the O(rn) object.
-                    let mut proj: Vec<Matrix> = ctx
-                        .grads
-                        .iter()
-                        .map(|g| {
-                            if blk.left {
-                                matmul_tn(&blk.basis, &g[b]) // r×n
-                            } else {
-                                matmul(&g[b], &blk.basis) // m×r
-                            }
-                        })
-                        .collect();
-                    collective::sync_mean(&mut proj, class, ctx.ledger, ctx.topo);
+                    // Project per worker (fanned out over threads), then
+                    // all-reduce the O(rn) object.
+                    let grads_ref = &*ctx.grads;
+                    let mut proj: Vec<Matrix> = ctx.exec.map_workers(grads_ref.len(), |i| {
+                        if blk.left {
+                            matmul_tn(&blk.basis, &grads_ref[i][b]) // r×n
+                        } else {
+                            matmul(&grads_ref[i][b], &blk.basis) // m×r
+                        }
+                    });
+                    collective::sync_mean(&mut proj, class, ctx.ledger, ctx.topo, ctx.exec);
                     let cbar = &proj[0];
 
                     // Adam moments in projected space.
@@ -259,6 +264,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -299,6 +305,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         });
         ledger.end_step();
         // Embedding bytes = full dense embedding block every step.
@@ -340,6 +347,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

@@ -85,8 +85,15 @@ impl DistOptimizer for PowerSgd {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
-                    st.update(&mut ctx.params[b], &per_worker[0], &self.hyper, ctx.lr_mult, t1);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
+                    st.update_exec(
+                        &mut ctx.params[b],
+                        &per_worker[0],
+                        &self.hyper,
+                        ctx.lr_mult,
+                        t1,
+                        ctx.exec,
+                    );
                 }
                 BlockState::Compressed(blk) => {
                     // Error-compensated gradient per worker.
@@ -100,14 +107,16 @@ impl DistOptimizer for PowerSgd {
                             x
                         })
                         .collect();
-                    // P_i = X_i Q ; all-reduce; orthonormalize.
-                    let mut ps: Vec<Matrix> = comp.iter().map(|x| matmul(x, &blk.q)).collect();
-                    collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo);
+                    // P_i = X_i Q (per-worker, fanned out); all-reduce;
+                    // orthonormalize.
+                    let mut ps: Vec<Matrix> =
+                        ctx.exec.map_workers(comp.len(), |i| matmul(&comp[i], &blk.q));
+                    collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo, ctx.exec);
                     let phat = orth(&ps[0]);
                     // Q'_i = X_iᵀ P̂ ; all-reduce.
                     let mut qs: Vec<Matrix> =
-                        comp.iter().map(|x| matmul_tn(x, &phat)).collect();
-                    collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo);
+                        ctx.exec.map_workers(comp.len(), |i| matmul_tn(&comp[i], &phat));
+                    collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo, ctx.exec);
                     blk.q = qs.swap_remove(0);
 
                     // Decompressed averaged gradient Ĝ = P̂ Qᵀ.
@@ -196,6 +205,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         });
         ledger.end_step();
         assert_eq!(ledger.step(0).total, (50 * 4 + 70 * 4) * 4);
@@ -226,6 +236,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

@@ -96,8 +96,15 @@ impl DistOptimizer for SignAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
-                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
+                    st.update_exec(
+                        &mut ctx.params[b],
+                        &per_worker[0],
+                        &h,
+                        ctx.lr_mult,
+                        t1,
+                        ctx.exec,
+                    );
                 }
                 BlockState::Sign(blk) => {
                     // Variance refresh: dense all-reduce every k_var steps
@@ -107,7 +114,7 @@ impl DistOptimizer for SignAdam {
                     if t % self.k_var as u64 == 0 {
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
-                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo);
+                        collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo, ctx.exec);
                         ctx.ledger.mark_refresh();
                         blk.tv += 1;
                         let b2 = h.beta2;
@@ -249,6 +256,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -288,6 +296,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -334,6 +343,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

@@ -94,8 +94,15 @@ impl DistOptimizer for TopKAdam {
                 BlockState::Dense(st) => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
-                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
+                    st.update_exec(
+                        &mut ctx.params[b],
+                        &per_worker[0],
+                        &h,
+                        ctx.lr_mult,
+                        t1,
+                        ctx.exec,
+                    );
                 }
                 BlockState::Sparse(blk) => {
                     // Per worker: x = g + e, keep the k largest |x|,
@@ -129,8 +136,10 @@ impl DistOptimizer for TopKAdam {
                     collective::record_virtual_sync(workers, bytes, ctx.ledger, ctx.topo);
                     ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
 
+                    // Dense Adam on the aggregated sparse gradient —
+                    // sharded over threads like the AdamW hot path.
                     blk.state
-                        .update(&mut ctx.params[b], &ghat, &h, ctx.lr_mult, t1);
+                        .update_exec(&mut ctx.params[b], &ghat, &h, ctx.lr_mult, t1, ctx.exec);
                 }
             }
         }
@@ -215,6 +224,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -241,6 +251,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         });
         ledger.end_step();
         // Coordinates 1 and 3 were transmitted: params moved there.
@@ -279,6 +290,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

@@ -142,6 +142,7 @@ impl TsrAdam {
         grads: &[&Matrix],
         ctx_ledger: &mut crate::comm::CommLedger,
         topo: &crate::comm::Topology,
+        exec: &crate::exec::ExecBackend,
     ) {
         let n = grads[0].cols;
         blk.refresh_count += 1;
@@ -150,28 +151,25 @@ impl TsrAdam {
         let mut rng = Xoshiro256::for_stream(seed, stream);
         let omega = Matrix::gaussian(n, blk.k, 1.0, &mut rng);
 
-        // Worker-local sketches + power iterations.
-        let mut qs: Vec<Matrix> = grads
-            .iter()
-            .map(|g| {
-                let mut q = orth(&matmul(g, &omega)); // m×k
-                for _ in 0..power_q {
-                    let q_row = orth(&matmul_tn(g, &q)); // n×k
-                    q = orth(&matmul(g, &q_row)); // m×k
-                }
-                q
-            })
-            .collect();
-        // Worker-local reduced matrices B_i = Q_iᵀ G_i (k×n).
-        let mut bs: Vec<Matrix> = qs
-            .iter()
-            .zip(grads.iter())
-            .map(|(q, g)| matmul_tn(q, g))
-            .collect();
+        // Worker-local sketches + power iterations: the rSVD-refresh hot
+        // path, one worker per OS thread on the threaded backend (each
+        // worker's sketch reads only its own gradient — backend-exact).
+        let pairs: Vec<(Matrix, Matrix)> = exec.map_workers(grads.len(), |i| {
+            let g = grads[i];
+            let mut q = orth(&matmul(g, &omega)); // m×k
+            for _ in 0..power_q {
+                let q_row = orth(&matmul_tn(g, &q)); // n×k
+                q = orth(&matmul(g, &q_row)); // m×k
+            }
+            // Worker-local reduced matrix B_i = Q_iᵀ G_i (k×n).
+            let b = matmul_tn(&q, g);
+            (q, b)
+        });
+        let (mut qs, mut bs): (Vec<Matrix>, Vec<Matrix>) = pairs.into_iter().unzip();
 
         // All-reduce the two sketches — the ONLY refresh communication.
-        collective::sync_mean(&mut bs, class, ctx_ledger, topo);
-        collective::sync_mean(&mut qs, class, ctx_ledger, topo);
+        collective::sync_mean(&mut bs, class, ctx_ledger, topo, exec);
+        collective::sync_mean(&mut qs, class, ctx_ledger, topo, exec);
         ctx_ledger.mark_refresh();
 
         let mut qbar = qs.swap_remove(0);
@@ -195,10 +193,11 @@ impl TsrAdam {
         grads: &[&Matrix],
         ctx_ledger: &mut crate::comm::CommLedger,
         topo: &crate::comm::Topology,
+        exec: &crate::exec::ExecBackend,
     ) {
         blk.refresh_count += 1;
         let mut dense: Vec<Matrix> = grads.iter().map(|g| (*g).clone()).collect();
-        collective::sync_mean(&mut dense, class, ctx_ledger, topo);
+        collective::sync_mean(&mut dense, class, ctx_ledger, topo, exec);
         ctx_ledger.mark_refresh();
         let out = crate::linalg::svd_truncated(&dense[0], blk.rank);
         blk.u = out.u;
@@ -226,8 +225,15 @@ impl DistOptimizer for TsrAdam {
                     // §3.4: non-matrix parameters sync dense.
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
-                    st.update(&mut ctx.params[b], &per_worker[0], &h, ctx.lr_mult, t1);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
+                    st.update_exec(
+                        &mut ctx.params[b],
+                        &per_worker[0],
+                        &h,
+                        ctx.lr_mult,
+                        t1,
+                        ctx.exec,
+                    );
                 }
                 BlockState::LowRank(blk) => {
                     let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
@@ -244,6 +250,7 @@ impl DistOptimizer for TsrAdam {
                                 &grads_b,
                                 ctx.ledger,
                                 ctx.topo,
+                                ctx.exec,
                             ),
                             RefreshKind::ExactDense => Self::refresh_exact_dense(
                                 blk,
@@ -251,16 +258,17 @@ impl DistOptimizer for TsrAdam {
                                 &grads_b,
                                 ctx.ledger,
                                 ctx.topo,
+                                ctx.exec,
                             ),
                         }
                     }
 
-                    // Core synchronization: C_i = Uᵀ G_i V, C̄ = AR(C_i).
-                    let mut cores: Vec<Matrix> = grads_b
-                        .iter()
-                        .map(|g| core_project(&blk.u, g, &blk.v))
-                        .collect();
-                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo);
+                    // Core synchronization: C_i = Uᵀ G_i V, C̄ = AR(C_i) —
+                    // per-worker projections fan out over threads.
+                    let mut cores: Vec<Matrix> = ctx
+                        .exec
+                        .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v));
+                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo, ctx.exec);
                     let cbar = &cores[0];
 
                     // AdamW in core space (§3.4).
@@ -376,6 +384,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -442,6 +451,7 @@ mod tests {
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &crate::exec::ExecBackend::Sequential,
         });
         ledger.end_step();
         let k = 8;
@@ -556,6 +566,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

@@ -102,7 +102,7 @@ impl DistOptimizer for TsrSgd {
                 BlockState::Dense { m } => {
                     let mut per_worker: Vec<_> =
                         ctx.grads.iter().map(|g| g[b].clone()).collect();
-                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo);
+                    collective::sync_mean(&mut per_worker, class, ctx.ledger, ctx.topo, ctx.exec);
                     let g = &per_worker[0];
                     for i in 0..m.data.len() {
                         m.data[i] = beta * m.data[i] + (1.0 - beta) * g.data[i];
@@ -126,24 +126,24 @@ impl DistOptimizer for TsrSgd {
                         let mut rng = Xoshiro256::for_stream(self.cfg.seed, stream);
                         let n = grads_b[0].cols;
                         let omega = Matrix::gaussian(n, blk.k, 1.0, &mut rng);
-                        let mut qs: Vec<Matrix> = grads_b
-                            .iter()
-                            .map(|g| {
+                        // rSVD sketches: one worker per OS thread on the
+                        // threaded backend (same fan-out as TSR-Adam).
+                        let power_q = self.cfg.power_q;
+                        let pairs: Vec<(Matrix, Matrix)> =
+                            ctx.exec.map_workers(grads_b.len(), |i| {
+                                let g = grads_b[i];
                                 let mut q = orth(&matmul(g, &omega));
-                                for _ in 0..self.cfg.power_q {
+                                for _ in 0..power_q {
                                     let q_row = orth(&matmul_tn(g, &q));
                                     q = orth(&matmul(g, &q_row));
                                 }
-                                q
-                            })
-                            .collect();
-                        let mut bs: Vec<Matrix> = qs
-                            .iter()
-                            .zip(grads_b.iter())
-                            .map(|(q, g)| matmul_tn(q, g))
-                            .collect();
-                        collective::sync_mean(&mut bs, class, ctx.ledger, ctx.topo);
-                        collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo);
+                                let bmat = matmul_tn(&q, g);
+                                (q, bmat)
+                            });
+                        let (mut qs, mut bs): (Vec<Matrix>, Vec<Matrix>) =
+                            pairs.into_iter().unzip();
+                        collective::sync_mean(&mut bs, class, ctx.ledger, ctx.topo, ctx.exec);
+                        collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo, ctx.exec);
                         ctx.ledger.mark_refresh();
                         let mut qbar = qs.swap_remove(0);
                         if self.cfg.reorth_qbar {
@@ -166,11 +166,10 @@ impl DistOptimizer for TsrSgd {
                         blk.initialized = true;
                     }
 
-                    let mut cores: Vec<Matrix> = grads_b
-                        .iter()
-                        .map(|g| core_project(&blk.u, g, &blk.v))
-                        .collect();
-                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo);
+                    let mut cores: Vec<Matrix> = ctx
+                        .exec
+                        .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v));
+                    collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo, ctx.exec);
                     let cbar = &cores[0];
 
                     for i in 0..blk.m.data.len() {
@@ -268,6 +267,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
@@ -307,6 +307,7 @@ mod tests {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

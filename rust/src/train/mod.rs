@@ -7,6 +7,7 @@ pub mod gradsim;
 pub mod pjrt_source;
 
 use crate::comm::{CommLedger, Topology};
+use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 use crate::metrics::RunMetrics;
 use crate::model::BlockSpec;
@@ -36,6 +37,11 @@ pub struct Trainer {
     /// discrete-event engine, accumulating predicted step time and
     /// exposed-communication time into the run metrics.
     pub sim: Option<SimCfg>,
+    /// Execution backend for collectives and hot-path parallelism
+    /// (DESIGN.md §8). Defaults to `TSR_BACKEND` (else sequential);
+    /// `tsr train --backend threaded` overrides it. Both backends are
+    /// bitwise-identical, so any run is reproducible across them.
+    pub exec: ExecBackend,
 }
 
 impl Trainer {
@@ -46,7 +52,14 @@ impl Trainer {
             log_every: 50,
             verbose: false,
             sim: None,
+            exec: ExecBackend::from_env(),
         }
+    }
+
+    /// Builder-style backend override.
+    pub fn with_backend(mut self, exec: ExecBackend) -> Self {
+        self.exec = exec;
+        self
     }
 
     /// Run `steps` optimizer steps; returns per-step metrics + the ledger.
@@ -71,6 +84,7 @@ impl Trainer {
                 ledger: &mut ledger,
                 topo: &self.topo,
                 lr_mult: self.schedule.multiplier(t),
+                exec: &self.exec,
             };
             opt.step(&mut ctx);
             let dt = t0.elapsed().as_secs_f64();

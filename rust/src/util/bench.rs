@@ -8,6 +8,7 @@
 //! bench_name              time: [median 1.234 ms]  (n=52, mad 0.8%)
 //! ```
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
 pub struct Bencher {
@@ -91,6 +92,36 @@ impl Bencher {
     pub fn results(&self) -> &[(String, f64)] {
         &self.results
     }
+
+    /// Write the collected results (p50 medians from [`Self::bench`],
+    /// raw scalars from [`Self::report`]) as a `BENCH_<name>.json`
+    /// artifact under the `BENCH_JSON_DIR` directory. Returns `None`
+    /// (and writes nothing) when the env var is unset — local runs stay
+    /// print-only; CI's bench-smoke job sets it and uploads the files,
+    /// which `ci/bench_regression.py` then compares against a baseline.
+    pub fn write_json(&self, bench: &str) -> Option<std::path::PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").ok()?;
+        let entries: Vec<Json> = self
+            .results
+            .iter()
+            .map(|(n, v)| {
+                Json::obj(vec![
+                    ("name", Json::str(n.clone())),
+                    ("value", Json::num(*v)),
+                ])
+            })
+            .collect();
+        let j = Json::obj(vec![
+            ("bench", Json::str(bench)),
+            ("stat", Json::str("p50")),
+            ("results", Json::Arr(entries)),
+        ]);
+        std::fs::create_dir_all(&dir).ok()?;
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{bench}.json"));
+        std::fs::write(&path, j.to_string_pretty()).ok()?;
+        println!("-> wrote {}", path.display());
+        Some(path)
+    }
 }
 
 pub fn fmt_time(secs: f64) -> String {
@@ -135,6 +166,23 @@ mod tests {
         });
         assert!(t > 0.0);
         assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn write_json_is_gated_on_env_and_roundtrips() {
+        let mut b = Bencher::new();
+        b.report("x.y", 1.25, "s");
+        if std::env::var("BENCH_JSON_DIR").is_err() {
+            assert!(b.write_json("unit_test_nowrite").is_none());
+        }
+        let dir = std::env::temp_dir().join("tsr_bench_json_test");
+        std::env::set_var("BENCH_JSON_DIR", &dir);
+        let p = b.write_json("unit_test").expect("written");
+        std::env::remove_var("BENCH_JSON_DIR");
+        let s = std::fs::read_to_string(&p).unwrap();
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.get("bench").as_str(), Some("unit_test"));
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

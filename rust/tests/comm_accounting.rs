@@ -136,7 +136,15 @@ fn hierarchical_allreduce_matches_oracle_and_level_decomposition() {
                 .collect();
             let mut oracle = ws.clone();
             let mut ledger = CommLedger::new();
-            collective::sync_mean(&mut ws, LayerClass::Linear, &mut ledger, &topo);
+            // from_env: the TSR_BACKEND=threaded CI pass exercises the
+            // rendezvous rings against the same closed forms.
+            collective::sync_mean(
+                &mut ws,
+                LayerClass::Linear,
+                &mut ledger,
+                &topo,
+                &tsr::exec::ExecBackend::from_env(),
+            );
             ledger.end_step();
             collective::direct_allreduce_mean(&mut oracle);
             for (a, b) in ws.iter().zip(&oracle) {

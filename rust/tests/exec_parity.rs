@@ -1,0 +1,208 @@
+//! Cross-backend parity suite (DESIGN.md §8): for every method and
+//! topology, the `Threaded` execution backend (one OS thread per
+//! simulated worker, rendezvous ring collectives) must produce
+//! **bitwise-identical** final weights and **identical ledger byte
+//! columns** to the `Sequential` reference loop — the keystone
+//! invariant that makes CI's determinism gate and the BENCH_*
+//! trajectory meaningful. Runs cover a full refresh period so both the
+//! steady-state core syncs and the refresh collectives (sketches /
+//! dense SVD payloads) cross the thread boundary at least once.
+
+use tsr::comm::{CommLedger, LayerClass, Topology};
+use tsr::exec::ExecBackend;
+use tsr::exp::MethodCfg;
+use tsr::linalg::Matrix;
+use tsr::model::{BlockSpec, ModelSpec};
+use tsr::optim::onesided::OneSidedRefresh;
+use tsr::optim::{AdamHyper, LrSchedule, StepCtx, TsrAdam, TsrConfig};
+use tsr::train::gradsim::QuadraticSim;
+use tsr::train::{GradSource, Trainer};
+use tsr::util::rng::Xoshiro256;
+
+/// All seven methods at parity-test scale, refresh period 4.
+fn all_methods() -> Vec<MethodCfg> {
+    let tsr_cfg = TsrConfig {
+        rank: 8,
+        rank_emb: 8,
+        refresh_every: 4,
+        refresh_emb: 4,
+        oversample: 4,
+        ..Default::default()
+    };
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::OneSided {
+            rank: 8,
+            k: 4,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        MethodCfg::Tsr(tsr_cfg.clone()),
+        MethodCfg::TsrSgd(tsr_cfg),
+        MethodCfg::PowerSgd { rank: 8 },
+        MethodCfg::Sign { k_var: 4 },
+        MethodCfg::TopK { keep_frac: 0.05 },
+    ]
+}
+
+fn weight_bits(params: &[Matrix]) -> Vec<Vec<u32>> {
+    params
+        .iter()
+        .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Ledger equality across every byte column, per step.
+fn assert_ledgers_equal(a: &CommLedger, b: &CommLedger, label: &str) {
+    assert_eq!(a.num_steps(), b.num_steps(), "{label}: step count");
+    for t in 0..a.num_steps() {
+        let (x, y) = (a.step(t), b.step(t));
+        assert_eq!(x.total, y.total, "{label}: total @ step {t}");
+        assert_eq!(x.embedding, y.embedding, "{label}: embedding @ step {t}");
+        assert_eq!(x.linear, y.linear, "{label}: linear @ step {t}");
+        assert_eq!(x.vector, y.vector, "{label}: vector @ step {t}");
+        assert_eq!(x.intra, y.intra, "{label}: intra wire @ step {t}");
+        assert_eq!(x.inter, y.inter, "{label}: inter wire @ step {t}");
+        assert_eq!(x.refresh, y.refresh, "{label}: refresh flag @ step {t}");
+    }
+}
+
+/// One full training run on the quadratic proxy under `exec`.
+fn run_once(
+    method: &MethodCfg,
+    topo: Topology,
+    exec: ExecBackend,
+    steps: usize,
+) -> (Vec<Matrix>, CommLedger) {
+    let spec = ModelSpec::proxy(200, 32, 64, 2, 2);
+    let workers = topo.workers();
+    let mut sim = QuadraticSim::new(&spec, workers, 16, 0.01, 33);
+    let blocks = sim.blocks().to_vec();
+    let hyper = AdamHyper {
+        lr: 0.05,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = method.build(&blocks, hyper, workers);
+    let mut params = sim.init_params(7);
+    let trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(exec);
+    let (_metrics, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, steps);
+    (params, ledger)
+}
+
+fn assert_backend_parity(method: &MethodCfg, topo: Topology, steps: usize, label: &str) {
+    let (w_seq, l_seq) = run_once(method, topo.clone(), ExecBackend::Sequential, steps);
+    let (w_thr, l_thr) = run_once(method, topo, ExecBackend::threaded(), steps);
+    assert_eq!(
+        weight_bits(&w_seq),
+        weight_bits(&w_thr),
+        "{label}: weights must be bitwise identical"
+    );
+    assert_ledgers_equal(&l_seq, &l_thr, label);
+    // Sanity: the run actually communicated.
+    assert!(l_seq.step(0).total > 0, "{label}: no bytes metered");
+}
+
+/// The full matrix: all 7 methods × {single_node, multi_node}, one
+/// refresh period (K = 4) plus two steady steps each.
+#[test]
+fn all_methods_bitwise_identical_across_backends() {
+    for method in &all_methods() {
+        for (tname, topo) in [
+            ("single_node", Topology::single_node(4)),
+            ("multi_node", Topology::multi_node(2, 2)),
+        ] {
+            let label = format!("{}/{tname}", method.label());
+            assert_backend_parity(method, topo, 6, &label);
+        }
+    }
+}
+
+/// Worker count that does not tile the topology (3 workers on a 2×2
+/// cluster): `sync_mean` takes its flat-ring fallback on both backends
+/// — parity must hold there too, byte columns included.
+#[test]
+fn shape_mismatch_fallback_parity() {
+    for method in [
+        MethodCfg::Adam,
+        MethodCfg::Tsr(TsrConfig {
+            rank: 8,
+            rank_emb: 8,
+            refresh_every: 3,
+            refresh_emb: 3,
+            oversample: 4,
+            ..Default::default()
+        }),
+    ] {
+        let spec = ModelSpec::proxy(200, 32, 64, 2, 2);
+        let mut outs = Vec::new();
+        for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+            // 3 workers under a 4-worker topology shape.
+            let mut sim = QuadraticSim::new(&spec, 3, 16, 0.01, 21);
+            let blocks = sim.blocks().to_vec();
+            let mut opt = method.build(&blocks, AdamHyper::default(), 3);
+            let mut params = sim.init_params(9);
+            let trainer =
+                Trainer::new(Topology::multi_node(2, 2), LrSchedule::constant()).with_backend(exec);
+            let (_m, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, 4);
+            outs.push((params, ledger));
+        }
+        let label = format!("{}/fallback", method.label());
+        assert_eq!(weight_bits(&outs[0].0), weight_bits(&outs[1].0), "{label}");
+        assert_ledgers_equal(&outs[0].1, &outs[1].1, &label);
+    }
+}
+
+/// Ragged-shard regression: a 7×11 block (numel 77) over 3 or 4 workers
+/// leaves unequal ring chunks at every level — single-node flat ring,
+/// leader-ring (gpus_per_node = 1), and the true two-level schedule.
+/// The threaded pull schedule must bit-match the sequential one anyway.
+#[test]
+fn ragged_shard_numel_not_divisible_by_workers() {
+    let blocks = vec![BlockSpec {
+        name: "w".into(),
+        rows: 7,
+        cols: 11,
+        class: LayerClass::Linear,
+    }];
+    let cfg = TsrConfig {
+        rank: 3,
+        rank_emb: 3,
+        refresh_every: 3,
+        refresh_emb: 3,
+        oversample: 2,
+        ..Default::default()
+    };
+    for topo in [
+        Topology::single_node(3),
+        Topology::multi_node(3, 1),
+        Topology::multi_node(2, 2),
+    ] {
+        let workers = topo.workers();
+        let mut outs = Vec::new();
+        for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+            let mut opt = TsrAdam::new(&blocks, AdamHyper::default(), cfg.clone());
+            let mut params = vec![Matrix::from_fn(7, 11, |i, j| ((i * 3 + j) % 5) as f32 * 0.1)];
+            let mut ledger = CommLedger::new();
+            let mut rng = Xoshiro256::new(55);
+            for _ in 0..6 {
+                let mut grads: Vec<Vec<Matrix>> = (0..workers)
+                    .map(|_| vec![Matrix::gaussian(7, 11, 1.0, &mut rng)])
+                    .collect();
+                opt.step(&mut StepCtx {
+                    params: &mut params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &topo,
+                    lr_mult: 1.0,
+                    exec: &exec,
+                });
+                ledger.end_step();
+            }
+            outs.push((params, ledger));
+        }
+        let label = format!("ragged {}x{}", topo.nodes, topo.gpus_per_node);
+        assert_eq!(weight_bits(&outs[0].0), weight_bits(&outs[1].0), "{label}");
+        assert_ledgers_equal(&outs[0].1, &outs[1].1, &label);
+    }
+}

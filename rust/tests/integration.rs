@@ -35,6 +35,7 @@ fn run_ledger(spec: &ModelSpec, method: &MethodCfg, steps: usize, workers: usize
             ledger: &mut ledger,
             topo: &topo,
             lr_mult: 1.0,
+            exec: &tsr::exec::ExecBackend::Sequential,
         });
         ledger.end_step();
     }
@@ -262,6 +263,7 @@ fn wire_bytes_decompose_per_level_for_every_method() {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &tsr::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }

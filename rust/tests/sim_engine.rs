@@ -102,6 +102,7 @@ fn sync_plan_matches_metered_ledger_for_every_method() {
                 ledger: &mut ledger,
                 topo: &topo,
                 lr_mult: 1.0,
+                exec: &tsr::exec::ExecBackend::Sequential,
             });
             ledger.end_step();
         }
