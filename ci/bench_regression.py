@@ -9,22 +9,29 @@ seconds-per-op for each benchmark when BENCH_JSON_DIR is set:
 
 Usage:
     ci/bench_regression.py --current BENCH_x.json [--baseline old.json]
-                           [--threshold 0.30]
+                           [--fallback-baseline run1.json] [--threshold 0.30]
 
 * With a baseline: fail (exit 1) if any benchmark's current p50 exceeds
   baseline * (1 + threshold). Benchmarks present on only one side are
   reported but never fail the check (benches come and go).
-* Without a baseline (the default on CI until a baseline artifact is
-  promoted): validate the artifact's shape, print the table, exit 0 —
-  the uploaded JSON is the first point of the perf trajectory.
+* `--baseline` may name a file that does not exist yet (the promoted
+  in-repo baseline slot, ci/baselines/). When it is missing and
+  `--fallback-baseline` is given, that file is used instead — CI runs
+  the benches twice on the same runner and gates run 2 against run 1,
+  so the threshold check is ENFORCED on every run even before a
+  baseline is promoted. A missing fallback is an error.
+* Without any baseline argument: validate the artifact's shape, print
+  the table, exit 0 (legacy bootstrap mode).
 
 The default threshold is 30%: shared CI runners are noisy and the smoke
 configuration (BENCH_MS small) takes few samples, so anything tighter
-flakes. Tighten it once a pinned-runner baseline exists.
+flakes. Tighten it once a pinned-runner baseline is promoted to
+ci/baselines/.
 """
 
 import argparse
 import json
+import os
 import sys
 
 
@@ -46,6 +53,11 @@ def main():
     ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
     ap.add_argument("--baseline", help="baseline BENCH_*.json to compare against")
     ap.add_argument(
+        "--fallback-baseline",
+        help="baseline used when --baseline does not exist "
+        "(a same-runner rerun artifact; keeps the gate enforcing)",
+    )
+    ap.add_argument(
         "--threshold",
         type=float,
         default=0.30,
@@ -56,13 +68,21 @@ def main():
     bench, cur = load(args.current)
     if not cur:
         sys.exit(f"{args.current}: empty results")
-    if not args.baseline:
+    baseline = args.baseline
+    if baseline and not os.path.exists(baseline):
+        if args.fallback_baseline:
+            print(f"[{bench}] no promoted baseline at {baseline}; "
+                  f"gating against same-runner rerun {args.fallback_baseline}")
+            baseline = args.fallback_baseline
+        else:
+            sys.exit(f"{baseline}: baseline not found and no --fallback-baseline given")
+    if not baseline:
         print(f"[{bench}] no baseline — artifact validated, {len(cur)} entries:")
         for name, v in cur.items():
             print(f"  {name:<50} {v:.6g}")
         return
 
-    _, base = load(args.baseline)
+    _, base = load(baseline)
     failures = []
     for name, v in sorted(cur.items()):
         if name not in base:

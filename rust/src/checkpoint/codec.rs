@@ -1,0 +1,263 @@
+//! Bit-exact JSON codecs for checkpoint payloads.
+//!
+//! The bitwise-resume contract (DESIGN.md §9) forbids any value from
+//! drifting through serialization. JSON numbers are f64 and our writer
+//! collapses `-0.0` to `0`, so floats are NOT stored as JSON numbers:
+//! * f32 tensors → a hex string of their little-endian bit patterns
+//!   (8 hex chars per element; exact for every bit pattern including
+//!   -0.0, subnormals, infinities, and NaN payloads),
+//! * f64 accumulators → a 16-hex-char string of `to_bits()`,
+//! * u64 counters / RNG words → 16-hex-char strings (f64 can only
+//!   represent integers exactly up to 2⁵³).
+//! Small integers (shapes, byte counts < 2⁵³) stay plain JSON numbers.
+
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+
+const HEX: &[u8; 16] = b"0123456789abcdef";
+
+fn push_byte_hex(out: &mut String, b: u8) {
+    out.push(HEX[(b >> 4) as usize] as char);
+    out.push(HEX[(b & 0xF) as usize] as char);
+}
+
+/// Little-endian bit-pattern hex of an f32 slice (8 chars/element).
+pub fn f32s_to_hex(data: &[f32]) -> String {
+    let mut out = String::with_capacity(data.len() * 8);
+    for v in data {
+        for b in v.to_le_bytes() {
+            push_byte_hex(&mut out, b);
+        }
+    }
+    out
+}
+
+fn hex_val(c: u8) -> Result<u8, String> {
+    match c {
+        b'0'..=b'9' => Ok(c - b'0'),
+        b'a'..=b'f' => Ok(c - b'a' + 10),
+        b'A'..=b'F' => Ok(c - b'A' + 10),
+        _ => Err(format!("invalid hex digit {:?}", c as char)),
+    }
+}
+
+fn bytes_from_hex(s: &str) -> Result<Vec<u8>, String> {
+    let b = s.as_bytes();
+    if b.len() % 2 != 0 {
+        return Err(format!("odd hex length {}", b.len()));
+    }
+    let mut out = Vec::with_capacity(b.len() / 2);
+    for pair in b.chunks_exact(2) {
+        out.push((hex_val(pair[0])? << 4) | hex_val(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// Inverse of [`f32s_to_hex`].
+pub fn f32s_from_hex(s: &str) -> Result<Vec<f32>, String> {
+    let bytes = bytes_from_hex(s)?;
+    if bytes.len() % 4 != 0 {
+        return Err(format!("hex length {} is not a whole f32 count", s.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn u64_to_json(x: u64) -> Json {
+    Json::str(format!("{x:016x}"))
+}
+
+/// Decode a u64 bit word. The writer always emits exactly 16 hex
+/// digits, so any other length is a truncated/corrupted field — reject
+/// it rather than decode a silently wrong value.
+pub fn u64_from_json(j: &Json, what: &str) -> Result<u64, String> {
+    let s = j.as_str().ok_or_else(|| format!("{what}: expected hex string"))?;
+    if s.len() != 16 {
+        return Err(format!("{what}: expected 16 hex digits, got {:?}", s));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| format!("{what}: bad hex {s:?}: {e}"))
+}
+
+/// Fetch `key` from an object, erroring when the key is ABSENT — this
+/// keeps a present-but-null optional field (e.g. `init_step`)
+/// distinguishable from a field a corrupted manifest dropped
+/// (`Json::get` alone returns `Null` for both).
+pub fn require<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json, String> {
+    j.as_obj()
+        .and_then(|o| o.get(key))
+        .ok_or_else(|| format!("{what}: missing field {key:?}"))
+}
+
+/// `Option<u64>` as hex-or-null (refresh `init_step` bookkeeping).
+pub fn opt_u64_to_json(x: Option<u64>) -> Json {
+    match x {
+        Some(v) => u64_to_json(v),
+        None => Json::Null,
+    }
+}
+
+pub fn opt_u64_from_json(j: &Json, what: &str) -> Result<Option<u64>, String> {
+    match j {
+        Json::Null => Ok(None),
+        other => u64_from_json(other, what).map(Some),
+    }
+}
+
+/// f64 as its exact bit pattern (accumulators like `predicted_step_secs`
+/// must resume bit-identically).
+pub fn f64_to_json(x: f64) -> Json {
+    u64_to_json(x.to_bits())
+}
+
+pub fn f64_from_json(j: &Json, what: &str) -> Result<f64, String> {
+    u64_from_json(j, what).map(f64::from_bits)
+}
+
+/// f32 scalar via its bit pattern (writer emits exactly 8 hex digits).
+pub fn f32_to_json(x: f32) -> Json {
+    Json::str(format!("{:08x}", x.to_bits()))
+}
+
+pub fn f32_from_json(j: &Json, what: &str) -> Result<f32, String> {
+    let s = j.as_str().ok_or_else(|| format!("{what}: expected hex string"))?;
+    if s.len() != 8 {
+        return Err(format!("{what}: expected 8 hex digits, got {:?}", s));
+    }
+    u32::from_str_radix(s, 16)
+        .map(f32::from_bits)
+        .map_err(|e| format!("{what}: bad hex {s:?}: {e}"))
+}
+
+/// `{rows, cols, f32le}` — shape plus the bit-exact payload.
+pub fn matrix_to_json(m: &Matrix) -> Json {
+    Json::obj(vec![
+        ("rows", Json::num(m.rows as f64)),
+        ("cols", Json::num(m.cols as f64)),
+        ("f32le", Json::str(f32s_to_hex(&m.data))),
+    ])
+}
+
+pub fn matrix_from_json(j: &Json, what: &str) -> Result<Matrix, String> {
+    let rows = j.get("rows").as_usize().ok_or_else(|| format!("{what}: missing rows"))?;
+    let cols = j.get("cols").as_usize().ok_or_else(|| format!("{what}: missing cols"))?;
+    let data = f32s_from_hex(
+        j.get("f32le").as_str().ok_or_else(|| format!("{what}: missing f32le"))?,
+    )
+    .map_err(|e| format!("{what}: {e}"))?;
+    if data.len() != rows * cols {
+        return Err(format!(
+            "{what}: payload has {} elements for a {rows}x{cols} matrix",
+            data.len()
+        ));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// [`matrix_from_json`] that also enforces the shape the loading
+/// optimizer allocated — the structural guard every `load_state` uses.
+pub fn matrix_from_json_expect(
+    j: &Json,
+    rows: usize,
+    cols: usize,
+    what: &str,
+) -> Result<Matrix, String> {
+    let m = matrix_from_json(j, what)?;
+    if (m.rows, m.cols) != (rows, cols) {
+        return Err(format!(
+            "{what}: checkpoint is {}x{} but the run expects {rows}x{cols}",
+            m.rows, m.cols
+        ));
+    }
+    Ok(m)
+}
+
+pub fn matrices_to_json(ms: &[Matrix]) -> Json {
+    Json::arr(ms.iter().map(matrix_to_json).collect())
+}
+
+pub fn matrices_from_json(j: &Json, what: &str) -> Result<Vec<Matrix>, String> {
+    j.as_arr()
+        .ok_or_else(|| format!("{what}: expected array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, m)| matrix_from_json(m, &format!("{what}[{i}]")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_hex_roundtrips_every_special_bit_pattern() {
+        let vals = vec![
+            0.0f32,
+            -0.0, // the case plain JSON numbers lose
+            1.0,
+            -1.5e-8,
+            f32::MIN_POSITIVE / 8.0, // subnormal
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7fc0_dead), // NaN payload
+        ];
+        let back = f32s_from_hex(&f32s_to_hex(&vals)).unwrap();
+        assert_eq!(vals.len(), back.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn u64_and_f64_roundtrip_extremes() {
+        for x in [0u64, 1, u64::MAX, 1 << 63, 0x0123_4567_89ab_cdef] {
+            assert_eq!(u64_from_json(&u64_to_json(x), "x").unwrap(), x);
+        }
+        for x in [0.0f64, -0.0, 1.0 / 3.0, f64::MAX, f64::NAN] {
+            let back = f64_from_json(&f64_to_json(x), "x").unwrap();
+            assert_eq!(x.to_bits(), back.to_bits());
+        }
+    }
+
+    #[test]
+    fn scalar_decoders_reject_truncated_fields() {
+        // The writers emit fixed 16/8-digit words; anything else is a
+        // corrupted manifest and must not decode to a wrong value.
+        assert!(u64_from_json(&Json::str("3f80"), "t").is_err());
+        assert!(u64_from_json(&Json::str("00000000000000000a"), "t").is_err());
+        assert!(f32_from_json(&Json::str("3f80"), "x").is_err());
+        assert!(u64_from_json(&Json::num(5.0), "t").is_err());
+    }
+
+    #[test]
+    fn require_distinguishes_absent_from_null() {
+        let j = Json::obj(vec![("present_null", Json::Null)]);
+        assert!(require(&j, "present_null", "j").is_ok());
+        assert_eq!(require(&j, "present_null", "j").unwrap(), &Json::Null);
+        assert!(require(&j, "absent", "j").is_err());
+        assert!(require(&Json::Null, "any", "j").is_err());
+    }
+
+    #[test]
+    fn matrix_roundtrip_bitwise_through_text() {
+        let mut rng = crate::util::rng::Xoshiro256::new(5);
+        let m = Matrix::gaussian(7, 13, 1.0, &mut rng);
+        // Through the full text layer, as a checkpoint file would go.
+        let text = matrix_to_json(&m).to_string_pretty();
+        let back = matrix_from_json(&Json::parse(&text).unwrap(), "m").unwrap();
+        assert_eq!((back.rows, back.cols), (7, 13));
+        for (a, b) in m.data.iter().zip(&back.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(matrix_from_json_expect(&matrix_to_json(&m), 7, 12, "m").is_err());
+    }
+
+    #[test]
+    fn malformed_hex_is_rejected() {
+        assert!(f32s_from_hex("abc").is_err()); // odd length
+        assert!(f32s_from_hex("zz00zz00").is_err()); // non-hex
+        assert!(f32s_from_hex("aabb").is_err()); // not a whole f32
+    }
+}

@@ -1,0 +1,272 @@
+//! Checkpoint / resume subsystem (DESIGN.md §9).
+//!
+//! A checkpoint is one versioned JSON manifest capturing *everything*
+//! step-dependent in a run:
+//! * the replicated parameters,
+//! * the optimizer's full state ([`crate::optim::DistOptimizer::save_state`]:
+//!   step counter, dense/core Adam moments, bases U/V, error-feedback
+//!   buffers, refresh bookkeeping),
+//! * the gradient source's RNG stream position,
+//! * the run-so-far metrics (losses, predicted-time accumulators) and
+//!   every closed [`crate::comm::CommLedger`] step record,
+//! * a free-form run-config echo the CLI uses to rebuild the setup.
+//!
+//! **Determinism contract.** A run interrupted at any step and resumed
+//! from its checkpoint — same world size, either execution backend —
+//! produces the byte-identical deterministic metrics JSON (weights
+//! fingerprint and every ledger column included) as the uninterrupted
+//! run. Enforced by `rust/tests/checkpoint.rs` and CI's determinism
+//! gate. All floats are stored as bit patterns ([`codec`]), never as
+//! JSON numbers.
+//!
+//! **Elastic restarts.** Resuming with a different worker count is
+//! supported (not bitwise — the noise stream fans out differently):
+//! replicated state reloads as-is, and per-worker error-feedback
+//! buffers are regathered to their canonical across-worker mean on
+//! save and re-sharded over the new worker count on load
+//! ([`errors_to_json`] / [`errors_from_json`]), ragged
+//! `numel % workers != 0` included.
+
+pub mod codec;
+
+use crate::comm::CommLedger;
+use crate::linalg::Matrix;
+use crate::metrics::RunMetrics;
+use crate::optim::DistOptimizer;
+use crate::train::GradSource;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Manifest format version; bump on any incompatible layout change.
+pub const CHECKPOINT_VERSION: u64 = 1;
+
+/// One saved training state. See the module docs for the contract.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Optimizer steps completed; the resumed run starts at this step.
+    pub step: u64,
+    /// World size the checkpoint was taken at.
+    pub workers: usize,
+    /// `DistOptimizer::name()` — structural guard against resuming with
+    /// a different method.
+    pub method: String,
+    pub params: Vec<Matrix>,
+    pub opt_state: Json,
+    /// Gradient-source state (`Json::Null` for stateless sources).
+    pub source_state: Json,
+    pub metrics: Json,
+    pub ledger: Json,
+    /// Run-config echo (CLI arguments); the resume path rebuilds the
+    /// setup from this rather than trusting re-typed flags.
+    pub config: Json,
+}
+
+impl Checkpoint {
+    /// Snapshot a live run. Call after `CommLedger::end_step` so the
+    /// ledger has no half-accumulated step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn capture(
+        step: u64,
+        workers: usize,
+        params: &[Matrix],
+        opt: &dyn DistOptimizer,
+        source: &dyn GradSource,
+        metrics: &RunMetrics,
+        ledger: &CommLedger,
+        config: Json,
+    ) -> Self {
+        Self {
+            step,
+            workers,
+            method: opt.name().to_string(),
+            params: params.to_vec(),
+            opt_state: opt.save_state(),
+            source_state: source.save_state(),
+            metrics: metrics.state_to_json(),
+            ledger: ledger.to_json(),
+            config,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("step", codec::u64_to_json(self.step)),
+            ("workers", Json::num(self.workers as f64)),
+            ("method", Json::str(self.method.clone())),
+            ("params", codec::matrices_to_json(&self.params)),
+            ("opt_state", self.opt_state.clone()),
+            ("source_state", self.source_state.clone()),
+            ("metrics", self.metrics.clone()),
+            ("ledger", self.ledger.clone()),
+            ("config", self.config.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let version = j.get("version").as_u64().ok_or("checkpoint: missing version")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(format!(
+                "checkpoint: version {version} unsupported (this build reads {CHECKPOINT_VERSION})"
+            ));
+        }
+        Ok(Self {
+            step: codec::u64_from_json(j.get("step"), "checkpoint.step")?,
+            workers: j.get("workers").as_usize().ok_or("checkpoint: missing workers")?,
+            method: j
+                .get("method")
+                .as_str()
+                .ok_or("checkpoint: missing method")?
+                .to_string(),
+            params: codec::matrices_from_json(j.get("params"), "checkpoint.params")?,
+            opt_state: j.get("opt_state").clone(),
+            source_state: j.get("source_state").clone(),
+            metrics: j.get("metrics").clone(),
+            ledger: j.get("ledger").clone(),
+            config: j.get("config").clone(),
+        })
+    }
+
+    /// Write `ckpt_step<step>.json` under `dir` (atomic tmp+rename).
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf, String> {
+        let path = dir.as_ref().join(format!("ckpt_step{}.json", self.step));
+        self.to_json().write_file_atomic(&path)?;
+        Ok(path)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        Self::from_json(&Json::read_file(path)?)
+    }
+}
+
+/// Serialize per-worker error-feedback buffers: the exact per-worker
+/// list (bitwise same-world-size resume) plus their canonical
+/// across-worker mean (the elastic-restart payload).
+pub fn errors_to_json(errors: &[Matrix]) -> Json {
+    Json::obj(vec![
+        ("mean", codec::matrix_to_json(&errors_mean(errors))),
+        ("per_worker", codec::matrices_to_json(errors)),
+    ])
+}
+
+/// Canonical mean of per-worker buffers, summed in worker order (a
+/// fixed, backend-independent reduction order).
+fn errors_mean(errors: &[Matrix]) -> Matrix {
+    let mut mean = errors[0].clone();
+    for e in &errors[1..] {
+        mean.add_assign(e);
+    }
+    mean.scale(1.0 / errors.len() as f32);
+    mean
+}
+
+/// Restore error-feedback buffers for a (possibly different) world
+/// size of `workers`:
+/// * saved count == `workers` → bit-exact per-worker restore;
+/// * saved count != `workers` → **re-shard the canonical mean**:
+///   worker `w` holds `workers · mean` on its contiguous shard (the
+///   same [`crate::exec::shard_bounds`] split the collectives use —
+///   ragged `numel % workers != 0` gives shards differing by one
+///   element) and zeros elsewhere. The across-worker mean of the
+///   restored buffers reproduces the canonical mean elementwise —
+///   bitwise for power-of-two worker counts, to one f32 rounding of
+///   `(W·c)/W` otherwise (elastic restarts are not bitwise anyway).
+///
+/// A manifest whose `per_worker` field is missing or malformed is
+/// rejected — never silently mean-resharded — so a same-world-size
+/// resume cannot quietly lose the bitwise contract.
+pub fn errors_from_json(
+    j: &Json,
+    rows: usize,
+    cols: usize,
+    workers: usize,
+    what: &str,
+) -> Result<Vec<Matrix>, String> {
+    let saved = j
+        .get("per_worker")
+        .as_arr()
+        .ok_or_else(|| format!("{what}: missing per_worker list"))?;
+    if saved.len() == workers {
+        return saved
+            .iter()
+            .enumerate()
+            .map(|(w, m)| {
+                codec::matrix_from_json_expect(m, rows, cols, &format!("{what}.per_worker[{w}]"))
+            })
+            .collect();
+    }
+    let mean = codec::matrix_from_json_expect(j.get("mean"), rows, cols, &format!("{what}.mean"))?;
+    Ok(reshard_mean(&mean, workers))
+}
+
+/// The elastic re-shard described on [`errors_from_json`].
+pub fn reshard_mean(mean: &Matrix, workers: usize) -> Vec<Matrix> {
+    let bounds = crate::exec::shard_bounds(mean.numel(), workers);
+    (0..workers)
+        .map(|w| {
+            let mut m = Matrix::zeros(mean.rows, mean.cols);
+            for i in bounds[w]..bounds[w + 1] {
+                m.data[i] = workers as f32 * mean.data[i];
+            }
+            m
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn errors_roundtrip_exactly_at_same_world_size() {
+        let mut rng = Xoshiro256::new(3);
+        let errors: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(5, 7, 1.0, &mut rng)).collect();
+        let j = errors_to_json(&errors);
+        let back = errors_from_json(&j, 5, 7, 3, "e").unwrap();
+        for (a, b) in errors.iter().zip(&back) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_reshard_preserves_canonical_mean_on_ragged_numel() {
+        // 5×7 = 35 elements over 2 workers: 17/18 split (ragged), and
+        // (2·c)/2 is exact in f32 — the restored across-worker mean
+        // must equal the canonical mean BITWISE.
+        let mut rng = Xoshiro256::new(9);
+        let errors: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(5, 7, 1.0, &mut rng)).collect();
+        let j = errors_to_json(&errors);
+        let back = errors_from_json(&j, 5, 7, 2, "e").unwrap();
+        assert_eq!(back.len(), 2);
+        let mean = super::errors_mean(&errors);
+        for i in 0..35 {
+            let holders: Vec<f32> = back.iter().map(|m| m.data[i]).filter(|v| *v != 0.0).collect();
+            let restored_mean = back.iter().map(|m| m.data[i]).sum::<f32>() / 2.0;
+            if mean.data[i] != 0.0 {
+                assert_eq!(holders.len(), 1, "element {i} must live on exactly one shard");
+            }
+            assert_eq!(restored_mean.to_bits(), mean.data[i].to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_version() {
+        let j = Json::obj(vec![("version", Json::num(99.0))]);
+        assert!(Checkpoint::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn errors_without_per_worker_list_are_rejected_not_resharded() {
+        // A dropped/corrupted per_worker field must fail loudly — a
+        // silent mean-reshard at the same world size would break the
+        // bitwise-resume contract without any diagnostic.
+        let mut rng = Xoshiro256::new(4);
+        let errors: Vec<Matrix> = (0..2).map(|_| Matrix::gaussian(3, 3, 1.0, &mut rng)).collect();
+        let mut j = errors_to_json(&errors);
+        j.set("per_worker", Json::Null);
+        assert!(errors_from_json(&j, 3, 3, 2, "e").is_err());
+    }
+}

@@ -149,6 +149,75 @@ impl CommLedger {
         (e, l, v)
     }
 
+    /// Checkpoint serialization: every closed step record plus the
+    /// simulated-time accumulator (as its exact f64 bit pattern). The
+    /// half-accumulated `current` step is NOT captured — checkpoints
+    /// are taken between `end_step` calls (`checkpoint::Checkpoint`),
+    /// and serializing mid-step would silently drop data from the
+    /// manifest, so ANY pending accumulation (payload bytes, wire
+    /// bytes, or a refresh mark) is a hard error in every build.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let c = &self.current;
+        assert!(
+            c.total == 0
+                && c.embedding == 0
+                && c.linear == 0
+                && c.vector == 0
+                && c.intra == 0
+                && c.inter == 0
+                && !c.refresh,
+            "checkpointing a ledger with a half-accumulated step (call end_step first)"
+        );
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| {
+                Json::arr(vec![
+                    Json::num(s.embedding as f64),
+                    Json::num(s.linear as f64),
+                    Json::num(s.vector as f64),
+                    Json::num(s.intra as f64),
+                    Json::num(s.inter as f64),
+                    Json::Bool(s.refresh),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("steps", Json::arr(steps)),
+            ("sim_time", crate::checkpoint::codec::f64_to_json(self.sim_time)),
+        ])
+    }
+
+    /// Inverse of [`Self::to_json`]. `total` is reconstructed from the
+    /// per-class columns (an invariant of `record_bytes`).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        let mut ledger = Self::new();
+        let steps = j.get("steps").as_arr().ok_or("ledger: missing steps")?;
+        for (t, s) in steps.iter().enumerate() {
+            let cols = s.as_arr().ok_or_else(|| format!("ledger step {t}: not an array"))?;
+            if cols.len() != 6 {
+                return Err(format!("ledger step {t}: expected 6 columns, got {}", cols.len()));
+            }
+            let get = |i: usize| -> Result<usize, String> {
+                cols[i]
+                    .as_usize()
+                    .ok_or_else(|| format!("ledger step {t} col {i}: not a number"))
+            };
+            ledger.record_bytes(LayerClass::Embedding, get(0)?);
+            ledger.record_bytes(LayerClass::Linear, get(1)?);
+            ledger.record_bytes(LayerClass::Vector, get(2)?);
+            ledger.record_link(get(3)?, get(4)?);
+            if cols[5].as_bool().ok_or_else(|| format!("ledger step {t}: bad refresh flag"))? {
+                ledger.mark_refresh();
+            }
+            ledger.end_step();
+        }
+        ledger.sim_time =
+            crate::checkpoint::codec::f64_from_json(j.get("sim_time"), "ledger.sim_time")?;
+        Ok(ledger)
+    }
+
     /// Average bytes on refresh vs non-refresh steps (ablation data).
     pub fn refresh_split(&self) -> (f64, f64) {
         let (mut rs, mut rn, mut ns, mut nn) = (0f64, 0usize, 0f64, 0usize);
@@ -205,6 +274,33 @@ mod tests {
         assert_eq!(l.step(0).inter, 220);
         assert_eq!((l.step(1).intra, l.step(1).inter), (0, 0));
         assert_eq!(l.link_totals(), (330, 220));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_every_column() {
+        let mut l = CommLedger::new();
+        l.record(LayerClass::Linear, 100);
+        l.record_link(300, 200);
+        l.mark_refresh();
+        l.end_step();
+        l.record(LayerClass::Embedding, 7);
+        l.record(LayerClass::Vector, 3);
+        l.end_step();
+        l.add_sim_time(1.0 / 3.0); // not exactly representable in decimal
+        let text = l.to_json().to_string_pretty();
+        let back =
+            CommLedger::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.num_steps(), 2);
+        for t in 0..2 {
+            let (a, b) = (l.step(t), back.step(t));
+            assert_eq!(
+                (a.total, a.embedding, a.linear, a.vector, a.intra, a.inter, a.refresh),
+                (b.total, b.embedding, b.linear, b.vector, b.intra, b.inter, b.refresh),
+                "step {t}"
+            );
+        }
+        assert_eq!(l.sim_time.to_bits(), back.sim_time.to_bits());
+        assert_eq!(l.cumulative(), back.cumulative());
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
+pub mod checkpoint;
 pub mod comm;
 pub mod data;
 pub mod exec;

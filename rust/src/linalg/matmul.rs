@@ -162,24 +162,33 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
+/// Contraction order for [`core_project`] on an m×n gradient: `true`
+/// picks GV-first, `false` UᵀG-first. Both orders pay the same m·n·r
+/// for the first multiply; the second multiply costs m·r² after GV
+/// (intermediate G·V is m×r) vs n·r² after UᵀG (intermediate Uᵀ·G is
+/// r×n), so GV-first is the flop- and memory-argmin exactly when
+/// m ≤ n. Exposed so tests can assert the dispatch matches the
+/// flop-count argmin on both branches (it was inverted once).
+pub fn core_project_gv_first(m: usize, n: usize) -> bool {
+    m <= n
+}
+
 /// The TSR core projection `C = Uᵀ G V` (r×r), fused to avoid
-/// materializing the larger intermediate when it pays off: we compute
-/// `T = G·V` (m×r) then `C = Uᵀ·T` (r×r); choosing GV-first vs UᵀG-first
-/// by operand shapes.
+/// materializing the larger intermediate: [`core_project_gv_first`]
+/// picks the cheaper of `Uᵀ·(G·V)` and `(Uᵀ·G)·V` from the shapes.
 pub fn core_project(u: &Matrix, g: &Matrix, v: &Matrix) -> Matrix {
     // cost(GV first) = m·n·r + m·r·r ; cost(UᵀG first) = m·n·r + r·n·r
     let m = g.rows;
     let n = g.cols;
-    let _r = u.cols;
     assert_eq!(u.rows, m, "U rows must match G rows");
     assert_eq!(v.rows, n, "V rows must match G cols");
-    if m <= n {
-        // UᵀG (r×n) is the smaller intermediate.
-        let t = matmul_tn(u, g); // r×n
-        matmul(&t, v) // r×r
-    } else {
+    if core_project_gv_first(m, n) {
+        // GV (m×r) is the smaller intermediate and m·r² ≤ n·r².
         let t = matmul(g, v); // m×r
         matmul_tn(u, &t) // r×r
+    } else {
+        let t = matmul_tn(u, g); // r×n
+        matmul(&t, v) // r×r
     }
 }
 
@@ -286,6 +295,35 @@ mod tests {
         let c2 = core_project(&u2, &g2, &v2);
         let expect2 = matmul(&matmul_tn(&u2, &g2), &v2);
         assert!(c2.dist(&expect2) < 1e-3);
+    }
+
+    #[test]
+    fn core_project_order_matches_flop_argmin() {
+        // The dispatch must pick the order whose total multiply-add
+        // count is minimal, on BOTH branches (regression: the branch
+        // was inverted against its own cost comment).
+        for &(m, n) in &[
+            (20usize, 60usize), // wide: GV-first (m·r² < n·r²)
+            (60, 20),           // tall: UᵀG-first
+            (32, 32),           // square: tie — either order is argmin
+            (1, 100),
+            (100, 1),
+        ] {
+            for &r in &[1usize, 4, 16] {
+                let gv_cost = m * n * r + m * r * r;
+                let utg_cost = m * n * r + r * n * r;
+                let chosen_cost = if core_project_gv_first(m, n) {
+                    gv_cost
+                } else {
+                    utg_cost
+                };
+                assert_eq!(
+                    chosen_cost,
+                    gv_cost.min(utg_cost),
+                    "core_project picked the costlier order for m={m} n={n} r={r}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,9 @@ pub mod qr;
 pub mod rsvd;
 pub mod svd;
 
-pub use matmul::{core_project, lift, matmul, matmul_into, matmul_nt, matmul_tn};
+pub use matmul::{
+    core_project, core_project_gv_first, lift, matmul, matmul_into, matmul_nt, matmul_tn,
+};
 pub use matrix::Matrix;
 pub use qr::{orth, ortho_defect, qr_thin};
 pub use rsvd::{rsvd, svd_truncated, Rsvd};

@@ -104,6 +104,11 @@ fn main() {
                  \n            --source quad     synthetic low-rank quadratic instead of a \
                  PJRT manifest (no artifacts needed; deterministic metrics JSON \
                  for CI's cross-backend gate)\
+                 \n            --save-every N    write a checkpoint manifest every N steps \
+                 (quad source; --save-dir DIR, default checkpoints/)\
+                 \n            --resume PATH     continue a checkpointed run: byte-identical \
+                 to the uninterrupted run at the same world size, elastic \
+                 --workers otherwise (DESIGN.md §9)\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -126,39 +131,20 @@ fn backend_from_args(args: &Args) -> tsr::exec::ExecBackend {
     }
 }
 
-/// Method config shared by both train sources; rank defaults derive
-/// from the model's hidden dimension.
-fn method_cfg_from_args(args: &Args, hidden: usize) -> tsr::exp::MethodCfg {
-    use tsr::exp::MethodCfg;
-    use tsr::optim::onesided::OneSidedRefresh;
-    use tsr::optim::TsrConfig;
-
-    let rank = args.get_usize("rank", (hidden / 4).max(4));
-    let rank_emb = args.get_usize("rank-emb", (hidden / 8).max(4));
-    let k = args.get_usize("k", 50);
-    match args.get_or("method", "tsr") {
-        "adamw" => MethodCfg::Adam,
-        "galore" => MethodCfg::OneSided {
-            rank,
-            k,
-            refresh: OneSidedRefresh::RandomizedSvd,
-        },
-        "tsr" => MethodCfg::Tsr(TsrConfig {
-            rank,
-            rank_emb,
-            refresh_every: k,
-            refresh_emb: k,
-            oversample: 8,
-            ..Default::default()
-        }),
-        "signadam" => MethodCfg::Sign {
-            k_var: args.get_usize("k-var", 100),
-        },
-        "topk" => MethodCfg::TopK {
-            keep_frac: args.get_f64("keep-frac", 0.01),
-        },
-        other => panic!("unknown method {other}"),
-    }
+/// Resolve the method-selection flags (rank defaults derive from the
+/// model's hidden dimension) into the config-echo keys that
+/// [`method_cfg_from_config`] reads — the single method dispatch shared
+/// by the quad and PJRT train paths, and by fresh runs and resumes.
+fn method_config_json(args: &Args, hidden: usize) -> tsr::util::json::Json {
+    use tsr::util::json::Json;
+    Json::obj(vec![
+        ("method", Json::str(args.get_or("method", "tsr"))),
+        ("rank", Json::num(args.get_usize("rank", (hidden / 4).max(4)) as f64)),
+        ("rank_emb", Json::num(args.get_usize("rank-emb", (hidden / 8).max(4)) as f64)),
+        ("k", Json::num(args.get_usize("k", 50) as f64)),
+        ("k_var", Json::num(args.get_usize("k-var", 100) as f64)),
+        ("keep_frac", Json::num(args.get_f64("keep-frac", 0.01))),
+    ])
 }
 
 fn info() {
@@ -185,30 +171,134 @@ fn run_train(args: &Args) {
     }
 }
 
+/// Resolve the `--source quad` run configuration — every default
+/// applied — into the JSON echo stored in checkpoint manifests. Both
+/// the fresh path and the resume path construct their setup from this
+/// one document, so a resumed run cannot drift from re-typed flags.
+fn quad_run_config(args: &Args) -> tsr::util::json::Json {
+    use tsr::util::json::Json;
+    let scale = args.get_or("scale", "tiny");
+    let hidden = if scale == "tiny" {
+        32
+    } else {
+        tsr::exp::runs::proxy_spec(scale).hidden
+    };
+    let mut cfg = method_config_json(args, hidden);
+    cfg.set("source", Json::str("quad"));
+    cfg.set("scale", Json::str(scale));
+    cfg.set("steps", Json::num(args.get_usize("steps", 40) as f64));
+    cfg.set("workers", Json::num(args.get_usize("workers", 4) as f64));
+    cfg.set("lr", Json::num(args.get_f64("lr", 0.05)));
+    cfg.set("noise", Json::num(args.get_f64("noise", 0.01)));
+    cfg.set(
+        "seed",
+        tsr::checkpoint::codec::u64_to_json(args.get_u64("seed", 42)),
+    );
+    cfg.set("topo", Json::str(args.get_or("topo", "multi_node")));
+    cfg
+}
+
+/// Build the optimizer selection from the resolved config echo
+/// ([`method_config_json`]); fresh runs, resumes, and the PJRT path
+/// all dispatch through here.
+fn method_cfg_from_config(cfg: &tsr::util::json::Json) -> tsr::exp::MethodCfg {
+    use tsr::exp::MethodCfg;
+    use tsr::optim::onesided::OneSidedRefresh;
+    use tsr::optim::TsrConfig;
+
+    let rank = cfg.get_usize("rank", 8);
+    let rank_emb = cfg.get_usize("rank_emb", 4);
+    let k = cfg.get_usize("k", 50);
+    match cfg.get_str("method", "tsr") {
+        "adamw" => MethodCfg::Adam,
+        "galore" => MethodCfg::OneSided {
+            rank,
+            k,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        "tsr" => MethodCfg::Tsr(TsrConfig {
+            rank,
+            rank_emb,
+            refresh_every: k,
+            refresh_emb: k,
+            oversample: 8,
+            ..Default::default()
+        }),
+        "signadam" => MethodCfg::Sign {
+            k_var: cfg.get_usize("k_var", 100),
+        },
+        "topk" => MethodCfg::TopK {
+            keep_frac: cfg.get_f64("keep_frac", 0.01),
+        },
+        other => panic!("unknown method {other}"),
+    }
+}
+
 /// Synthetic low-rank quadratic training — no PJRT artifacts needed.
 /// Emits the *deterministic* metrics JSON (no wall-clock fields, plus a
 /// final-weight fingerprint), which CI's determinism gate runs twice
-/// per backend and diffs byte-for-byte.
+/// per backend and diffs byte-for-byte. `--save-every N` writes
+/// checkpoint manifests; `--resume PATH` continues one — interrupted +
+/// resumed is byte-identical to uninterrupted (DESIGN.md §9).
 fn run_train_quad(args: &Args) {
-    use tsr::comm::Topology;
+    use tsr::checkpoint::Checkpoint;
+    use tsr::comm::{CommLedger, Topology};
     use tsr::exp::runs::proxy_spec;
+    use tsr::metrics::RunMetrics;
     use tsr::optim::{AdamHyper, LrSchedule};
     use tsr::train::gradsim::QuadraticSim;
-    use tsr::train::{GradSource, Trainer};
+    use tsr::train::{CkptCfg, GradSource, Trainer};
 
-    let steps = args.get_usize("steps", 40);
-    let workers = args.get_usize("workers", 4);
-    let lr = args.get_f64("lr", 0.05) as f32;
-    let noise = args.get_f64("noise", 0.01) as f32;
-    let seed = args.get_u64("seed", 42);
     let backend = backend_from_args(args);
-    let scale = args.get_or("scale", "tiny");
+    let resume = args.get("resume").map(|p| {
+        let ck = Checkpoint::load(p).unwrap_or_else(|e| panic!("--resume: {e}"));
+        assert_eq!(
+            ck.config.get_str("source", "?"),
+            "quad",
+            "--resume: checkpoint was not taken by a --source quad run"
+        );
+        ck
+    });
+    // One resolved config drives both paths; a resume trusts the
+    // manifest's echo, not re-typed method flags. Flag the ones it
+    // discards so a contradictory command line doesn't mislead.
+    let config = match &resume {
+        Some(ck) => {
+            const CONFIG_ONLY: &[&str] = &[
+                "lr", "noise", "seed", "method", "k", "k-var", "keep-frac", "rank", "rank-emb",
+                "scale", "topo",
+            ];
+            for flag in CONFIG_ONLY {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "warning: --{flag} is fixed by the checkpoint's config and was ignored \
+                         (--resume honors only --steps/--workers/--backend/--out/--save-*)"
+                    );
+                }
+            }
+            ck.config.clone()
+        }
+        None => quad_run_config(args),
+    };
+    let start_step = resume.as_ref().map(|ck| ck.step as usize).unwrap_or(0);
+    let steps = args.get_usize("steps", config.get_usize("steps", 40));
+    assert!(
+        steps > start_step,
+        "--steps {steps} must exceed the checkpoint's completed step {start_step}"
+    );
+    // Elastic: --workers may differ from the checkpoint's world size.
+    let workers = args.get_usize("workers", config.get_usize("workers", 4));
+    let lr = config.get_f64("lr", 0.05) as f32;
+    let noise = config.get_f64("noise", 0.01) as f32;
+    let seed = tsr::checkpoint::codec::u64_from_json(config.get("seed"), "config.seed")
+        .expect("config.seed");
+    let scale = config.get_str("scale", "tiny").to_string();
     let spec = if scale == "tiny" {
         tsr::model::ModelSpec::proxy(200, 32, 64, 2, 2)
     } else {
-        proxy_spec(scale)
+        proxy_spec(&scale)
     };
-    let topo = match args.get_or("topo", "multi_node") {
+    let topo = match config.get_str("topo", "multi_node") {
         "single_node" => Topology::single_node(workers),
         "multi_node" => Topology::multi_node(2, workers.div_ceil(2)),
         "ethernet" => Topology::ethernet(2, workers.div_ceil(2)),
@@ -217,7 +307,7 @@ fn run_train_quad(args: &Args) {
 
     let mut sim = QuadraticSim::new(&spec, workers, (spec.hidden / 2).max(8), noise, seed);
     let blocks = sim.blocks().to_vec();
-    let mcfg = method_cfg_from_args(args, spec.hidden);
+    let mcfg = method_cfg_from_config(&config);
     let hyper = AdamHyper {
         lr,
         weight_decay: 0.0,
@@ -225,17 +315,72 @@ fn run_train_quad(args: &Args) {
         ..Default::default()
     };
     let mut opt = mcfg.build(&blocks, hyper, workers);
-    let mut params = sim.init_params(seed ^ 0xF00D);
-    let trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend);
-    let (mut metrics, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, steps);
+
+    let (mut params, metrics0, ledger0) = match &resume {
+        Some(ck) => {
+            assert_eq!(opt.name(), ck.method, "--resume: optimizer method mismatch");
+            if workers != ck.workers {
+                println!(
+                    "elastic resume: {} -> {} workers (error-feedback state re-sharded; \
+                     not bitwise vs the original world size)",
+                    ck.workers, workers
+                );
+            }
+            opt.load_state(&ck.opt_state, workers)
+                .expect("--resume: restore optimizer state");
+            sim.load_state(&ck.source_state)
+                .expect("--resume: restore source state");
+            (
+                ck.params.clone(),
+                RunMetrics::state_from_json(&ck.metrics).expect("--resume: restore metrics"),
+                CommLedger::from_json(&ck.ledger).expect("--resume: restore ledger"),
+            )
+        }
+        None => (
+            sim.init_params(seed ^ 0xF00D),
+            RunMetrics::new(opt.name()),
+            CommLedger::new(),
+        ),
+    };
+
+    let mut trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend);
+    let save_every = args.get_usize("save-every", 0);
+    if save_every > 0 {
+        // New manifests echo the RESOLVED run shape: a resume that
+        // overrode --steps/--workers writes checkpoints describing the
+        // run it is actually executing, so a resume-of-resume picks
+        // them up without re-typed flags.
+        let mut save_config = config.clone();
+        save_config.set("steps", tsr::util::json::Json::num(steps as f64));
+        save_config.set("workers", tsr::util::json::Json::num(workers as f64));
+        trainer.ckpt = Some(CkptCfg {
+            every: save_every,
+            dir: args.get_or("save-dir", "checkpoints").into(),
+            config: save_config,
+        });
+    }
+    let (mut metrics, ledger) = trainer.run_from(
+        &mut sim,
+        opt.as_mut(),
+        &mut params,
+        start_step,
+        steps,
+        metrics0,
+        ledger0,
+    );
     metrics.name = mcfg.label();
 
     println!(
-        "== {} on quad:{} ({} workers, {} backend) ==",
+        "== {} on quad:{} ({} workers, {} backend{}) ==",
         mcfg.label(),
         spec.name,
         workers,
-        backend.name()
+        backend.name(),
+        if start_step > 0 {
+            format!(", resumed at step {start_step}")
+        } else {
+            String::new()
+        }
     );
     println!("final loss      : {:.4}", metrics.final_loss());
     println!(
@@ -292,7 +437,7 @@ fn run_train_pjrt(args: &Args) {
     let mut source = PjrtSource::new(model, batcher);
     let blocks = source.blocks().to_vec();
 
-    let mcfg = method_cfg_from_args(args, manifest.hidden);
+    let mcfg = method_cfg_from_config(&method_config_json(args, manifest.hidden));
     let hyper = AdamHyper {
         lr,
         weight_decay: 0.0,

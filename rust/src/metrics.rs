@@ -119,6 +119,38 @@ impl RunMetrics {
         ])
     }
 
+    /// Checkpoint serialization of the run-so-far metrics: the loss
+    /// trajectory (bit-exact f32 hex) and the engine-prediction f64
+    /// accumulators (bit patterns). `cum_bytes` and `sim_comm_secs`
+    /// are NOT stored — both are recomputed from the resumed ledger at
+    /// run end — and `step_secs` is wall clock, which a resumed run
+    /// legitimately re-measures (it never enters the deterministic
+    /// JSON).
+    pub fn state_to_json(&self) -> Json {
+        use crate::checkpoint::codec;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("loss_f32le", Json::str(codec::f32s_to_hex(&self.loss))),
+            ("predicted_step_secs", codec::f64_to_json(self.predicted_step_secs)),
+            ("exposed_comm_secs", codec::f64_to_json(self.exposed_comm_secs)),
+        ])
+    }
+
+    /// Inverse of [`Self::state_to_json`].
+    pub fn state_from_json(j: &Json) -> Result<Self, String> {
+        use crate::checkpoint::codec;
+        let mut m = RunMetrics::new(j.get("name").as_str().ok_or("metrics: missing name")?);
+        m.loss = codec::f32s_from_hex(
+            j.get("loss_f32le").as_str().ok_or("metrics: missing loss_f32le")?,
+        )
+        .map_err(|e| format!("metrics.loss: {e}"))?;
+        m.predicted_step_secs =
+            codec::f64_from_json(j.get("predicted_step_secs"), "metrics.predicted_step_secs")?;
+        m.exposed_comm_secs =
+            codec::f64_from_json(j.get("exposed_comm_secs"), "metrics.exposed_comm_secs")?;
+        Ok(m)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(self.name.clone())),
@@ -194,6 +226,25 @@ mod tests {
         assert!(s.contains("params_fingerprint"));
         assert!(s.contains("wire_intra_bytes"));
         assert!(!s.contains("step_secs\": [") && !s.contains("mean_step_secs"));
+    }
+
+    #[test]
+    fn checkpoint_state_roundtrips_bitwise() {
+        let mut m = RunMetrics::new("resume-me");
+        m.loss = vec![1.5, -0.0, f32::from_bits(0x3f80_0001)];
+        m.predicted_step_secs = 1.0 / 7.0;
+        m.exposed_comm_secs = 2.0 / 3.0;
+        m.step_secs = vec![0.5]; // wall clock — intentionally dropped
+        let text = m.state_to_json().to_string_pretty();
+        let back = RunMetrics::state_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, "resume-me");
+        assert_eq!(back.loss.len(), 3);
+        for (a, b) in m.loss.iter().zip(&back.loss) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.predicted_step_secs.to_bits(), m.predicted_step_secs.to_bits());
+        assert_eq!(back.exposed_comm_secs.to_bits(), m.exposed_comm_secs.to_bits());
+        assert!(back.step_secs.is_empty());
     }
 
     #[test]

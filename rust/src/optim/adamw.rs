@@ -73,6 +73,43 @@ impl DistOptimizer for DenseAdamW {
     fn state_elements(&self) -> usize {
         self.state.iter().map(|s| s.elements()).sum()
     }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            (
+                "blocks",
+                Json::arr(self.state.iter().map(|s| s.state_to_json()).collect()),
+            ),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        _workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("adamw: missing blocks")?;
+        if blocks.len() != self.state.len() {
+            return Err(format!(
+                "adamw: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.state.len()
+            ));
+        }
+        for (b, j) in blocks.iter().enumerate() {
+            self.state[b].state_from_json(j, &format!("adamw.blocks[{b}]"))?;
+        }
+        self.t = codec::u64_from_json(state.get("t"), "adamw.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 #[cfg(test)]

@@ -30,6 +30,7 @@ use crate::comm::{CommLedger, LayerClass, Topology};
 use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
+use crate::util::json::Json;
 
 pub use adamw::DenseAdamW;
 pub use onesided::OneSidedAdam;
@@ -112,6 +113,26 @@ impl SyncPlan {
     }
 }
 
+/// THE refresh predicate, shared by `step()` and `sync_plan()` of every
+/// refresh-based method so the executed schedule and the predicted
+/// schedule cannot diverge. (They did, once: `sync_plan` checked only
+/// the cadence while `step()` also refreshed uninitialized bases, so
+/// predicted bytes went wrong whenever the first executed step wasn't a
+/// refresh boundary — exactly what a resume or a mid-period prediction
+/// creates.)
+///
+/// A block refreshes at step `t` iff:
+/// * the cadence hits (`t % every == 0`), or
+/// * `t` is the step that first built the block's state
+///   (`init_step == Some(t)`), or
+/// * the state does not exist yet and `t` is the next step this
+///   optimizer will execute (`next_step`) — the mid-period-start case.
+pub fn refresh_due(init_step: Option<u64>, next_step: u64, every: u64, t: u64) -> bool {
+    t % every.max(1) == 0
+        || init_step == Some(t)
+        || (init_step.is_none() && t == next_step)
+}
+
 pub trait DistOptimizer {
     fn name(&self) -> &'static str;
 
@@ -130,6 +151,28 @@ pub trait DistOptimizer {
 
     /// Total optimizer-state elements currently held (memory accounting).
     fn state_elements(&self) -> usize;
+
+    /// Serialize the full step-dependent state — step counter, moments,
+    /// bases, error-feedback buffers, refresh bookkeeping — into a JSON
+    /// tree of bit-exact payloads (`checkpoint::codec`). Together with
+    /// the parameters, the source RNG position, and the ledger this is
+    /// sufficient to resume a run bitwise-identically (DESIGN.md §9).
+    fn save_state(&self) -> Json;
+
+    /// Restore state produced by [`Self::save_state`] into a freshly
+    /// constructed optimizer of the same configuration. `workers` is
+    /// the resuming world size: per-worker error-feedback buffers
+    /// restore bit-exactly when it matches the saved world size and
+    /// are re-sharded from their canonical mean otherwise (elastic
+    /// restart, `checkpoint::errors_from_json`). Errors on structural
+    /// mismatch (method, block count, shapes).
+    fn load_state(&mut self, state: &Json, workers: usize) -> Result<(), String>;
+
+    /// Position the step counter at `t` without executing steps: the
+    /// next `step()` call runs as step `t` (bias correction, refresh
+    /// cadence, and `sync_plan` all see the mid-period start). Used by
+    /// weights-only resumes; `load_state` restores the counter itself.
+    fn seek(&mut self, t: u64);
 }
 
 /// Dense per-block Adam moments — used directly by [`DenseAdamW`] and by
@@ -150,6 +193,25 @@ impl DenseAdamState {
 
     pub fn elements(&self) -> usize {
         self.m.numel() + self.v.numel()
+    }
+
+    /// Checkpoint payload: both moment matrices, bit-exact.
+    pub fn state_to_json(&self) -> Json {
+        use crate::checkpoint::codec;
+        Json::obj(vec![
+            ("m", codec::matrix_to_json(&self.m)),
+            ("v", codec::matrix_to_json(&self.v)),
+        ])
+    }
+
+    /// Restore moments saved by [`Self::state_to_json`], enforcing the
+    /// block shape this optimizer allocated.
+    pub fn state_from_json(&mut self, j: &Json, what: &str) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let (rows, cols) = (self.m.rows, self.m.cols);
+        self.m = codec::matrix_from_json_expect(j.get("m"), rows, cols, &format!("{what}.m"))?;
+        self.v = codec::matrix_from_json_expect(j.get("v"), rows, cols, &format!("{what}.v"))?;
+        Ok(())
     }
 
     /// Standard AdamW update on `w` given the aggregated gradient `g`.
@@ -311,6 +373,28 @@ mod tests {
             assert_eq!(st_a.m.data[i].to_bits(), st_b.m.data[i].to_bits(), "m[{i}]");
             assert_eq!(st_a.v.data[i].to_bits(), st_b.v.data[i].to_bits(), "v[{i}]");
         }
+    }
+
+    #[test]
+    fn refresh_due_models_initialization_and_cadence() {
+        // Fresh state starting at step 0: cadence only (0 hits it).
+        assert!(refresh_due(None, 0, 5, 0));
+        assert!(!refresh_due(None, 0, 5, 1));
+        assert!(refresh_due(None, 0, 5, 5));
+        // Fresh state starting MID-PERIOD (the resume / mid-period
+        // prediction case): the first executed step refreshes even off
+        // the cadence — this is the predicate sync_plan used to get
+        // wrong.
+        assert!(refresh_due(None, 7, 5, 7));
+        assert!(!refresh_due(None, 7, 5, 8));
+        assert!(refresh_due(None, 7, 5, 10));
+        // Initialized at a non-boundary step: that step reports its
+        // refresh post-hoc; afterwards, cadence only.
+        assert!(refresh_due(Some(7), 9, 5, 7));
+        assert!(!refresh_due(Some(7), 9, 5, 9));
+        assert!(refresh_due(Some(7), 9, 5, 10));
+        // Degenerate every=0 must not divide by zero.
+        assert!(refresh_due(None, 0, 0, 3));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! gradient every K steps — the refresh-peak behaviour the paper
 //! contrasts against (Fig. 2b). Embeddings stay dense, as in GaLore.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::{matmul, matmul_nt, matmul_tn, rsvd, svd_truncated, Matrix};
 use crate::model::BlockSpec;
@@ -35,7 +35,8 @@ struct ProjBlock {
     basis: Matrix,
     m: Matrix,
     v: Matrix,
-    initialized: bool,
+    /// Step that first built the basis ([`refresh_due`] bookkeeping).
+    init_step: Option<u64>,
 }
 
 pub struct OneSidedAdam {
@@ -72,7 +73,7 @@ impl OneSidedAdam {
                         basis: Matrix::zeros(if left { b.rows } else { b.cols }, r),
                         m: Matrix::zeros(pr, pc),
                         v: Matrix::zeros(pr, pc),
-                        initialized: false,
+                        init_step: None,
                     })
                 }
             })
@@ -116,8 +117,8 @@ impl DistOptimizer for OneSidedAdam {
                     );
                 }
                 BlockState::Projected(blk) => {
-                    let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
-                    if needs_refresh {
+                    // Shared predicate with sync_plan ([`refresh_due`]).
+                    if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
                         // GaLore refresh: dense all-reduce, then local SVD
                         // → this is what spikes PeakBytes.
                         let mut dense: Vec<Matrix> =
@@ -134,7 +135,9 @@ impl DistOptimizer for OneSidedAdam {
                             }
                         };
                         blk.basis = if blk.left { factors.u } else { factors.v };
-                        blk.initialized = true;
+                        if blk.init_step.is_none() {
+                            blk.init_step = Some(t);
+                        }
                     }
 
                     // Project per worker (fanned out over threads), then
@@ -194,7 +197,7 @@ impl DistOptimizer for OneSidedAdam {
                     refresh: false,
                 },
                 BlockState::Projected(blk) => {
-                    let refresh = t % blk.refresh_every as u64 == 0;
+                    let refresh = refresh_due(blk.init_step, self.t, blk.refresh_every as u64, t);
                     // Projected object every step; full dense gradient on
                     // refresh steps (the GaLore peak-byte event).
                     let dense = if blk.left {
@@ -225,6 +228,79 @@ impl DistOptimizer for OneSidedAdam {
                 }
             })
             .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("adam", st.state_to_json()),
+                ]),
+                BlockState::Projected(b) => Json::obj(vec![
+                    ("kind", Json::str("projected")),
+                    ("basis", codec::matrix_to_json(&b.basis)),
+                    ("m", codec::matrix_to_json(&b.m)),
+                    ("v", codec::matrix_to_json(&b.v)),
+                    ("init_step", codec::opt_u64_to_json(b.init_step)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        _workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("onesided: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "onesided: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("onesided.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => {
+                    st.state_from_json(j.get("adam"), &what)?;
+                }
+                (BlockState::Projected(b), Some("projected")) => {
+                    b.basis = codec::matrix_from_json_expect(
+                        j.get("basis"),
+                        b.basis.rows,
+                        b.basis.cols,
+                        &what,
+                    )?;
+                    b.m = codec::matrix_from_json_expect(j.get("m"), b.m.rows, b.m.cols, &what)?;
+                    b.v = codec::matrix_from_json_expect(j.get("v"), b.v.rows, b.v.cols, &what)?;
+                    b.init_step = codec::opt_u64_from_json(
+                        codec::require(j, "init_step", &what)?,
+                        &format!("{what}.init_step"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "onesided.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
     }
 }
 

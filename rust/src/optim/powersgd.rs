@@ -176,6 +176,77 @@ impl DistOptimizer for PowerSgd {
             })
             .sum()
     }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("adam", st.state_to_json()),
+                ]),
+                BlockState::Compressed(b) => Json::obj(vec![
+                    ("kind", Json::str("compressed")),
+                    ("q", codec::matrix_to_json(&b.q)),
+                    ("momentum", codec::matrix_to_json(&b.momentum)),
+                    ("errors", crate::checkpoint::errors_to_json(&b.errors)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("powersgd: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "powersgd: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("powersgd.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => {
+                    st.state_from_json(j.get("adam"), &what)?;
+                }
+                (BlockState::Compressed(b), Some("compressed")) => {
+                    b.q = codec::matrix_from_json_expect(j.get("q"), b.q.rows, b.q.cols, &what)?;
+                    let (rows, cols) = (b.momentum.rows, b.momentum.cols);
+                    b.momentum =
+                        codec::matrix_from_json_expect(j.get("momentum"), rows, cols, &what)?;
+                    b.errors = crate::checkpoint::errors_from_json(
+                        j.get("errors"),
+                        rows,
+                        cols,
+                        workers,
+                        &format!("{what}.errors"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "powersgd.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 #[cfg(test)]

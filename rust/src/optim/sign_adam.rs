@@ -15,7 +15,7 @@
 //! both sides meter [`sign_payload_bytes`] per matrix block per step and
 //! the full dense block every `k_var` steps.
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
@@ -40,6 +40,10 @@ struct SignBlock {
     errors: Vec<Matrix>,
     /// Number of v updates so far (1-indexed bias correction for v).
     tv: u64,
+    /// Step of the first dense variance estimate ([`refresh_due`]) —
+    /// v must exist before the first compressed update, even when the
+    /// run starts mid-period (resume).
+    init_step: Option<u64>,
 }
 
 pub struct SignAdam {
@@ -64,6 +68,7 @@ impl SignAdam {
                         v: Matrix::zeros(b.rows, b.cols),
                         errors: (0..workers).map(|_| Matrix::zeros(b.rows, b.cols)).collect(),
                         tv: 0,
+                        init_step: None,
                     })
                 }
             })
@@ -108,15 +113,21 @@ impl DistOptimizer for SignAdam {
                 }
                 BlockState::Sign(blk) => {
                     // Variance refresh: dense all-reduce every k_var steps
-                    // (step 0 included — v must exist before the first
-                    // compressed update). This is the family's peak-byte
-                    // event, analogous to GaLore's dense refresh.
-                    if t % self.k_var as u64 == 0 {
+                    // (the first executed step included — v must exist
+                    // before the first compressed update, also when that
+                    // step isn't a cadence boundary, i.e. mid-period
+                    // resume). This is the family's peak-byte event,
+                    // analogous to GaLore's dense refresh; the predicate
+                    // is shared with sync_plan ([`refresh_due`]).
+                    if refresh_due(blk.init_step, t, self.k_var as u64, t) {
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
                         collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo, ctx.exec);
                         ctx.ledger.mark_refresh();
                         blk.tv += 1;
+                        if blk.init_step.is_none() {
+                            blk.init_step = Some(t);
+                        }
                         let b2 = h.beta2;
                         let gbar = &dense[0];
                         for i in 0..blk.v.data.len() {
@@ -182,7 +193,7 @@ impl DistOptimizer for SignAdam {
                     refresh: false,
                 },
                 BlockState::Sign(blk) => {
-                    let refresh = t % self.k_var as u64 == 0;
+                    let refresh = refresh_due(blk.init_step, self.t, self.k_var as u64, t);
                     let numel = blk.m.numel();
                     let dense = if refresh {
                         numel * crate::comm::BYTES_F32
@@ -213,6 +224,83 @@ impl DistOptimizer for SignAdam {
                 }
             })
             .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("adam", st.state_to_json()),
+                ]),
+                BlockState::Sign(blk) => Json::obj(vec![
+                    ("kind", Json::str("sign")),
+                    ("m", codec::matrix_to_json(&blk.m)),
+                    ("v", codec::matrix_to_json(&blk.v)),
+                    ("tv", codec::u64_to_json(blk.tv)),
+                    ("init_step", codec::opt_u64_to_json(blk.init_step)),
+                    ("errors", crate::checkpoint::errors_to_json(&blk.errors)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("sign-adam: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "sign-adam: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("sign-adam.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => {
+                    st.state_from_json(j.get("adam"), &what)?;
+                }
+                (BlockState::Sign(blk), Some("sign")) => {
+                    let (rows, cols) = (blk.m.rows, blk.m.cols);
+                    blk.m = codec::matrix_from_json_expect(j.get("m"), rows, cols, &what)?;
+                    blk.v = codec::matrix_from_json_expect(j.get("v"), rows, cols, &what)?;
+                    blk.tv = codec::u64_from_json(j.get("tv"), &format!("{what}.tv"))?;
+                    blk.init_step = codec::opt_u64_from_json(
+                        codec::require(j, "init_step", &what)?,
+                        &format!("{what}.init_step"),
+                    )?;
+                    blk.errors = crate::checkpoint::errors_from_json(
+                        j.get("errors"),
+                        rows,
+                        cols,
+                        workers,
+                        &format!("{what}.errors"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "sign-adam.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
     }
 }
 

@@ -179,6 +179,84 @@ impl DistOptimizer for TopKAdam {
             })
             .sum()
     }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("adam", st.state_to_json()),
+                ]),
+                BlockState::Sparse(blk) => Json::obj(vec![
+                    ("kind", Json::str("sparse")),
+                    ("k", Json::num(blk.k as f64)),
+                    ("adam", blk.state.state_to_json()),
+                    ("errors", crate::checkpoint::errors_to_json(&blk.errors)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("topk-adam: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "topk-adam: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("topk-adam.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => {
+                    st.state_from_json(j.get("adam"), &what)?;
+                }
+                (BlockState::Sparse(blk), Some("sparse")) => {
+                    // k derives from keep_frac and the block shape; a
+                    // mismatch means a different sparsity config.
+                    let k = j.get("k").as_usize().ok_or_else(|| format!("{what}: missing k"))?;
+                    if k != blk.k {
+                        return Err(format!(
+                            "{what}: checkpoint keeps k={k}, run keeps k={}",
+                            blk.k
+                        ));
+                    }
+                    blk.state.state_from_json(j.get("adam"), &what)?;
+                    let (rows, cols) = (blk.state.m.rows, blk.state.m.cols);
+                    blk.errors = crate::checkpoint::errors_from_json(
+                        j.get("errors"),
+                        rows,
+                        cols,
+                        workers,
+                        &format!("{what}.errors"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "topk-adam.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,7 @@
 //! Embedding blocks use their own (r_emb, K_emb) (§3.6). Vector blocks
 //! (biases/norms) are synchronized and updated densely (§3.4).
 
-use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::{matmul, matmul_tn, matrix::Matrix, orth, svd_gram};
 use crate::linalg::matmul::{core_project, lift};
@@ -80,7 +80,10 @@ struct TsrBlock {
     m: Matrix,
     vmom: Matrix,
     refresh_count: u64,
-    initialized: bool,
+    /// Step at which the bases were first built (None until then) —
+    /// the `initialized` flag plus the position `sync_plan` needs to
+    /// model it ([`refresh_due`]).
+    init_step: Option<u64>,
 }
 
 pub struct TsrAdam {
@@ -114,7 +117,7 @@ impl TsrAdam {
                         m: Matrix::zeros(r, r),
                         vmom: Matrix::zeros(r, r),
                         refresh_count: 0,
-                        initialized: false,
+                        init_step: None,
                     })
                 }
             })
@@ -183,7 +186,6 @@ impl TsrAdam {
         let (ut, _sigma, vt) = svd_gram(bbar);
         blk.u = matmul(&qbar, &ut.take_cols(blk.rank));
         blk.v = vt.take_cols(blk.rank);
-        blk.initialized = true;
     }
 
     /// Fig. 3(b) baseline refresh: dense all-reduce + exact SVD.
@@ -202,7 +204,6 @@ impl TsrAdam {
         let out = crate::linalg::svd_truncated(&dense[0], blk.rank);
         blk.u = out.u;
         blk.v = out.v;
-        blk.initialized = true;
     }
 }
 
@@ -237,8 +238,10 @@ impl DistOptimizer for TsrAdam {
                 }
                 BlockState::LowRank(blk) => {
                     let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
-                    let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
-                    if needs_refresh {
+                    // Shared predicate with sync_plan — at execution
+                    // time t IS the next step, so an uninitialized
+                    // block always refreshes here.
+                    if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
                         match self.cfg.refresh_kind {
                             RefreshKind::Randomized => Self::refresh_randomized(
                                 blk,
@@ -260,6 +263,9 @@ impl DistOptimizer for TsrAdam {
                                 ctx.topo,
                                 ctx.exec,
                             ),
+                        }
+                        if blk.init_step.is_none() {
+                            blk.init_step = Some(t);
                         }
                     }
 
@@ -312,7 +318,7 @@ impl DistOptimizer for TsrAdam {
                     refresh: false,
                 },
                 BlockState::LowRank(blk) => {
-                    let refresh = t % blk.refresh_every as u64 == 0;
+                    let refresh = refresh_due(blk.init_step, self.t, blk.refresh_every as u64, t);
                     let (m, n) = (blk.u.rows, blk.v.rows);
                     let extra = if !refresh {
                         0
@@ -347,6 +353,81 @@ impl DistOptimizer for TsrAdam {
                 }
             })
             .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("adam", st.state_to_json()),
+                ]),
+                BlockState::LowRank(b) => Json::obj(vec![
+                    ("kind", Json::str("lowrank")),
+                    ("u", codec::matrix_to_json(&b.u)),
+                    ("v", codec::matrix_to_json(&b.v)),
+                    ("m", codec::matrix_to_json(&b.m)),
+                    ("vmom", codec::matrix_to_json(&b.vmom)),
+                    ("refresh_count", codec::u64_to_json(b.refresh_count)),
+                    ("init_step", codec::opt_u64_to_json(b.init_step)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        _workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("tsr: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "tsr: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("tsr.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => {
+                    st.state_from_json(j.get("adam"), &what)?;
+                }
+                (BlockState::LowRank(b), Some("lowrank")) => {
+                    let (rows, cols) = (b.u.rows, b.v.rows);
+                    let r = b.rank;
+                    b.u = codec::matrix_from_json_expect(j.get("u"), rows, r, &what)?;
+                    b.v = codec::matrix_from_json_expect(j.get("v"), cols, r, &what)?;
+                    b.m = codec::matrix_from_json_expect(j.get("m"), r, r, &what)?;
+                    b.vmom = codec::matrix_from_json_expect(j.get("vmom"), r, r, &what)?;
+                    b.refresh_count =
+                        codec::u64_from_json(j.get("refresh_count"), &format!("{what}.count"))?;
+                    b.init_step = codec::opt_u64_from_json(
+                        codec::require(j, "init_step", &what)?,
+                        &format!("{what}.init_step"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "tsr.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
     }
 }
 

@@ -7,7 +7,7 @@
 //! which empirically checks the T^{−1/3} stationarity decay.
 
 use super::tsr::TsrConfig;
-use super::{DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use super::{refresh_due, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::matmul::{core_project, lift};
 use crate::linalg::{matmul, matmul_tn, orth, svd_gram, Matrix};
@@ -23,7 +23,8 @@ struct SgdBlock {
     /// Core momentum (r×r).
     m: Matrix,
     refresh_count: u64,
-    initialized: bool,
+    /// Step that first built the bases ([`refresh_due`] bookkeeping).
+    init_step: Option<u64>,
 }
 
 enum BlockState {
@@ -68,7 +69,7 @@ impl TsrSgd {
                         v: Matrix::zeros(b.cols, r),
                         m: Matrix::zeros(r, r),
                         refresh_count: 0,
-                        initialized: false,
+                        init_step: None,
                     })
                 }
             })
@@ -111,11 +112,11 @@ impl DistOptimizer for TsrSgd {
                 }
                 BlockState::LowRank(blk) => {
                     let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
-                    let needs_refresh = !blk.initialized || t % blk.refresh_every as u64 == 0;
-                    if needs_refresh {
+                    // Shared predicate with sync_plan ([`refresh_due`]).
+                    if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
                         // Record the lifted momentum before the bases move
                         // (for the R_t term of Theorem 1).
-                        let lifted_old = if blk.initialized {
+                        let lifted_old = if blk.init_step.is_some() {
                             Some(lift(&blk.u, &blk.m, &blk.v))
                         } else {
                             None
@@ -163,7 +164,9 @@ impl DistOptimizer for TsrSgd {
                         }
                         blk.u = u_new;
                         blk.v = v_new;
-                        blk.initialized = true;
+                        if blk.init_step.is_none() {
+                            blk.init_step = Some(t);
+                        }
                     }
 
                     let mut cores: Vec<Matrix> = ctx
@@ -200,7 +203,7 @@ impl DistOptimizer for TsrSgd {
                     refresh: false,
                 },
                 BlockState::LowRank(blk) => {
-                    let refresh = t % blk.refresh_every as u64 == 0;
+                    let refresh = refresh_due(blk.init_step, self.t, blk.refresh_every as u64, t);
                     let (m, n) = (blk.u.rows, blk.v.rows);
                     let extra = if refresh { m * blk.k + blk.k * n } else { 0 };
                     SyncItem {
@@ -223,6 +226,84 @@ impl DistOptimizer for TsrSgd {
                 BlockState::LowRank(b) => b.u.numel() + b.v.numel() + b.m.numel(),
             })
             .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense { m } => Json::obj(vec![
+                    ("kind", Json::str("dense")),
+                    ("m", codec::matrix_to_json(m)),
+                ]),
+                BlockState::LowRank(b) => Json::obj(vec![
+                    ("kind", Json::str("lowrank")),
+                    ("u", codec::matrix_to_json(&b.u)),
+                    ("v", codec::matrix_to_json(&b.v)),
+                    ("m", codec::matrix_to_json(&b.m)),
+                    ("refresh_count", codec::u64_to_json(b.refresh_count)),
+                    ("init_step", codec::opt_u64_to_json(b.init_step)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("last_refresh_mismatch", codec::f32_to_json(self.last_refresh_mismatch)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        _workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let blocks = state.get("blocks").as_arr().ok_or("tsr-sgd: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "tsr-sgd: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("tsr-sgd.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense { m }, Some("dense")) => {
+                    *m = codec::matrix_from_json_expect(j.get("m"), m.rows, m.cols, &what)?;
+                }
+                (BlockState::LowRank(b), Some("lowrank")) => {
+                    let (rows, cols) = (b.u.rows, b.v.rows);
+                    let r = b.rank;
+                    b.u = codec::matrix_from_json_expect(j.get("u"), rows, r, &what)?;
+                    b.v = codec::matrix_from_json_expect(j.get("v"), cols, r, &what)?;
+                    b.m = codec::matrix_from_json_expect(j.get("m"), r, r, &what)?;
+                    b.refresh_count =
+                        codec::u64_from_json(j.get("refresh_count"), &format!("{what}.count"))?;
+                    b.init_step = codec::opt_u64_from_json(
+                        codec::require(j, "init_step", &what)?,
+                        &format!("{what}.init_step"),
+                    )?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.t = codec::u64_from_json(state.get("t"), "tsr-sgd.t")?;
+        self.last_refresh_mismatch = codec::f32_from_json(
+            state.get("last_refresh_mismatch"),
+            "tsr-sgd.last_refresh_mismatch",
+        )?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
     }
 }
 

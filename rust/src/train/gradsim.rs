@@ -127,6 +127,45 @@ impl GradSource for QuadraticSim {
             .map(|b| Matrix::gaussian(b.rows, b.cols, 0.2, &mut rng))
             .collect()
     }
+
+    /// The only mutable state is the noise RNG: objectives are a pure
+    /// function of (spec, intrinsic_dim, seed), so a resumed sim only
+    /// needs the stream position to reproduce every remaining noise
+    /// draw bit-for-bit.
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let (s, spare) = self.rng.snapshot();
+        Json::obj(vec![
+            ("rng_s", Json::arr(s.iter().map(|&w| codec::u64_to_json(w)).collect())),
+            (
+                "rng_spare",
+                match spare {
+                    Some(g) => codec::f64_to_json(g),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        use crate::util::json::Json;
+        let words = state.get("rng_s").as_arr().ok_or("quad-sim: missing rng_s")?;
+        if words.len() != 4 {
+            return Err(format!("quad-sim: rng_s has {} words, expected 4", words.len()));
+        }
+        let mut s = [0u64; 4];
+        for (i, w) in words.iter().enumerate() {
+            s[i] = codec::u64_from_json(w, &format!("quad-sim.rng_s[{i}]"))?;
+        }
+        let spare = match state.get("rng_spare") {
+            Json::Null => None,
+            other => Some(codec::f64_from_json(other, "quad-sim.rng_spare")?),
+        };
+        self.rng = Xoshiro256::from_snapshot(s, spare);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

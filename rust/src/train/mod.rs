@@ -6,6 +6,7 @@ pub mod finetune;
 pub mod gradsim;
 pub mod pjrt_source;
 
+use crate::checkpoint::Checkpoint;
 use crate::comm::{CommLedger, Topology};
 use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
@@ -13,6 +14,7 @@ use crate::metrics::RunMetrics;
 use crate::model::BlockSpec;
 use crate::optim::{DistOptimizer, LrSchedule, StepCtx};
 use crate::sim::{engine, SimCfg};
+use crate::util::json::Json;
 use std::time::Instant;
 
 /// Anything that can produce per-worker gradients for the current params.
@@ -26,6 +28,23 @@ pub trait GradSource {
 
     /// Initialize parameters (model-appropriate init).
     fn init_params(&self, seed: u64) -> Vec<Matrix>;
+
+    /// Source-side mutable state for checkpointing (e.g. the mini-batch
+    /// noise RNG position). `Json::Null` for stateless sources; a
+    /// source whose gradients depend only on `(params, step)` can keep
+    /// the default and still resume bitwise.
+    fn save_state(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore state produced by [`Self::save_state`]. The default
+    /// accepts only the stateless `Null` marker.
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        match state {
+            Json::Null => Ok(()),
+            _ => Err("this gradient source cannot restore checkpoint state".into()),
+        }
+    }
 }
 
 pub struct Trainer {
@@ -42,6 +61,22 @@ pub struct Trainer {
     /// `tsr train --backend threaded` overrides it. Both backends are
     /// bitwise-identical, so any run is reproducible across them.
     pub exec: ExecBackend,
+    /// When set, a checkpoint manifest is written every
+    /// `ckpt.every` completed steps (DESIGN.md §9).
+    pub ckpt: Option<CkptCfg>,
+}
+
+/// Periodic-checkpoint configuration for [`Trainer`].
+#[derive(Clone, Debug)]
+pub struct CkptCfg {
+    /// Save after every `every` completed steps (0 disables saving;
+    /// the final step is not saved — the run's own output covers it).
+    pub every: usize,
+    /// Directory receiving `ckpt_step<N>.json` manifests.
+    pub dir: std::path::PathBuf,
+    /// Run-config echo stored in every manifest; the CLI resume path
+    /// rebuilds the setup from this instead of re-typed flags.
+    pub config: Json,
 }
 
 impl Trainer {
@@ -53,6 +88,7 @@ impl Trainer {
             verbose: false,
             sim: None,
             exec: ExecBackend::from_env(),
+            ckpt: None,
         }
     }
 
@@ -70,12 +106,35 @@ impl Trainer {
         params: &mut Vec<Matrix>,
         steps: usize,
     ) -> (RunMetrics, CommLedger) {
-        let mut metrics = RunMetrics::new(opt.name());
-        let mut ledger = CommLedger::new();
+        let metrics = RunMetrics::new(opt.name());
+        self.run_from(source, opt, params, 0, steps, metrics, CommLedger::new())
+    }
+
+    /// Run steps `[start_step, steps)` of a run whose first
+    /// `start_step` steps already happened, continuing the given
+    /// `metrics` and `ledger` (both freshly constructed for
+    /// `start_step == 0`). The caller positions optimizer, parameters,
+    /// and source at `start_step` beforehand — `DistOptimizer::
+    /// load_state` / `GradSource::load_state` from a
+    /// [`Checkpoint`], or `DistOptimizer::seek` for a weights-only
+    /// start. A run interrupted at any step and resumed this way is
+    /// bitwise-identical to the uninterrupted run (same world size,
+    /// either backend — DESIGN.md §9).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_from(
+        &self,
+        source: &mut dyn GradSource,
+        opt: &mut dyn DistOptimizer,
+        params: &mut Vec<Matrix>,
+        start_step: usize,
+        steps: usize,
+        mut metrics: RunMetrics,
+        mut ledger: CommLedger,
+    ) -> (RunMetrics, CommLedger) {
         let workers = source.workers();
         let mut grads = crate::optim::alloc_worker_grads(source.blocks(), workers);
 
-        for t in 0..steps {
+        for t in start_step..steps {
             let loss = source.compute(params, t, &mut grads);
             let t0 = Instant::now();
             let mut ctx = StepCtx {
@@ -99,6 +158,26 @@ impl Trainer {
 
             metrics.loss.push(loss);
             metrics.step_secs.push(dt);
+
+            if let Some(c) = &self.ckpt {
+                if c.every > 0 && (t + 1) % c.every == 0 && t + 1 < steps {
+                    let ck = Checkpoint::capture(
+                        (t + 1) as u64,
+                        workers,
+                        params,
+                        opt,
+                        source,
+                        &metrics,
+                        &ledger,
+                        c.config.clone(),
+                    );
+                    let path = ck.save(&c.dir).expect("write checkpoint");
+                    if self.verbose {
+                        println!("checkpoint -> {}", path.display());
+                    }
+                }
+            }
+
             if self.verbose && (t % self.log_every == 0 || t + 1 == steps) {
                 let cum = ledger.cumulative().last().copied().unwrap_or(0);
                 println!(

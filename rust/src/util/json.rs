@@ -122,6 +122,44 @@ impl Json {
         Json::Str(s.into())
     }
 
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    /// Insert or replace `key` in an object document (no-op on
+    /// non-objects) — the config-echo update pattern.
+    pub fn set(&mut self, key: &str, v: Json) {
+        if let Json::Obj(o) = self {
+            o.insert(key.to_string(), v);
+        }
+    }
+
+    // ---------- file IO ----------
+
+    /// Parse a JSON document from a file.
+    pub fn read_file(path: impl AsRef<std::path::Path>) -> Result<Json, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+    }
+
+    /// Write the pretty-printed document atomically: serialize into a
+    /// sibling `*.tmp` file, then rename over the target, so a reader
+    /// (or a killed writer — the checkpoint use case) never observes a
+    /// half-written manifest.
+    pub fn write_file_atomic(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+    }
+
     // ---------- parse ----------
 
     pub fn parse(input: &str) -> Result<Json, JsonError> {
@@ -434,6 +472,33 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""Aé""#).unwrap();
         assert_eq!(v.as_str(), Some("Aé"));
+    }
+
+    #[test]
+    fn set_inserts_and_replaces_keys() {
+        let mut v = Json::obj(vec![("a", Json::num(1.0))]);
+        v.set("a", Json::num(2.0));
+        v.set("b", Json::str("x"));
+        assert_eq!(v.get("a").as_f64(), Some(2.0));
+        assert_eq!(v.get("b").as_str(), Some("x"));
+        let mut arr = Json::arr(vec![]);
+        arr.set("a", Json::num(1.0)); // no-op, no panic
+        assert_eq!(arr, Json::arr(vec![]));
+    }
+
+    #[test]
+    fn file_roundtrip_atomic() {
+        let v = Json::obj(vec![
+            ("step", Json::num(13.0)),
+            ("arr", Json::arr(vec![Json::num(1.0), Json::Bool(true)])),
+        ]);
+        let dir = std::env::temp_dir().join("tsr_json_io_test");
+        let p = dir.join("doc.json");
+        v.write_file_atomic(&p).unwrap();
+        assert_eq!(Json::read_file(&p).unwrap(), v);
+        // No .tmp file left behind.
+        assert!(!p.with_extension("tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

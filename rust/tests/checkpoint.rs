@@ -1,0 +1,279 @@
+//! Checkpoint / resume integration tests (DESIGN.md §9).
+//!
+//! The headline contract: a run interrupted at ANY step and resumed
+//! from its checkpoint — through a full JSON text round trip — is
+//! **bitwise identical** to the uninterrupted run: same deterministic
+//! metrics JSON, same final-weight fingerprint, same ledger columns,
+//! for every method. Plus: manifest file round trips, and elastic
+//! world-size resumes re-shard error-feedback state (ragged numel
+//! included).
+
+use tsr::checkpoint::Checkpoint;
+use tsr::comm::{CommLedger, Topology};
+use tsr::exp::MethodCfg;
+use tsr::linalg::Matrix;
+use tsr::metrics::RunMetrics;
+use tsr::model::ModelSpec;
+use tsr::optim::onesided::OneSidedRefresh;
+use tsr::optim::{AdamHyper, DistOptimizer, LrSchedule, TsrConfig};
+use tsr::train::gradsim::QuadraticSim;
+use tsr::train::{GradSource, Trainer};
+use tsr::util::json::Json;
+
+fn all_seven(k: usize) -> Vec<MethodCfg> {
+    let tsr = TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 3,
+        ..Default::default()
+    };
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::OneSided {
+            rank: 6,
+            k,
+            refresh: OneSidedRefresh::ExactSvd,
+        },
+        MethodCfg::Tsr(tsr.clone()),
+        MethodCfg::TsrSgd(tsr),
+        MethodCfg::PowerSgd { rank: 5 },
+        MethodCfg::Sign { k_var: k },
+        MethodCfg::TopK { keep_frac: 0.03 },
+    ]
+}
+
+const WORKERS: usize = 2;
+
+fn fresh_setup(m: &MethodCfg) -> (QuadraticSim, Box<dyn DistOptimizer>, Vec<Matrix>) {
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let sim = QuadraticSim::new(&spec, WORKERS, 6, 0.01, 11);
+    let blocks = sim.blocks().to_vec();
+    let opt = m.build(&blocks, AdamHyper::default(), WORKERS);
+    let params = sim.init_params(1);
+    (sim, opt, params)
+}
+
+fn trainer(total_steps: usize) -> Trainer {
+    Trainer::new(Topology::multi_node(2, 1), LrSchedule::paper(total_steps))
+}
+
+/// Run the full `[0, steps)` range uninterrupted.
+fn run_uninterrupted(m: &MethodCfg, steps: usize) -> String {
+    let (mut sim, mut opt, mut params) = fresh_setup(m);
+    let (metrics, ledger) = trainer(steps).run(&mut sim, opt.as_mut(), &mut params, steps);
+    metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+}
+
+/// Run `[0, cut)`, checkpoint through a full JSON **text** round trip,
+/// rebuild every object from scratch, resume `[cut, steps)`.
+fn run_interrupted(m: &MethodCfg, cut: usize, steps: usize) -> String {
+    let (mut sim, mut opt, mut params) = fresh_setup(m);
+    let (metrics, ledger) = trainer(steps).run(&mut sim, opt.as_mut(), &mut params, cut);
+    let ck = Checkpoint::capture(
+        cut as u64,
+        WORKERS,
+        &params,
+        opt.as_ref(),
+        &sim,
+        &metrics,
+        &ledger,
+        Json::Null,
+    );
+    let text = ck.to_json().to_string_pretty();
+    drop((sim, opt, params, metrics, ledger));
+
+    // The "new process": everything rebuilt from config + manifest.
+    let ck = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(ck.step, cut as u64);
+    let (mut sim, mut opt, _) = fresh_setup(m);
+    assert_eq!(opt.name(), ck.method);
+    opt.load_state(&ck.opt_state, WORKERS).unwrap();
+    sim.load_state(&ck.source_state).unwrap();
+    let mut params = ck.params.clone();
+    let metrics = RunMetrics::state_from_json(&ck.metrics).unwrap();
+    let ledger = CommLedger::from_json(&ck.ledger).unwrap();
+    let (metrics, ledger) = trainer(steps).run_from(
+        &mut sim,
+        opt.as_mut(),
+        &mut params,
+        cut,
+        steps,
+        metrics,
+        ledger,
+    );
+    metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+}
+
+/// Tentpole: interrupt at a MID-PERIOD step (cut=7, refresh k=5) and
+/// at a refresh boundary (cut=10); both resumes must be byte-identical
+/// to the uninterrupted run for all seven methods.
+#[test]
+fn resumed_run_is_byte_identical_to_uninterrupted_for_every_method() {
+    let k = 5;
+    let steps = 17;
+    for m in all_seven(k) {
+        let full = run_uninterrupted(&m, steps);
+        for cut in [7usize, 10] {
+            let resumed = run_interrupted(&m, cut, steps);
+            assert_eq!(
+                full,
+                resumed,
+                "{}: resume at step {cut} diverged from the uninterrupted run",
+                m.label()
+            );
+        }
+    }
+}
+
+/// Manifest file round trip: save to disk, load, bitwise params and
+/// field equality.
+#[test]
+fn manifest_file_roundtrip_is_bitwise() {
+    let m = MethodCfg::Tsr(TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: 5,
+        refresh_emb: 5,
+        oversample: 3,
+        ..Default::default()
+    });
+    let (mut sim, mut opt, mut params) = fresh_setup(&m);
+    let (metrics, ledger) = trainer(9).run(&mut sim, opt.as_mut(), &mut params, 6);
+    let ck = Checkpoint::capture(
+        6,
+        WORKERS,
+        &params,
+        opt.as_ref(),
+        &sim,
+        &metrics,
+        &ledger,
+        Json::obj(vec![("source", Json::str("quad"))]),
+    );
+    let dir = std::env::temp_dir().join("tsr_ckpt_file_test");
+    let path = ck.save(&dir).unwrap();
+    assert!(path.ends_with("ckpt_step6.json"));
+    let back = Checkpoint::load(&path).unwrap();
+    assert_eq!(back.step, 6);
+    assert_eq!(back.workers, WORKERS);
+    assert_eq!(back.method, "tsr-adam");
+    assert_eq!(back.config.get_str("source", "?"), "quad");
+    assert_eq!(back.params.len(), ck.params.len());
+    for (a, b) in ck.params.iter().zip(&back.params) {
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+    assert_eq!(back.opt_state, ck.opt_state);
+    assert_eq!(back.ledger, ck.ledger);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Elastic restart with ragged shards: error-feedback methods saved at
+/// one world size must load at another (numel % workers != 0), with
+/// the re-sharded buffers accounted in state_elements and the run
+/// still training.
+#[test]
+fn elastic_resume_reshards_error_feedback_on_ragged_numel() {
+    use tsr::model::BlockSpec;
+    // 5×7 = 35 elements: ragged for both 3 and 2 workers.
+    let blocks = vec![BlockSpec {
+        name: "w".into(),
+        rows: 5,
+        cols: 7,
+        class: tsr::comm::LayerClass::Linear,
+    }];
+    for m in [MethodCfg::TopK { keep_frac: 0.1 }, MethodCfg::Sign { k_var: 4 }] {
+        // Train at W=3 so the per-worker residuals are nonzero.
+        let mut opt3 = m.build(&blocks, AdamHyper::default(), 3);
+        let mut params = vec![Matrix::zeros(5, 7)];
+        let topo3 = Topology::single_node(3);
+        let mut ledger = CommLedger::new();
+        let mut rng = tsr::util::rng::Xoshiro256::new(8);
+        for _ in 0..3 {
+            let mut grads: Vec<Vec<Matrix>> = (0..3)
+                .map(|_| vec![Matrix::gaussian(5, 7, 1.0, &mut rng)])
+                .collect();
+            opt3.step(&mut tsr::optim::StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo3,
+                lr_mult: 1.0,
+                exec: &tsr::exec::ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        let saved = opt3.save_state().to_string_pretty();
+        let state = Json::parse(&saved).unwrap();
+
+        // Same world size: bit-exact restore.
+        let mut opt_same = m.build(&blocks, AdamHyper::default(), 3);
+        opt_same.load_state(&state, 3).unwrap();
+        assert_eq!(opt_same.save_state(), opt3.save_state(), "{}", m.label());
+
+        // Elastic W=3 -> W'=2: re-sharded, fewer EF elements held.
+        let mut opt2 = m.build(&blocks, AdamHyper::default(), 2);
+        opt2.load_state(&state, 2).unwrap();
+        assert_eq!(
+            opt2.state_elements(),
+            opt3.state_elements() - 35,
+            "{}: one fewer 35-element EF buffer after re-shard",
+            m.label()
+        );
+        // The resumed optimizer keeps training without structural issues.
+        let topo2 = Topology::single_node(2);
+        let mut grads: Vec<Vec<Matrix>> = (0..2)
+            .map(|_| vec![Matrix::gaussian(5, 7, 1.0, &mut rng)])
+            .collect();
+        opt2.step(&mut tsr::optim::StepCtx {
+            params: &mut params,
+            grads: &mut grads,
+            ledger: &mut ledger,
+            topo: &topo2,
+            lr_mult: 1.0,
+            exec: &tsr::exec::ExecBackend::Sequential,
+        });
+        ledger.end_step();
+        for p in &params {
+            assert!(p.data.iter().all(|v| v.is_finite()), "{}", m.label());
+        }
+    }
+}
+
+/// Structural guards: wrong method, wrong block count, wrong shapes
+/// must be rejected, not silently mis-restored.
+#[test]
+fn load_state_rejects_structural_mismatch() {
+    let k = 5;
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let sim = QuadraticSim::new(&spec, WORKERS, 6, 0.01, 11);
+    let blocks = sim.blocks().to_vec();
+    let tsr_state = MethodCfg::Tsr(TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 3,
+        ..Default::default()
+    })
+    .build(&blocks, AdamHyper::default(), WORKERS)
+    .save_state();
+
+    // Same block layout, different method family.
+    let mut adam = MethodCfg::Adam.build(&blocks, AdamHyper::default(), WORKERS);
+    assert!(adam.load_state(&tsr_state, WORKERS).is_err());
+
+    // Same method, different rank -> shape mismatch.
+    let mut other_rank = MethodCfg::Tsr(TsrConfig {
+        rank: 6,
+        rank_emb: 4,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 3,
+        ..Default::default()
+    })
+    .build(&blocks, AdamHyper::default(), WORKERS);
+    assert!(other_rank.load_state(&tsr_state, WORKERS).is_err());
+}

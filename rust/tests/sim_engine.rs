@@ -124,6 +124,72 @@ fn sync_plan_matches_metered_ledger_for_every_method() {
     }
 }
 
+/// Satellite regression: the same parity must hold from a MID-PERIOD
+/// start — the first executed step `t0 ∉ {0 mod k}` (what a resume or
+/// an engine-backed prediction started mid-period creates). The
+/// refresh-based methods must both execute AND predict a refresh at
+/// that first step (`optim::refresh_due`); the old `t % k == 0`-only
+/// `sync_plan` predicate under-predicted it for tsr, tsr-sgd,
+/// onesided, and sign-adam.
+#[test]
+fn sync_plan_matches_metered_ledger_from_mid_period_start() {
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let k = 5usize;
+    let t0 = 7usize; // 7 % 5 != 0 — off the refresh cadence
+    let steps = t0 + 2 * k + 3;
+    let workers = 2;
+    for m in all_seven(k) {
+        let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
+        let blocks = sim.blocks().to_vec();
+        let mut opt = m.build(&blocks, AdamHyper::default(), workers);
+        // Weights-only mid-period start: position the step counter at
+        // t0 with no optimizer state (no bases, no frozen variance).
+        opt.seek(t0 as u64);
+        // Plans are collected BEFORE stepping — pure prediction.
+        let plans: Vec<_> = (t0..steps).map(|t| opt.sync_plan(t as u64)).collect();
+        let flat = matches!(
+            m,
+            MethodCfg::Adam | MethodCfg::PowerSgd { .. } | MethodCfg::TopK { .. }
+        );
+        assert!(
+            flat || plans[0].has_refresh(),
+            "{}: a refresh-based method must predict its first-step refresh",
+            m.label()
+        );
+        let mut params = sim.init_params(1);
+        let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+        let topo = Topology::multi_node(2, 1);
+        let mut ledger = CommLedger::new();
+        for t in t0..steps {
+            sim.compute(&params, t, &mut grads);
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &tsr::exec::ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        for (i, plan) in plans.iter().enumerate() {
+            let t = t0 + i;
+            assert_eq!(
+                plan.total_bytes(),
+                ledger.step(i).total,
+                "{} step {t}: mid-period schedule bytes != metered bytes",
+                m.label()
+            );
+            assert_eq!(
+                plan.has_refresh(),
+                ledger.step(i).refresh,
+                "{} step {t}: mid-period refresh flag mismatch",
+                m.label()
+            );
+        }
+    }
+}
+
 /// Bucketed + overlapped time is never worse than serial unbucketed
 /// time, and strictly better when many small payloads share a latency-
 /// dominated link.
