@@ -1,0 +1,57 @@
+//! Native-LM step timings (DESIGN.md §10): the manual fwd+bwd pass in
+//! isolation, and the full train step (fwd+bwd + sync + optimizer) for
+//! dense AdamW vs TSR-Adam on the 64-vocab / 2-layer model at the
+//! `--source lm` CLI defaults. This is the `lm_step` leg of CI's
+//! bench-smoke job (p50 JSON artifact gated by `ci/bench_regression.py`).
+//!
+//! Run: `cargo bench --bench lm_step`
+
+use tsr::comm::{CommLedger, Topology};
+use tsr::exp::lm_curves::lm_tsr_cfg;
+use tsr::exp::MethodCfg;
+use tsr::optim::{AdamHyper, StepCtx};
+use tsr::train::lm_source::LmSource;
+use tsr::train::GradSource;
+use tsr::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let workers = 2;
+    let mut source = LmSource::small(workers, 1);
+    let blocks = source.blocks().to_vec();
+    let mut params = source.init_params(2);
+    let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+    let topo = Topology::multi_node(2, 1);
+    // Honour TSR_BACKEND so the smoke job can also time the threaded
+    // backend; resolved once, outside the timed loops.
+    let exec = tsr::exec::ExecBackend::from_env();
+
+    b.bench("lm fwd+bwd compute (2w v64 h32 l2 b4 s16)", || {
+        source.compute(&params, 0, &mut grads);
+    });
+
+    // The canonical TSR config the lm-curves table reports and the
+    // acceptance test asserts — the bench times that exact setting.
+    for (label, cfg) in [
+        ("adamw", MethodCfg::Adam),
+        ("tsr", MethodCfg::Tsr(lm_tsr_cfg(source.model().hidden))),
+    ] {
+        let mut opt = cfg.build(&blocks, AdamHyper::default(), workers);
+        let mut ledger = CommLedger::new();
+        b.bench(&format!("lm {label} full step (fwd+bwd+sync)"), || {
+            source.compute(&params, 0, &mut grads);
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &exec,
+            });
+            ledger.end_step();
+        });
+    }
+
+    // CI bench-smoke artifact (no-op unless BENCH_JSON_DIR is set).
+    b.write_json("lm_step");
+}

@@ -130,6 +130,41 @@ pub fn f32_from_json(j: &Json, what: &str) -> Result<f32, String> {
         .map_err(|e| format!("{what}: bad hex {s:?}: {e}"))
 }
 
+/// `{rng_s, rng_spare}` — a [`crate::util::rng::Xoshiro256`] stream
+/// position: the four state words as u64 bit patterns plus the cached
+/// Box–Muller spare. One shared codec for every gradient source's
+/// checkpoint payload (QuadraticSim's noise RNG, the LM batcher's
+/// per-worker streams), so the bit-sensitive encoding cannot fork.
+pub fn rng_to_json(s: &[u64; 4], spare: Option<f64>) -> Json {
+    Json::obj(vec![
+        ("rng_s", Json::arr(s.iter().map(|&w| u64_to_json(w)).collect())),
+        (
+            "rng_spare",
+            match spare {
+                Some(g) => f64_to_json(g),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// Inverse of [`rng_to_json`]; feeds `Xoshiro256::from_snapshot`.
+pub fn rng_from_json(j: &Json, what: &str) -> Result<([u64; 4], Option<f64>), String> {
+    let words = j.get("rng_s").as_arr().ok_or_else(|| format!("{what}: missing rng_s"))?;
+    if words.len() != 4 {
+        return Err(format!("{what}: rng_s has {} words, expected 4", words.len()));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = u64_from_json(w, &format!("{what}.rng_s[{i}]"))?;
+    }
+    let spare = match j.get("rng_spare") {
+        Json::Null => None,
+        other => Some(f64_from_json(other, &format!("{what}.rng_spare"))?),
+    };
+    Ok((s, spare))
+}
+
 /// `{rows, cols, f32le}` — shape plus the bit-exact payload.
 pub fn matrix_to_json(m: &Matrix) -> Json {
     Json::obj(vec![
@@ -189,6 +224,22 @@ pub fn matrices_from_json(j: &Json, what: &str) -> Result<Vec<Matrix>, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn rng_snapshot_roundtrips_bitwise_through_text() {
+        for spare in [None, Some(-0.0f64), Some(1.0 / 3.0)] {
+            let s = [1u64, u64::MAX, 0x0123_4567_89AB_CDEF, 0];
+            let text = rng_to_json(&s, spare).to_string_pretty();
+            let back = Json::parse(&text).unwrap();
+            let (s2, spare2) = rng_from_json(&back, "t").unwrap();
+            assert_eq!(s, s2);
+            assert_eq!(spare.map(f64::to_bits), spare2.map(f64::to_bits));
+        }
+        // Truncated state word list is rejected.
+        let mut j = rng_to_json(&[1, 2, 3, 4], None);
+        j.set("rng_s", Json::arr(vec![u64_to_json(1)]));
+        assert!(rng_from_json(&j, "t").is_err());
+    }
 
     #[test]
     fn f32_hex_roundtrips_every_special_bit_pattern() {

@@ -1,0 +1,224 @@
+//! Quality-vs-bytes on the native transformer LM (`tsr lm-curves`,
+//! DESIGN.md §10) — the repo's first experiment whose loss axis comes
+//! from a *real* model rather than the quadratic proxy.
+//!
+//! Following the evaluation settings of GaLore and PowerSGD (PAPERS.md):
+//! compression methods must be compared on end-task loss, not gradient
+//! norms. Every method trains the same LM from the same initialization
+//! on the same per-worker token streams (matched seeds); the output
+//! reports each method's final loss, its relative gap to dense AdamW,
+//! and its ledger bytes — loss you keep vs bytes you stop sending. The
+//! corpus's unigram entropy is included as the context-free loss floor:
+//! a method below it is demonstrably learning from context.
+
+use crate::comm::Topology;
+use crate::data::SyntheticCorpus;
+use crate::exec::ExecBackend;
+use crate::exp::runs::MethodCfg;
+use crate::model::ModelSpec;
+use crate::optim::onesided::OneSidedRefresh;
+use crate::optim::{AdamHyper, LrSchedule, TsrConfig};
+use crate::train::lm_source::LmSource;
+use crate::train::{GradSource, Trainer};
+use crate::util::json::Json;
+
+/// Run shape for the quality-vs-bytes sweep. The default is the
+/// 64-vocab / 2-layer acceptance configuration (ISSUE 5), sized so the
+/// full 5-method sweep is CPU-feasible.
+#[derive(Clone, Debug)]
+pub struct LmCurvesCfg {
+    pub steps: usize,
+    pub workers: usize,
+    pub seed: u64,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub inter: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+}
+
+impl Default for LmCurvesCfg {
+    fn default() -> Self {
+        Self {
+            steps: 300,
+            workers: 4,
+            seed: 0x5EED,
+            vocab: 64,
+            hidden: 32,
+            inter: 64,
+            heads: 2,
+            layers: 2,
+            batch: 8,
+            seq: 16,
+            lr: 0.01,
+        }
+    }
+}
+
+/// The canonical TSR configuration for the native LM — the single
+/// source of truth shared by the `lm-curves` roster, the acceptance
+/// test (`tests/lm_train.rs`), and the `lm_step` bench, so the
+/// configuration the table reports is exactly the one that is asserted
+/// and timed.
+///
+/// Rank 3h/4 with K = 25: real transformer gradients at this tiny
+/// scale are NOT as low-rank as the quadratic proxy's (the mini-batch
+/// noise floor is broad), so rank h/2 leaves a ~10% loss gap while
+/// 3h/4 sits within ~2% of dense AdamW — still at well under half the
+/// bytes (oversampled sketches cap at min(m, n)).
+pub fn lm_tsr_cfg(hidden: usize) -> TsrConfig {
+    let rank = (3 * hidden / 4).max(4);
+    TsrConfig {
+        rank,
+        rank_emb: rank,
+        refresh_every: 25,
+        refresh_emb: 25,
+        oversample: 8,
+        ..Default::default()
+    }
+}
+
+/// The method roster: dense AdamW, TSR-Adam with the embedding
+/// extension enabled ([`lm_tsr_cfg`]), GaLore-style one-sided, and the
+/// Sign/TopK compressed baselines — every family the paper's headline
+/// claim is measured against, at ranks scaled to the LM's hidden size.
+pub fn lm_methods(hidden: usize) -> Vec<MethodCfg> {
+    let rank = (3 * hidden / 4).max(4);
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::Tsr(lm_tsr_cfg(hidden)),
+        MethodCfg::OneSided {
+            rank,
+            k: 25,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        MethodCfg::Sign { k_var: 25 },
+        MethodCfg::TopK { keep_frac: 0.05 },
+    ]
+}
+
+/// One training run of `method` on the LM described by `cfg`, with
+/// seeds matched across methods (same corpus, same streams, same init).
+pub fn run_lm_method(
+    cfg: &LmCurvesCfg,
+    method: &MethodCfg,
+    exec: &ExecBackend,
+) -> crate::exp::runs::RunOutput {
+    let spec = ModelSpec::proxy(cfg.vocab, cfg.hidden, cfg.inter, cfg.heads, cfg.layers);
+    let mut source = LmSource::new(&spec, cfg.workers, cfg.batch, cfg.seq, cfg.seed);
+    let blocks = source.blocks().to_vec();
+    let hyper = AdamHyper {
+        lr: cfg.lr,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = method.build(&blocks, hyper, cfg.workers);
+    let mut params = source.init_params(cfg.seed ^ 0xF00D);
+    let topo = Topology::multi_node(2, cfg.workers.div_ceil(2));
+    let trainer = Trainer::new(topo, LrSchedule::paper(cfg.steps)).with_backend(*exec);
+    let (mut metrics, ledger) = trainer.run(&mut source, opt.as_mut(), &mut params, cfg.steps);
+    metrics.name = method.label();
+    crate::exp::runs::RunOutput {
+        label: method.label(),
+        metrics,
+        ledger,
+        state_elements: opt.state_elements(),
+    }
+}
+
+/// The full sweep: one row per method. Prints the quality-vs-bytes
+/// table and returns it as JSON (written to `results/lm_curves.json`
+/// by the CLI).
+pub fn lm_curves(cfg: &LmCurvesCfg, exec: &ExecBackend) -> Json {
+    let floor = SyntheticCorpus::new(cfg.vocab, cfg.seed).unigram_entropy(200_000, 0xF1_00D);
+    println!(
+        "\nLM quality-vs-bytes — vocab {}, hidden {}, {} layers, {} workers, {} steps",
+        cfg.vocab, cfg.hidden, cfg.layers, cfg.workers, cfg.steps
+    );
+    println!("unigram-entropy floor (context-free predictor): {floor:.4} nats");
+    println!(
+        "{:<22} {:>10} {:>12} {:>12} {:>12}",
+        "method", "final", "vs adamw", "bytes/step", "cum bytes"
+    );
+    let mut rows = Vec::new();
+    let mut adam_final: Option<f64> = None;
+    for method in lm_methods(cfg.hidden) {
+        let out = run_lm_method(cfg, &method, exec);
+        let final_loss = out.metrics.final_loss() as f64;
+        // Gap baseline matched by LABEL, not roster position, so a
+        // reordered method list cannot silently rebase the column.
+        if out.label == "adamw" {
+            adam_final = Some(final_loss);
+        }
+        let base = adam_final.expect("lm_methods must run adamw before any gap is computed");
+        let gap = (final_loss - base) / base;
+        let cum = *out.metrics.cum_bytes.last().unwrap_or(&0);
+        println!(
+            "{:<22} {:>10.4} {:>11.2}% {:>12} {:>12}",
+            out.label,
+            final_loss,
+            100.0 * gap,
+            crate::util::bench::fmt_bytes(out.ledger.bytes_per_step()),
+            crate::util::bench::fmt_bytes(cum as f64),
+        );
+        rows.push(Json::obj(vec![
+            ("label", Json::str(out.label.clone())),
+            ("final_loss", Json::num(final_loss)),
+            ("loss_gap_vs_adamw", Json::num(gap)),
+            ("beats_unigram_floor", Json::Bool(final_loss < floor)),
+            ("bytes_per_step", Json::num(out.ledger.bytes_per_step())),
+            ("peak_bytes", Json::num(out.ledger.peak_bytes() as f64)),
+            ("cum_bytes", Json::num(cum as f64)),
+            ("state_elements", Json::num(out.state_elements as f64)),
+            (
+                "loss",
+                Json::Arr(out.metrics.loss.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+        ]));
+    }
+    Json::obj(vec![
+        ("experiment", Json::str("lm_curves")),
+        ("vocab", Json::num(cfg.vocab as f64)),
+        ("hidden", Json::num(cfg.hidden as f64)),
+        ("layers", Json::num(cfg.layers as f64)),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("workers", Json::num(cfg.workers as f64)),
+        ("seed", crate::checkpoint::codec::u64_to_json(cfg.seed)),
+        ("unigram_entropy_floor", Json::num(floor)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_emits_one_row_per_method_with_matched_seeds() {
+        // Shortened sweep: the structure (row count, floor field, gap
+        // sign conventions) is what this test pins; the 300-step quality
+        // acceptance lives in tests/lm_train.rs.
+        let cfg = LmCurvesCfg {
+            steps: 6,
+            workers: 2,
+            batch: 2,
+            seq: 8,
+            ..Default::default()
+        };
+        let j = lm_curves(&cfg, &ExecBackend::Sequential);
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), lm_methods(cfg.hidden).len());
+        assert_eq!(rows[0].get_str("label", "?"), "adamw");
+        assert_eq!(rows[0].get_f64("loss_gap_vs_adamw", 1.0), 0.0);
+        assert!(j.get_f64("unigram_entropy_floor", 0.0) > 1.0);
+        // TSR moves fewer bytes per step than dense AdamW even in a
+        // short run that pays a refresh at step 0.
+        let adam_bytes = rows[0].get_f64("bytes_per_step", 0.0);
+        let tsr_bytes = rows[1].get_f64("bytes_per_step", f64::MAX);
+        assert!(tsr_bytes < adam_bytes, "{tsr_bytes} vs {adam_bytes}");
+    }
+}

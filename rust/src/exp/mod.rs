@@ -3,6 +3,7 @@
 
 pub mod analytic;
 pub mod figures;
+pub mod lm_curves;
 pub mod runs;
 pub mod simtime;
 pub mod tables;

@@ -5,7 +5,8 @@
 //!   fig1|fig3|fig4|fig5                  regenerate paper figure data
 //!   simtime                              Fig 6: step-time breakdown (sim/)
 //!   theory                               Theorem 1 validation sweep
-//!   train                                PJRT end-to-end training run
+//!   lm-curves                            quality-vs-bytes on the native LM (nn/)
+//!   train                                end-to-end training run (pjrt|quad|lm)
 //!   info                                 platform / artifact status
 
 use tsr::exp::{figures, tables, theory};
@@ -68,9 +69,19 @@ fn main() {
                 args.get_usize("gpus", 8),
                 args.get_usize("steps", 100),
                 &cfg,
-                &backend_from_args(args),
+                &backend_from_args(&args),
             );
             write_results("fig6_simtime.json", &j);
+        }
+        Some("lm-curves") => {
+            let cfg = tsr::exp::lm_curves::LmCurvesCfg {
+                steps: args.get_usize("steps", 300),
+                workers: args.get_usize("workers", 4),
+                seed: args.get_u64("seed", 0x5EED),
+                ..Default::default()
+            };
+            let j = tsr::exp::lm_curves::lm_curves(&cfg, &backend_from_args(&args));
+            write_results("lm_curves.json", &j);
         }
         Some("theory") => {
             let horizons: Vec<usize> = args
@@ -94,6 +105,9 @@ fn main() {
                  \n  simtime:  simtime [--scale 60m --nodes 4 --gpus 8 --steps N \
                  --bucket-kb K --tokens T --flops F --no-overlap --flat]\
                  \n  theory:   theory [--horizons 50,100,...]\
+                 \n  lm:       lm-curves [--steps N --workers W --seed S] — loss-vs-bytes \
+                 table on the native transformer LM (AdamW vs TSR vs baselines, \
+                 matched seeds; DESIGN.md §10)\
                  \n  train:    train --manifest artifacts/tiny_manifest.json \
                  [--method tsr|adamw|galore|signadam|topk] [--steps N] [--workers W] \
                  [--k-var N] [--keep-frac F]\
@@ -101,14 +115,17 @@ fn main() {
                  \n            --backend B       execution backend: sequential | threaded \
                  (default $TSR_BACKEND or sequential; both are bitwise-identical — \
                  threaded runs one OS thread per worker, see DESIGN.md §8)\
-                 \n            --source quad     synthetic low-rank quadratic instead of a \
-                 PJRT manifest (no artifacts needed; deterministic metrics JSON \
-                 for CI's cross-backend gate)\
+                 \n            --source S        gradient source: quad | lm | pjrt \
+                 (default pjrt). quad = synthetic low-rank quadratic; lm = native \
+                 pure-Rust transformer LM on the synthetic corpus ([--vocab V \
+                 --hidden H --inter F --heads A --layers L --batch B --seq T], \
+                 DESIGN.md §10). Both are artifact-free and emit deterministic \
+                 metrics JSON for CI's cross-backend gate\
                  \n            --save-every N    write a checkpoint manifest every N steps \
-                 (quad source; --save-dir DIR, default checkpoints/)\
+                 (quad/lm sources; --save-dir DIR, default checkpoints/)\
                  \n            --resume PATH     continue a checkpointed run: byte-identical \
-                 to the uninterrupted run at the same world size, elastic \
-                 --workers otherwise (DESIGN.md §9)\
+                 to the uninterrupted run at the same world size; elastic \
+                 --workers supported for quad only (DESIGN.md §9)\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -162,34 +179,65 @@ fn info() {
     }
 }
 
-/// `tsr train` front door: dispatch on gradient source.
+/// `tsr train` front door: dispatch on gradient source. A `--resume`
+/// run takes its source kind from the manifest's config echo, so the
+/// flag may be omitted there. Unknown sources fail loudly with the
+/// valid list — a typo must never fall through to a default path.
 fn run_train(args: &Args) {
+    if args.get("resume").is_some() {
+        return run_train_synth(args);
+    }
     match args.get_or("source", "pjrt") {
-        "quad" => run_train_quad(args),
+        "quad" | "lm" => run_train_synth(args),
         "pjrt" => run_train_pjrt(args),
-        other => panic!("unknown --source {other} (pjrt|quad)"),
+        other => {
+            eprintln!(
+                "error: unknown --source `{other}`\n\
+                 valid sources: quad | lm | pjrt\n\
+                 \x20 quad  synthetic low-rank quadratic objective (artifact-free, deterministic)\n\
+                 \x20 lm    native pure-Rust transformer LM on the synthetic corpus\n\
+                 \x20       (artifact-free, deterministic — DESIGN.md §10)\n\
+                 \x20 pjrt  AOT-compiled JAX artifact via PJRT (needs `make artifacts`)"
+            );
+            std::process::exit(2);
+        }
     }
 }
 
-/// Resolve the `--source quad` run configuration — every default
+/// Resolve a `--source quad|lm` run configuration — every default
 /// applied — into the JSON echo stored in checkpoint manifests. Both
 /// the fresh path and the resume path construct their setup from this
 /// one document, so a resumed run cannot drift from re-typed flags.
-fn quad_run_config(args: &Args) -> tsr::util::json::Json {
+fn synth_run_config(args: &Args) -> tsr::util::json::Json {
     use tsr::util::json::Json;
-    let scale = args.get_or("scale", "tiny");
-    let hidden = if scale == "tiny" {
-        32
+    let source = args.get_or("source", "quad");
+    let mut cfg;
+    if source == "lm" {
+        let hidden = args.get_usize("hidden", 32);
+        cfg = method_config_json(args, hidden);
+        cfg.set("vocab", Json::num(args.get_usize("vocab", 64) as f64));
+        cfg.set("hidden", Json::num(hidden as f64));
+        cfg.set("inter", Json::num(args.get_usize("inter", hidden * 2) as f64));
+        cfg.set("heads", Json::num(args.get_usize("heads", 2) as f64));
+        cfg.set("layers", Json::num(args.get_usize("layers", 2) as f64));
+        cfg.set("batch", Json::num(args.get_usize("batch", 4) as f64));
+        cfg.set("seq", Json::num(args.get_usize("seq", 16) as f64));
+        cfg.set("lr", Json::num(args.get_f64("lr", 0.01)));
     } else {
-        tsr::exp::runs::proxy_spec(scale).hidden
-    };
-    let mut cfg = method_config_json(args, hidden);
-    cfg.set("source", Json::str("quad"));
-    cfg.set("scale", Json::str(scale));
+        let scale = args.get_or("scale", "tiny");
+        let hidden = if scale == "tiny" {
+            32
+        } else {
+            tsr::exp::runs::proxy_spec(scale).hidden
+        };
+        cfg = method_config_json(args, hidden);
+        cfg.set("scale", Json::str(scale));
+        cfg.set("noise", Json::num(args.get_f64("noise", 0.01)));
+        cfg.set("lr", Json::num(args.get_f64("lr", 0.05)));
+    }
+    cfg.set("source", Json::str(source));
     cfg.set("steps", Json::num(args.get_usize("steps", 40) as f64));
     cfg.set("workers", Json::num(args.get_usize("workers", 4) as f64));
-    cfg.set("lr", Json::num(args.get_f64("lr", 0.05)));
-    cfg.set("noise", Json::num(args.get_f64("noise", 0.01)));
     cfg.set(
         "seed",
         tsr::checkpoint::codec::u64_to_json(args.get_u64("seed", 42)),
@@ -234,29 +282,39 @@ fn method_cfg_from_config(cfg: &tsr::util::json::Json) -> tsr::exp::MethodCfg {
     }
 }
 
-/// Synthetic low-rank quadratic training — no PJRT artifacts needed.
-/// Emits the *deterministic* metrics JSON (no wall-clock fields, plus a
-/// final-weight fingerprint), which CI's determinism gate runs twice
-/// per backend and diffs byte-for-byte. `--save-every N` writes
-/// checkpoint manifests; `--resume PATH` continues one — interrupted +
-/// resumed is byte-identical to uninterrupted (DESIGN.md §9).
-fn run_train_quad(args: &Args) {
+/// Synthetic deterministic training (`--source quad | lm`) — no PJRT
+/// artifacts needed. `quad` feeds the low-rank quadratic objective,
+/// `lm` the native pure-Rust transformer LM on the synthetic corpus
+/// (DESIGN.md §10). Both emit the *deterministic* metrics JSON (no
+/// wall-clock fields, plus a final-weight fingerprint), which CI's
+/// determinism gate runs twice per backend and diffs byte-for-byte.
+/// `--save-every N` writes checkpoint manifests; `--resume PATH`
+/// continues one — interrupted + resumed is byte-identical to
+/// uninterrupted (DESIGN.md §9).
+fn run_train_synth(args: &Args) {
     use tsr::checkpoint::Checkpoint;
     use tsr::comm::{CommLedger, Topology};
     use tsr::exp::runs::proxy_spec;
     use tsr::metrics::RunMetrics;
     use tsr::optim::{AdamHyper, LrSchedule};
     use tsr::train::gradsim::QuadraticSim;
+    use tsr::train::lm_source::LmSource;
     use tsr::train::{CkptCfg, GradSource, Trainer};
 
     let backend = backend_from_args(args);
     let resume = args.get("resume").map(|p| {
         let ck = Checkpoint::load(p).unwrap_or_else(|e| panic!("--resume: {e}"));
-        assert_eq!(
-            ck.config.get_str("source", "?"),
-            "quad",
-            "--resume: checkpoint was not taken by a --source quad run"
+        let src = ck.config.get_str("source", "?").to_string();
+        assert!(
+            src == "quad" || src == "lm",
+            "--resume: checkpoint source `{src}` is not a synthetic source (quad|lm)"
         );
+        if let Some(flag) = args.get("source") {
+            assert_eq!(
+                flag, src,
+                "--resume: --source {flag} contradicts the checkpoint's source `{src}`"
+            );
+        }
         ck
     });
     // One resolved config drives both paths; a resume trusts the
@@ -266,7 +324,7 @@ fn run_train_quad(args: &Args) {
         Some(ck) => {
             const CONFIG_ONLY: &[&str] = &[
                 "lr", "noise", "seed", "method", "k", "k-var", "keep-frac", "rank", "rank-emb",
-                "scale", "topo",
+                "scale", "topo", "vocab", "hidden", "inter", "heads", "layers", "batch", "seq",
             ];
             for flag in CONFIG_ONLY {
                 if args.get(flag).is_some() {
@@ -278,26 +336,21 @@ fn run_train_quad(args: &Args) {
             }
             ck.config.clone()
         }
-        None => quad_run_config(args),
+        None => synth_run_config(args),
     };
+    let kind = config.get_str("source", "quad").to_string();
     let start_step = resume.as_ref().map(|ck| ck.step as usize).unwrap_or(0);
     let steps = args.get_usize("steps", config.get_usize("steps", 40));
     assert!(
         steps > start_step,
         "--steps {steps} must exceed the checkpoint's completed step {start_step}"
     );
-    // Elastic: --workers may differ from the checkpoint's world size.
+    // Elastic: --workers may differ from the checkpoint's world size
+    // (quad only — lm data streams are per-worker and cannot re-shard).
     let workers = args.get_usize("workers", config.get_usize("workers", 4));
-    let lr = config.get_f64("lr", 0.05) as f32;
-    let noise = config.get_f64("noise", 0.01) as f32;
+    let lr = config.get_f64("lr", if kind == "lm" { 0.01 } else { 0.05 }) as f32;
     let seed = tsr::checkpoint::codec::u64_from_json(config.get("seed"), "config.seed")
         .expect("config.seed");
-    let scale = config.get_str("scale", "tiny").to_string();
-    let spec = if scale == "tiny" {
-        tsr::model::ModelSpec::proxy(200, 32, 64, 2, 2)
-    } else {
-        proxy_spec(&scale)
-    };
     let topo = match config.get_str("topo", "multi_node") {
         "single_node" => Topology::single_node(workers),
         "multi_node" => Topology::multi_node(2, workers.div_ceil(2)),
@@ -305,8 +358,43 @@ fn run_train_quad(args: &Args) {
         other => panic!("unknown --topo {other} (single_node|multi_node|ethernet)"),
     };
 
-    let mut sim = QuadraticSim::new(&spec, workers, (spec.hidden / 2).max(8), noise, seed);
-    let blocks = sim.blocks().to_vec();
+    let (mut source, run_desc): (Box<dyn GradSource>, String) = if kind == "lm" {
+        if let Some(ck) = &resume {
+            assert_eq!(
+                workers, ck.workers,
+                "--resume: elastic --workers is not supported for --source lm \
+                 (per-worker token streams cannot be re-sharded)"
+            );
+        }
+        let spec = tsr::model::ModelSpec::proxy(
+            config.get_usize("vocab", 64),
+            config.get_usize("hidden", 32),
+            config.get_usize("inter", 64),
+            config.get_usize("heads", 2),
+            config.get_usize("layers", 2),
+        );
+        let src = LmSource::new(
+            &spec,
+            workers,
+            config.get_usize("batch", 4),
+            config.get_usize("seq", 16),
+            seed,
+        );
+        let desc = format!("lm:{}", spec.name);
+        (Box::new(src), desc)
+    } else {
+        let noise = config.get_f64("noise", 0.01) as f32;
+        let scale = config.get_str("scale", "tiny").to_string();
+        let spec = if scale == "tiny" {
+            tsr::model::ModelSpec::proxy(200, 32, 64, 2, 2)
+        } else {
+            proxy_spec(&scale)
+        };
+        let sim = QuadraticSim::new(&spec, workers, (spec.hidden / 2).max(8), noise, seed);
+        let desc = format!("quad:{}", spec.name);
+        (Box::new(sim), desc)
+    };
+    let blocks = source.blocks().to_vec();
     let mcfg = method_cfg_from_config(&config);
     let hyper = AdamHyper {
         lr,
@@ -328,7 +416,8 @@ fn run_train_quad(args: &Args) {
             }
             opt.load_state(&ck.opt_state, workers)
                 .expect("--resume: restore optimizer state");
-            sim.load_state(&ck.source_state)
+            source
+                .load_state(&ck.source_state)
                 .expect("--resume: restore source state");
             (
                 ck.params.clone(),
@@ -337,7 +426,7 @@ fn run_train_quad(args: &Args) {
             )
         }
         None => (
-            sim.init_params(seed ^ 0xF00D),
+            source.init_params(seed ^ 0xF00D),
             RunMetrics::new(opt.name()),
             CommLedger::new(),
         ),
@@ -360,7 +449,7 @@ fn run_train_quad(args: &Args) {
         });
     }
     let (mut metrics, ledger) = trainer.run_from(
-        &mut sim,
+        source.as_mut(),
         opt.as_mut(),
         &mut params,
         start_step,
@@ -371,9 +460,8 @@ fn run_train_quad(args: &Args) {
     metrics.name = mcfg.label();
 
     println!(
-        "== {} on quad:{} ({} workers, {} backend{}) ==",
+        "== {} on {run_desc} ({} workers, {} backend{}) ==",
         mcfg.label(),
-        spec.name,
         workers,
         backend.name(),
         if start_step > 0 {
@@ -392,7 +480,12 @@ fn run_train_quad(args: &Args) {
         tsr::metrics::params_fingerprint(&params)
     );
 
-    let out = args.get_or("out", "results/train_quad.json");
+    let default_out = if kind == "lm" {
+        "results/train_lm.json"
+    } else {
+        "results/train_quad.json"
+    };
+    let out = args.get_or("out", default_out);
     if let Some(dir) = std::path::Path::new(out).parent() {
         let _ = std::fs::create_dir_all(dir);
     }

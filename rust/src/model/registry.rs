@@ -197,6 +197,30 @@ impl ModelSpec {
         out
     }
 
+    /// Parameter blocks for the native-nn LM trainer (`nn/`,
+    /// DESIGN.md §10): the layout of [`Self::blocks`] plus an **untied**
+    /// `lm_head` block (vocab×h, class `Embedding` — a vocab-dimension
+    /// block with its own (r_emb, K_emb) under §3.6).
+    ///
+    /// The byte tables read Table 5 with *tied* embeddings (the only
+    /// reading that reproduces the paper's dense Bytes/Step column), but
+    /// a tied trainer would add the head's dense softmax gradient onto
+    /// `embed_tokens` and destroy the row-sparsity the embedding
+    /// extension exists for. The nn trainer therefore unties: the input
+    /// embedding keeps genuinely token-sparse gradients while the head
+    /// carries the dense vocab-dimension gradient separately.
+    pub fn blocks_untied_lm(&self) -> Vec<BlockSpec> {
+        assert!(!self.roberta, "the nn LM trainer uses the LLaMA-style layout");
+        let mut out = self.blocks();
+        out.push(BlockSpec::mat(
+            "lm_head".into(),
+            self.vocab,
+            self.hidden,
+            LayerClass::Embedding,
+        ));
+        out
+    }
+
     pub fn param_count(&self) -> usize {
         self.blocks().iter().map(|b| b.numel()).sum()
     }
@@ -239,6 +263,21 @@ mod tests {
         // 7 matrix blocks per layer for LLaMA.
         let linear = blocks.iter().filter(|b| b.class == LayerClass::Linear).count();
         assert_eq!(linear, 7 * spec.layers);
+    }
+
+    #[test]
+    fn untied_lm_layout_adds_exactly_one_head_block() {
+        let spec = ModelSpec::proxy(64, 32, 64, 2, 2);
+        let tied = spec.blocks();
+        let untied = spec.blocks_untied_lm();
+        assert_eq!(untied.len(), tied.len() + 1);
+        let head = untied.last().unwrap();
+        assert_eq!(head.name, "lm_head");
+        assert_eq!((head.rows, head.cols), (64, 32));
+        assert_eq!(head.class, LayerClass::Embedding);
+        // Two vocab-dimension blocks now carry the §3.6 (r_emb, K_emb).
+        let emb = untied.iter().filter(|b| b.class == LayerClass::Embedding).count();
+        assert_eq!(emb, 2);
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Per-layer forward/backward primitives for the native transformer
+//! (DESIGN.md §10). Each function is pure in its tensor arguments so the
+//! gradcheck suite can probe it in isolation; backward functions
+//! *accumulate* into their output buffers (`+=`), matching how the
+//! transformer sums gradient contributions across branches.
+
+use crate::linalg::{matmul, matmul_tn, Matrix};
+
+/// RMSNorm variance floor.
+pub const RMSNORM_EPS: f32 = 1e-6;
+
+/// RMSNorm over each row of `x` (N×h) with weight `w` (1×h):
+/// `y_ij = w_j · x_ij / rms(x_i)`, `rms(x_i) = sqrt(mean_j x_ij² + ε)`.
+pub fn rmsnorm(x: &Matrix, w: &Matrix) -> Matrix {
+    assert_eq!(w.rows, 1, "rmsnorm weight must be a row vector");
+    assert_eq!(x.cols, w.cols, "rmsnorm width mismatch");
+    let h = x.cols;
+    let mut y = Matrix::zeros(x.rows, h);
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let r = inv_rms(xr);
+        let yr = y.row_mut(i);
+        for j in 0..h {
+            yr[j] = w.data[j] * xr[j] * r;
+        }
+    }
+    y
+}
+
+/// Backward of [`rmsnorm`]. With `s = mean_j x_j²`, `r = 1/sqrt(s+ε)`:
+/// `∂y_j/∂x_i = w_j·r·δ_ij − (r³/h)·w_j·x_j·x_i`, so
+/// `dx_i += r·w_i·dy_i − (r³/h)·x_i·Σ_j dy_j·w_j·x_j` and
+/// `dw_j += Σ_rows dy_j·x_j·r`. Accumulates into `dx` and `dw`.
+pub fn rmsnorm_bwd(x: &Matrix, w: &Matrix, dy: &Matrix, dx: &mut Matrix, dw: &mut Matrix) {
+    assert_eq!((x.rows, x.cols), (dy.rows, dy.cols));
+    assert_eq!((x.rows, x.cols), (dx.rows, dx.cols));
+    assert_eq!((dw.rows, dw.cols), (w.rows, w.cols));
+    let h = x.cols;
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let r = inv_rms(xr);
+        let mut dot = 0.0f32;
+        for j in 0..h {
+            dot += dyr[j] * w.data[j] * xr[j];
+        }
+        let c = r * r * r * dot / h as f32;
+        let dxr = dx.row_mut(i);
+        for j in 0..h {
+            dxr[j] += r * w.data[j] * dyr[j] - c * xr[j];
+            dw.data[j] += dyr[j] * xr[j] * r;
+        }
+    }
+}
+
+#[inline]
+fn inv_rms(row: &[f32]) -> f32 {
+    let mut ss = 0.0f32;
+    for &v in row {
+        ss += v * v;
+    }
+    1.0 / (ss / row.len() as f32 + RMSNORM_EPS).sqrt()
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// SiLU (swish): `x·σ(x)` — the SwiGLU gate nonlinearity.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+/// d silu / dx = `σ(x)·(1 + x·(1−σ(x)))`.
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = sigmoid(x);
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Single-head causal attention over one sequence: `q,k,v` are S×d,
+/// scores are `q·kᵀ/√d` masked to `j ≤ i`, rows softmaxed. Returns
+/// `(ctx = P·v, P)`; `P` (S×S) is strictly lower-triangular-plus-
+/// diagonal (zeros above the diagonal) and is the cache backward needs.
+pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> (Matrix, Matrix) {
+    let s = q.rows;
+    let d = q.cols;
+    assert_eq!((k.rows, k.cols), (s, d));
+    assert_eq!((v.rows, v.cols), (s, d));
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut probs = Matrix::zeros(s, s);
+    let mut row = vec![0.0f32; s];
+    for i in 0..s {
+        let mut maxv = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let mut dot = 0.0f32;
+            let qr = q.row(i);
+            let kr = k.row(j);
+            for t in 0..d {
+                dot += qr[t] * kr[t];
+            }
+            row[j] = dot * scale;
+            maxv = maxv.max(row[j]);
+        }
+        let mut z = 0.0f32;
+        for j in 0..=i {
+            row[j] = (row[j] - maxv).exp();
+            z += row[j];
+        }
+        let inv = 1.0 / z;
+        let pr = probs.row_mut(i);
+        for j in 0..=i {
+            pr[j] = row[j] * inv;
+        }
+    }
+    let ctx = matmul(&probs, v);
+    (ctx, probs)
+}
+
+/// Backward of [`causal_attention`] given the cached probabilities:
+/// `dv = Pᵀ·dctx`, `dP = dctx·vᵀ`,
+/// `dS_ij = P_ij·(dP_ij − Σ_t P_it·dP_it)` (softmax Jacobian, causal
+/// support only), `dq = dS·k/√d`, `dk = dSᵀ·q/√d`.
+pub fn causal_attention_bwd(
+    q: &Matrix,
+    k: &Matrix,
+    v: &Matrix,
+    probs: &Matrix,
+    dctx: &Matrix,
+) -> (Matrix, Matrix, Matrix) {
+    let s = q.rows;
+    let d = q.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    // dv = Pᵀ·dctx: matmul_tn skips P's zero upper triangle on its own
+    // (per-element zero check), so the dense call does no masked work.
+    let dv = matmul_tn(probs, dctx);
+    // dP row i is only read at j ≤ i — compute the causal triangle only.
+    let mut dp = Matrix::zeros(s, s);
+    for i in 0..s {
+        let dcr = dctx.row(i);
+        let dpr = dp.row_mut(i);
+        for j in 0..=i {
+            let vr = v.row(j);
+            let mut dot = 0.0f32;
+            for t in 0..d {
+                dot += dcr[t] * vr[t];
+            }
+            dpr[j] = dot;
+        }
+    }
+    let mut ds = Matrix::zeros(s, s);
+    for i in 0..s {
+        let pr = probs.row(i);
+        let dpr = dp.row(i);
+        let mut rowsum = 0.0f32;
+        for j in 0..=i {
+            rowsum += pr[j] * dpr[j];
+        }
+        let dsr = ds.row_mut(i);
+        for j in 0..=i {
+            dsr[j] = pr[j] * (dpr[j] - rowsum);
+        }
+    }
+    let mut dq = matmul(&ds, k);
+    dq.scale(scale);
+    let mut dk = matmul_tn(&ds, q);
+    dk.scale(scale);
+    (dq, dk, dv)
+}
+
+/// Softmax cross-entropy over each row of `logits` (N×V) against
+/// `targets` (len N). Returns the **summed** loss in f64 (the caller
+/// divides by N) and the unscaled gradient `p − onehot(target)` — the
+/// caller folds in the 1/N mean factor. Per row, loss is computed as
+/// `logsumexp(logits) − logits[target]` with the usual max shift.
+pub fn softmax_xent(logits: &Matrix, targets: &[u32]) -> (f64, Matrix) {
+    let n = logits.rows;
+    let v = logits.cols;
+    assert_eq!(targets.len(), n, "one target per logits row");
+    let mut d = Matrix::zeros(n, v);
+    let mut total = 0.0f64;
+    for i in 0..n {
+        let lr = logits.row(i);
+        let t = targets[i] as usize;
+        debug_assert!(t < v);
+        let mut maxv = f32::NEG_INFINITY;
+        for &l in lr {
+            maxv = maxv.max(l);
+        }
+        let mut z = 0.0f32;
+        let dr = d.row_mut(i);
+        for j in 0..v {
+            dr[j] = (lr[j] - maxv).exp();
+            z += dr[j];
+        }
+        let inv = 1.0 / z;
+        for item in dr.iter_mut() {
+            *item *= inv;
+        }
+        dr[t] -= 1.0;
+        total += (z as f64).ln() + maxv as f64 - lr[t] as f64;
+    }
+    (total, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn rmsnorm_rows_have_unit_rms_when_weight_is_one() {
+        let mut rng = Xoshiro256::new(1);
+        let x = Matrix::gaussian(4, 9, 2.0, &mut rng);
+        let mut w = Matrix::zeros(1, 9);
+        w.fill(1.0);
+        let y = rmsnorm(&x, &w);
+        for i in 0..4 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 9.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i}: mean square {ms}");
+        }
+    }
+
+    #[test]
+    fn attention_probs_are_causal_and_normalized() {
+        let mut rng = Xoshiro256::new(2);
+        let q = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let k = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let v = Matrix::gaussian(6, 4, 1.0, &mut rng);
+        let (ctx, p) = causal_attention(&q, &k, &v);
+        assert_eq!((ctx.rows, ctx.cols), (6, 4));
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                assert_eq!(p.at(i, j), 0.0, "({i},{j}) must be masked");
+            }
+            let row_sum: f32 = p.row(i).iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-5, "row {i} sums to {row_sum}");
+        }
+        // Position 0 can only attend to itself: ctx row 0 == v row 0.
+        for t in 0..4 {
+            assert!((ctx.at(0, t) - v.at(0, t)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_xent_matches_uniform_logits() {
+        // All-zero logits over V classes: loss = ln V per row, gradient
+        // rows are 1/V everywhere except target − 1.
+        let logits = Matrix::zeros(3, 8);
+        let (total, d) = softmax_xent(&logits, &[0, 3, 7]);
+        assert!((total / 3.0 - (8f64).ln()).abs() < 1e-6);
+        assert!((d.at(0, 1) - 1.0 / 8.0).abs() < 1e-6);
+        assert!((d.at(1, 3) - (1.0 / 8.0 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn silu_grad_matches_finite_difference() {
+        for &x in &[-3.0f32, -0.7, 0.0, 0.4, 2.5] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((fd - silu_grad(x)).abs() < 1e-3, "x={x}");
+        }
+    }
+}

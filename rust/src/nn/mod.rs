@@ -1,0 +1,38 @@
+//! Native pure-Rust transformer LM with hand-written backprop
+//! (DESIGN.md §10).
+//!
+//! Until this module existed, every runnable loss curve in the repo came
+//! from the synthetic quadratic objective — the PJRT path is a vendored
+//! stub, so no optimizer had ever seen a *real* transformer gradient,
+//! and the TSR embedding extension (`rank_emb`/`refresh_emb`, §3.6) had
+//! never been exercised by genuinely token-sparse gradients. This module
+//! closes that gap: a small decoder-only transformer over the existing
+//! [`crate::linalg::Matrix`] type with manual forward + backward,
+//! trained on the [`crate::data::SyntheticCorpus`] through
+//! [`crate::train::lm_source::LmSource`].
+//!
+//! Layer inventory (shapes follow the Table-5 registry exactly, plus an
+//! untied LM head — [`crate::model::ModelSpec::blocks_untied_lm`]):
+//!
+//! * token embedding (V×h, class `Embedding`) — backward emits a
+//!   **row-sparse** gradient: only batch-touched rows are nonzero;
+//! * per layer: RMSNorm → multi-head causal attention (RoPE-free,
+//!   q/k/v/o all h×h) → residual → RMSNorm → SwiGLU MLP (gate/up h×f,
+//!   down f×h) → residual;
+//! * final RMSNorm, untied LM head (V×h, class `Embedding`) with
+//!   softmax cross-entropy.
+//!
+//! Every backward is hand-derived ([`layers`] holds the per-layer
+//! primitives); `tests/nn_gradcheck.rs` verifies each against central
+//! finite differences and checks bitwise determinism across repeated
+//! runs and both execution backends. Determinism comes for free from
+//! fixed reduction orders: the matmul kernels partition output rows
+//! (each row's k-loop runs in one fixed order regardless of thread
+//! count), and every softmax / norm / loss accumulation here is a plain
+//! in-order loop.
+
+pub mod layers;
+pub mod transformer;
+
+pub use layers::{causal_attention, causal_attention_bwd, rmsnorm, rmsnorm_bwd, softmax_xent};
+pub use transformer::TransformerLm;

@@ -1,0 +1,405 @@
+//! Decoder-only transformer LM over [`Matrix`] with manual backprop
+//! (DESIGN.md §10).
+//!
+//! Pre-norm residual architecture on the registry's LLaMA-style block
+//! layout with an **untied** LM head
+//! ([`ModelSpec::blocks_untied_lm`]):
+//!
+//! ```text
+//! x⁰ = E[tokens]                                  (row gather, V×h embed)
+//! for each layer: h¹ = x + Attn(RMSNorm₁(x))      (causal, multi-head)
+//!                 x  = h¹ + SwiGLU(RMSNorm₂(h¹))
+//! logits = RMSNormF(x) · Hᵀ                       (H: V×h untied head)
+//! loss   = mean softmax-CE over all B·S positions
+//! ```
+//!
+//! The embedding gradient is the defining output: `dE[t] += Σ_{p: input
+//! token at p is t} dx⁰[p]` — **only batch-touched rows are nonzero**,
+//! which is what finally exercises the paper's §3.6 embedding extension
+//! with real token sparsity. The untied head receives the dense softmax
+//! gradient `dH = dlogitsᵀ · xnf`; tying it to `E` would destroy the
+//! row-sparsity, which is why the nn trainer unties.
+
+use super::layers::{
+    causal_attention, causal_attention_bwd, rmsnorm, rmsnorm_bwd, silu, silu_grad, softmax_xent,
+};
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::model::{BlockSpec, ModelSpec};
+use crate::train::pjrt_source::init_block;
+use crate::util::rng::Xoshiro256;
+
+/// Per-layer block indices into the parameter list (resolved by name so
+/// a registry reordering fails loudly at construction, not silently).
+struct LayerIdx {
+    q: usize,
+    k: usize,
+    v: usize,
+    o: usize,
+    gate: usize,
+    up: usize,
+    down: usize,
+    attn_norm: usize,
+    mlp_norm: usize,
+}
+
+/// Forward cache for one layer — everything backward re-reads.
+struct LayerCache {
+    x_in: Matrix,
+    xn1: Matrix,
+    q: Matrix,
+    k: Matrix,
+    v: Matrix,
+    /// Attention probabilities per (batch, head): index `b·heads + j`.
+    probs: Vec<Matrix>,
+    /// Concatenated head outputs, pre-o-projection.
+    ctx: Matrix,
+    h1: Matrix,
+    xn2: Matrix,
+    g_pre: Matrix,
+    u_pre: Matrix,
+    act: Matrix,
+}
+
+struct Cache {
+    inputs: Vec<u32>,
+    layers: Vec<LayerCache>,
+    x_last: Matrix,
+    xnf: Matrix,
+    /// `(softmax − onehot)/N` — loss gradient wrt logits, mean-scaled.
+    dlogits: Matrix,
+}
+
+pub struct TransformerLm {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub inter: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    blocks: Vec<BlockSpec>,
+    embed: usize,
+    final_norm: usize,
+    head: usize,
+    layers: Vec<LayerIdx>,
+}
+
+impl TransformerLm {
+    pub fn new(spec: &ModelSpec) -> Self {
+        assert!(!spec.roberta, "nn trainer implements the LLaMA-style layout only");
+        assert_eq!(
+            spec.hidden % spec.heads,
+            0,
+            "hidden {} must divide into {} heads",
+            spec.hidden,
+            spec.heads
+        );
+        let blocks = spec.blocks_untied_lm();
+        let find = |name: &str| {
+            blocks
+                .iter()
+                .position(|b| b.name == name)
+                .unwrap_or_else(|| panic!("registry layout is missing block `{name}`"))
+        };
+        let layers = (0..spec.layers)
+            .map(|l| LayerIdx {
+                q: find(&format!("layers.{l}.attn.q_proj")),
+                k: find(&format!("layers.{l}.attn.k_proj")),
+                v: find(&format!("layers.{l}.attn.v_proj")),
+                o: find(&format!("layers.{l}.attn.o_proj")),
+                gate: find(&format!("layers.{l}.mlp.gate")),
+                up: find(&format!("layers.{l}.mlp.up")),
+                down: find(&format!("layers.{l}.mlp.down")),
+                attn_norm: find(&format!("layers.{l}.attn_norm")),
+                mlp_norm: find(&format!("layers.{l}.mlp_norm")),
+            })
+            .collect();
+        Self {
+            vocab: spec.vocab,
+            hidden: spec.hidden,
+            inter: spec.intermediate,
+            heads: spec.heads,
+            head_dim: spec.hidden / spec.heads,
+            embed: find("embed_tokens"),
+            final_norm: find("final_norm"),
+            head: find("lm_head"),
+            layers,
+            blocks,
+        }
+    }
+
+    pub fn blocks(&self) -> &[BlockSpec] {
+        &self.blocks
+    }
+
+    /// Standard transformer init over the block layout (norms → 1,
+    /// embedding/head → N(0, 0.02), linear → N(0, 1/√fan_in)).
+    pub fn init_params(&self, seed: u64) -> Vec<Matrix> {
+        let mut rng = Xoshiro256::new(seed);
+        self.blocks.iter().map(|b| init_block(b, &mut rng)).collect()
+    }
+
+    /// Split a flat `[batch, seq+1]` token block (the [`crate::data::
+    /// Batcher`] layout) into next-token (input, target) pairs.
+    fn split_tokens(&self, tokens: &[u32], batch: usize) -> (Vec<u32>, Vec<u32>, usize) {
+        assert!(batch > 0 && tokens.len() % batch == 0, "token block shape mismatch");
+        let bs1 = tokens.len() / batch;
+        assert!(bs1 >= 2, "need at least one (input, target) pair per sequence");
+        let seq = bs1 - 1;
+        let mut inputs = Vec::with_capacity(batch * seq);
+        let mut targets = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            let row = &tokens[b * bs1..(b + 1) * bs1];
+            inputs.extend_from_slice(&row[..seq]);
+            targets.extend_from_slice(&row[1..]);
+        }
+        (inputs, targets, seq)
+    }
+
+    /// Mean next-token cross-entropy (nats) — forward only. f64 so the
+    /// gradcheck's finite differences are not limited by the scalar.
+    pub fn loss(&self, params: &[Matrix], tokens: &[u32], batch: usize) -> f64 {
+        self.forward(params, tokens, batch).0
+    }
+
+    fn forward(&self, params: &[Matrix], tokens: &[u32], batch: usize) -> (f64, Cache) {
+        let (inputs, targets, seq) = self.split_tokens(tokens, batch);
+        let n = inputs.len();
+        let h = self.hidden;
+        let hd = self.head_dim;
+
+        let mut x = Matrix::zeros(n, h);
+        for (p, &t) in inputs.iter().enumerate() {
+            debug_assert!((t as usize) < self.vocab);
+            x.row_mut(p).copy_from_slice(params[self.embed].row(t as usize));
+        }
+
+        let mut layer_caches = Vec::with_capacity(self.layers.len());
+        for li in &self.layers {
+            let x_in = x;
+            let xn1 = rmsnorm(&x_in, &params[li.attn_norm]);
+            let q = matmul(&xn1, &params[li.q]);
+            let k = matmul(&xn1, &params[li.k]);
+            let v = matmul(&xn1, &params[li.v]);
+            let mut ctx = Matrix::zeros(n, h);
+            let mut probs = Vec::with_capacity(batch * self.heads);
+            for b in 0..batch {
+                for j in 0..self.heads {
+                    let qs = gather_head(&q, b, seq, j, hd);
+                    let ks = gather_head(&k, b, seq, j, hd);
+                    let vs = gather_head(&v, b, seq, j, hd);
+                    let (c, p) = causal_attention(&qs, &ks, &vs);
+                    scatter_head(&mut ctx, &c, b, seq, j, hd);
+                    probs.push(p);
+                }
+            }
+            let attn_out = matmul(&ctx, &params[li.o]);
+            let mut h1 = x_in.clone();
+            h1.add_assign(&attn_out);
+            let xn2 = rmsnorm(&h1, &params[li.mlp_norm]);
+            let g_pre = matmul(&xn2, &params[li.gate]);
+            let u_pre = matmul(&xn2, &params[li.up]);
+            let mut act = Matrix::zeros(n, self.inter);
+            for i in 0..act.data.len() {
+                act.data[i] = silu(g_pre.data[i]) * u_pre.data[i];
+            }
+            let mlp_out = matmul(&act, &params[li.down]);
+            let mut x_out = h1.clone();
+            x_out.add_assign(&mlp_out);
+            layer_caches.push(LayerCache {
+                x_in,
+                xn1,
+                q,
+                k,
+                v,
+                probs,
+                ctx,
+                h1,
+                xn2,
+                g_pre,
+                u_pre,
+                act,
+            });
+            x = x_out;
+        }
+
+        let x_last = x;
+        let xnf = rmsnorm(&x_last, &params[self.final_norm]);
+        let logits = matmul_nt(&xnf, &params[self.head]);
+        let (loss_sum, mut dlogits) = softmax_xent(&logits, &targets);
+        dlogits.scale(1.0 / n as f32);
+        (
+            loss_sum / n as f64,
+            Cache {
+                inputs,
+                layers: layer_caches,
+                x_last,
+                xnf,
+                dlogits,
+            },
+        )
+    }
+
+    /// One fwd+bwd pass over a flat `[batch, seq+1]` token block,
+    /// writing per-block gradients into `grads` (zeroed here; ordered
+    /// like [`Self::blocks`]). Returns the mean token loss.
+    pub fn step_into(
+        &self,
+        params: &[Matrix],
+        tokens: &[u32],
+        batch: usize,
+        grads: &mut [Matrix],
+    ) -> f32 {
+        assert_eq!(grads.len(), self.blocks.len(), "one gradient buffer per block");
+        for g in grads.iter_mut() {
+            g.fill(0.0);
+        }
+        let (loss, cache) = self.forward(params, tokens, batch);
+        let n = cache.inputs.len();
+        let seq = n / batch;
+        let hd = self.head_dim;
+
+        // Untied head + final norm.
+        grads[self.head].add_assign(&matmul_tn(&cache.dlogits, &cache.xnf));
+        let dxnf = matmul(&cache.dlogits, &params[self.head]);
+        let mut dx = Matrix::zeros(n, self.hidden);
+        rmsnorm_bwd(
+            &cache.x_last,
+            &params[self.final_norm],
+            &dxnf,
+            &mut dx,
+            &mut grads[self.final_norm],
+        );
+
+        for (li, lc) in self.layers.iter().zip(&cache.layers).rev() {
+            // MLP branch of x_out = h1 + down(silu(gate(xn2)) ⊙ up(xn2)).
+            let da = matmul_nt(&dx, &params[li.down]);
+            grads[li.down].add_assign(&matmul_tn(&lc.act, &dx));
+            let mut dg = Matrix::zeros(n, self.inter);
+            let mut du = Matrix::zeros(n, self.inter);
+            for i in 0..dg.data.len() {
+                let gp = lc.g_pre.data[i];
+                dg.data[i] = da.data[i] * lc.u_pre.data[i] * silu_grad(gp);
+                du.data[i] = da.data[i] * silu(gp);
+            }
+            grads[li.gate].add_assign(&matmul_tn(&lc.xn2, &dg));
+            grads[li.up].add_assign(&matmul_tn(&lc.xn2, &du));
+            let mut dxn2 = matmul_nt(&dg, &params[li.gate]);
+            dxn2.add_assign(&matmul_nt(&du, &params[li.up]));
+            // Residual: dh1 = dx (pass-through) + norm₂ backprop.
+            let mut dh1 = dx;
+            rmsnorm_bwd(&lc.h1, &params[li.mlp_norm], &dxn2, &mut dh1, &mut grads[li.mlp_norm]);
+
+            // Attention branch of h1 = x_in + o(attn(xn1)).
+            grads[li.o].add_assign(&matmul_tn(&lc.ctx, &dh1));
+            let dctx = matmul_nt(&dh1, &params[li.o]);
+            let mut dq_all = Matrix::zeros(n, self.hidden);
+            let mut dk_all = Matrix::zeros(n, self.hidden);
+            let mut dv_all = Matrix::zeros(n, self.hidden);
+            for b in 0..batch {
+                for j in 0..self.heads {
+                    let qs = gather_head(&lc.q, b, seq, j, hd);
+                    let ks = gather_head(&lc.k, b, seq, j, hd);
+                    let vs = gather_head(&lc.v, b, seq, j, hd);
+                    let dctx_s = gather_head(&dctx, b, seq, j, hd);
+                    let p = &lc.probs[b * self.heads + j];
+                    let (dqs, dks, dvs) = causal_attention_bwd(&qs, &ks, &vs, p, &dctx_s);
+                    scatter_head(&mut dq_all, &dqs, b, seq, j, hd);
+                    scatter_head(&mut dk_all, &dks, b, seq, j, hd);
+                    scatter_head(&mut dv_all, &dvs, b, seq, j, hd);
+                }
+            }
+            grads[li.q].add_assign(&matmul_tn(&lc.xn1, &dq_all));
+            grads[li.k].add_assign(&matmul_tn(&lc.xn1, &dk_all));
+            grads[li.v].add_assign(&matmul_tn(&lc.xn1, &dv_all));
+            let mut dxn1 = matmul_nt(&dq_all, &params[li.q]);
+            dxn1.add_assign(&matmul_nt(&dk_all, &params[li.k]));
+            dxn1.add_assign(&matmul_nt(&dv_all, &params[li.v]));
+            let mut dx_in = dh1;
+            let dw_n1 = &mut grads[li.attn_norm];
+            rmsnorm_bwd(&lc.x_in, &params[li.attn_norm], &dxn1, &mut dx_in, dw_n1);
+            dx = dx_in;
+        }
+
+        // Row-sparse embedding gradient: only batch-touched rows receive
+        // mass (position order — a fixed f32 accumulation order).
+        let ge = &mut grads[self.embed];
+        for (p, &t) in cache.inputs.iter().enumerate() {
+            let src = dx.row(p);
+            let dst = ge.row_mut(t as usize);
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+        loss as f32
+    }
+}
+
+/// Copy one attention head's S×hd slice out of the packed N×h matrix.
+fn gather_head(x: &Matrix, b: usize, seq: usize, j: usize, hd: usize) -> Matrix {
+    let mut out = Matrix::zeros(seq, hd);
+    for t in 0..seq {
+        out.row_mut(t)
+            .copy_from_slice(&x.row(b * seq + t)[j * hd..(j + 1) * hd]);
+    }
+    out
+}
+
+/// Write one head's S×hd slice back into the packed N×h matrix. Each
+/// (b, j) pair owns a disjoint row/column range, so plain overwrite.
+fn scatter_head(dst: &mut Matrix, src: &Matrix, b: usize, seq: usize, j: usize, hd: usize) {
+    for t in 0..seq {
+        dst.row_mut(b * seq + t)[j * hd..(j + 1) * hd].copy_from_slice(src.row(t));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (TransformerLm, Vec<Matrix>, Vec<u32>) {
+        let spec = ModelSpec::proxy(12, 8, 12, 2, 2);
+        let lm = TransformerLm::new(&spec);
+        let params = lm.init_params(3);
+        let mut rng = Xoshiro256::new(7);
+        let tokens: Vec<u32> = (0..2 * 6).map(|_| rng.next_below(12) as u32).collect();
+        (lm, params, tokens)
+    }
+
+    #[test]
+    fn layout_resolves_and_head_is_untied() {
+        let (lm, params, _) = tiny();
+        assert_ne!(lm.embed, lm.head);
+        assert_eq!(params[lm.embed].rows, 12);
+        assert_eq!(params[lm.head].rows, 12);
+        assert_eq!(params[lm.head].cols, 8);
+        assert_eq!(lm.layers.len(), 2);
+    }
+
+    #[test]
+    fn initial_loss_is_near_ln_vocab() {
+        // With 0.02-scale embeddings/head, logits start near zero and
+        // the softmax is near-uniform: loss ≈ ln V.
+        let (lm, params, tokens) = tiny();
+        let loss = lm.loss(&params, &tokens, 2);
+        let lnv = (12f64).ln();
+        assert!(
+            (loss - lnv).abs() < 0.3 * lnv,
+            "initial loss {loss} vs ln(12) = {lnv}"
+        );
+    }
+
+    #[test]
+    fn step_into_returns_forward_loss_and_finite_grads() {
+        let (lm, params, tokens) = tiny();
+        let mut grads: Vec<Matrix> = lm
+            .blocks()
+            .iter()
+            .map(|b| Matrix::zeros(b.rows, b.cols))
+            .collect();
+        let loss = lm.step_into(&params, &tokens, 2, &mut grads);
+        assert!((loss as f64 - lm.loss(&params, &tokens, 2)).abs() < 1e-6);
+        for (g, b) in grads.iter().zip(lm.blocks()) {
+            assert!(g.data.iter().all(|v| v.is_finite()), "{}", b.name);
+            assert!(g.frob_norm() > 0.0, "{} gradient is identically zero", b.name);
+        }
+    }
+}

@@ -134,35 +134,13 @@ impl GradSource for QuadraticSim {
     /// draw bit-for-bit.
     fn save_state(&self) -> crate::util::json::Json {
         use crate::checkpoint::codec;
-        use crate::util::json::Json;
         let (s, spare) = self.rng.snapshot();
-        Json::obj(vec![
-            ("rng_s", Json::arr(s.iter().map(|&w| codec::u64_to_json(w)).collect())),
-            (
-                "rng_spare",
-                match spare {
-                    Some(g) => codec::f64_to_json(g),
-                    None => Json::Null,
-                },
-            ),
-        ])
+        codec::rng_to_json(&s, spare)
     }
 
     fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
         use crate::checkpoint::codec;
-        use crate::util::json::Json;
-        let words = state.get("rng_s").as_arr().ok_or("quad-sim: missing rng_s")?;
-        if words.len() != 4 {
-            return Err(format!("quad-sim: rng_s has {} words, expected 4", words.len()));
-        }
-        let mut s = [0u64; 4];
-        for (i, w) in words.iter().enumerate() {
-            s[i] = codec::u64_from_json(w, &format!("quad-sim.rng_s[{i}]"))?;
-        }
-        let spare = match state.get("rng_spare") {
-            Json::Null => None,
-            other => Some(codec::f64_from_json(other, "quad-sim.rng_spare")?),
-        };
+        let (s, spare) = codec::rng_from_json(state, "quad-sim")?;
         self.rng = Xoshiro256::from_snapshot(s, spare);
         Ok(())
     }

@@ -1,0 +1,209 @@
+//! Gradient source backed by the native pure-Rust transformer LM
+//! (`nn/`, DESIGN.md §10): each simulated worker runs one manual
+//! fwd+bwd pass per step on its own deterministic shard of the
+//! synthetic corpus — the first runnable path in the repo whose loss
+//! curves come from a *real* transformer, and the first to feed the
+//! optimizers genuinely row-sparse embedding gradients.
+
+use super::GradSource;
+use crate::data::{Batcher, SyntheticCorpus};
+use crate::linalg::Matrix;
+use crate::model::{BlockSpec, ModelSpec};
+use crate::nn::TransformerLm;
+use crate::util::json::Json;
+
+pub struct LmSource {
+    model: TransformerLm,
+    batcher: Batcher,
+}
+
+impl LmSource {
+    /// Build the LM and its per-worker data sharding. `seed` fixes both
+    /// the corpus structure and (xored with a stream constant) the
+    /// batcher streams, so two sources constructed with the same
+    /// arguments replay identical token blocks.
+    pub fn new(spec: &ModelSpec, workers: usize, batch: usize, seq: usize, seed: u64) -> Self {
+        let corpus = SyntheticCorpus::new(spec.vocab, seed);
+        let batcher = Batcher::new(corpus, workers, batch, seq, seed ^ 0xDA7A);
+        Self {
+            model: TransformerLm::new(spec),
+            batcher,
+        }
+    }
+
+    /// The 64-vocab / 2-layer model at the `--source lm` CLI defaults
+    /// (batch 4), used by unit tests and the `lm_step` bench. The
+    /// quality acceptance run (`tests/lm_train.rs`) uses the same model
+    /// via `exp::lm_curves::LmCurvesCfg` at batch 8 × 4 workers.
+    pub fn small(workers: usize, seed: u64) -> Self {
+        Self::new(&ModelSpec::proxy(64, 32, 64, 2, 2), workers, 4, 16, seed)
+    }
+
+    pub fn model(&self) -> &TransformerLm {
+        &self.model
+    }
+}
+
+impl GradSource for LmSource {
+    fn blocks(&self) -> &[BlockSpec] {
+        self.model.blocks()
+    }
+
+    fn workers(&self) -> usize {
+        self.batcher.workers()
+    }
+
+    fn compute(&mut self, params: &[Matrix], _step: usize, grads: &mut [Vec<Matrix>]) -> f32 {
+        let workers = self.batcher.workers();
+        let batch = self.batcher.batch;
+        let mut sum = 0.0f64;
+        // Fixed worker order: the loss mean and every stream advance are
+        // identical across runs and execution backends.
+        for w in 0..workers {
+            let tokens = self.batcher.next_block(w);
+            sum += self.model.step_into(params, &tokens, batch, &mut grads[w]) as f64;
+        }
+        (sum / workers as f64) as f32
+    }
+
+    fn init_params(&self, seed: u64) -> Vec<Matrix> {
+        self.model.init_params(seed)
+    }
+
+    /// The only mutable state is the batcher: the model is a pure
+    /// function of the spec and the corpus a pure function of
+    /// (vocab, seed), so a resumed source only needs the per-worker
+    /// stream positions to reproduce every remaining token block
+    /// bit-for-bit (DESIGN.md §9).
+    fn save_state(&self) -> Json {
+        use crate::checkpoint::codec;
+        let streams = self
+            .batcher
+            .snapshot_streams()
+            .iter()
+            .map(|(s, spare, prev)| {
+                let mut o = codec::rng_to_json(s, *spare);
+                o.set("prev", Json::num(*prev as f64));
+                o
+            })
+            .collect();
+        Json::obj(vec![("streams", Json::Arr(streams))])
+    }
+
+    fn load_state(&mut self, state: &Json) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let arr = state.get("streams").as_arr().ok_or("lm-source: missing streams")?;
+        if arr.len() != self.batcher.workers() {
+            return Err(format!(
+                "lm-source: checkpoint has {} data streams but this run has {} workers \
+                 (elastic resume is not supported for --source lm: per-worker token \
+                 streams cannot be re-sharded)",
+                arr.len(),
+                self.batcher.workers()
+            ));
+        }
+        let mut states = Vec::with_capacity(arr.len());
+        for (i, s) in arr.iter().enumerate() {
+            let (w4, spare) = codec::rng_from_json(s, &format!("lm-source.streams[{i}]"))?;
+            let prev = s
+                .get("prev")
+                .as_u64()
+                .ok_or_else(|| format!("lm-source.streams[{i}]: missing prev"))?
+                as u32;
+            states.push((w4, spare, prev));
+        }
+        self.batcher.restore_streams(&states)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::LayerClass;
+    use crate::optim::alloc_worker_grads;
+
+    fn tiny() -> LmSource {
+        LmSource::new(&ModelSpec::proxy(16, 8, 12, 2, 1), 2, 2, 6, 11)
+    }
+
+    #[test]
+    fn compute_is_deterministic_across_constructions() {
+        let mut a = tiny();
+        let mut b = tiny();
+        let params = a.init_params(3);
+        let blocks = a.blocks().to_vec();
+        let mut ga = alloc_worker_grads(&blocks, 2);
+        let mut gb = alloc_worker_grads(&blocks, 2);
+        for step in 0..3 {
+            let la = a.compute(&params, step, &mut ga);
+            let lb = b.compute(&params, step, &mut gb);
+            assert_eq!(la.to_bits(), lb.to_bits(), "step {step}");
+            for w in 0..2 {
+                for (x, y) in ga[w].iter().zip(&gb[w]) {
+                    for (p, q) in x.data.iter().zip(&y.data) {
+                        assert_eq!(p.to_bits(), q.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn embedding_gradient_is_row_sparse_head_is_dense() {
+        let mut src = tiny();
+        let params = src.init_params(4);
+        let blocks = src.blocks().to_vec();
+        let mut grads = alloc_worker_grads(&blocks, 2);
+        src.compute(&params, 0, &mut grads);
+        let embed_idx = blocks.iter().position(|b| b.name == "embed_tokens").unwrap();
+        let head_idx = blocks.iter().position(|b| b.name == "lm_head").unwrap();
+        assert_eq!(blocks[embed_idx].class, LayerClass::Embedding);
+        let ge = &grads[0][embed_idx];
+        let touched = (0..ge.rows)
+            .filter(|&i| ge.row(i).iter().any(|&v| v != 0.0))
+            .count();
+        // Worker 0 saw batch·seq = 12 input positions → ≤ 12 distinct rows.
+        assert!(touched <= 12, "{touched} embedding rows touched");
+        assert!(touched > 0);
+        // The untied head carries the dense softmax gradient instead.
+        let gh = &grads[0][head_idx];
+        let head_rows = (0..gh.rows)
+            .filter(|&i| gh.row(i).iter().any(|&v| v != 0.0))
+            .count();
+        assert!(head_rows > touched, "head rows {head_rows} vs embed rows {touched}");
+    }
+
+    #[test]
+    fn save_load_state_resumes_the_token_streams_exactly() {
+        let mut src = tiny();
+        let params = src.init_params(5);
+        let blocks = src.blocks().to_vec();
+        let mut grads = alloc_worker_grads(&blocks, 2);
+        src.compute(&params, 0, &mut grads);
+        src.compute(&params, 1, &mut grads);
+        let state = Json::parse(&src.save_state().to_string_pretty()).unwrap();
+        let expect = src.compute(&params, 2, &mut grads);
+
+        let mut resumed = tiny();
+        resumed.load_state(&state).unwrap();
+        let mut grads2 = alloc_worker_grads(&blocks, 2);
+        let got = resumed.compute(&params, 2, &mut grads2);
+        assert_eq!(expect.to_bits(), got.to_bits());
+        for w in 0..2 {
+            for (x, y) in grads[w].iter().zip(&grads2[w]) {
+                for (p, q) in x.data.iter().zip(&y.data) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_worker_mismatch() {
+        let src = tiny();
+        let state = src.save_state();
+        let mut three = LmSource::new(&ModelSpec::proxy(16, 8, 12, 2, 1), 3, 2, 6, 11);
+        let err = three.load_state(&state).unwrap_err();
+        assert!(err.contains("elastic"), "{err}");
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod finetune;
 pub mod gradsim;
+pub mod lm_source;
 pub mod pjrt_source;
 
 use crate::checkpoint::Checkpoint;

@@ -17,6 +17,7 @@ use tsr::model::ModelSpec;
 use tsr::optim::onesided::OneSidedRefresh;
 use tsr::optim::{AdamHyper, DistOptimizer, LrSchedule, TsrConfig};
 use tsr::train::gradsim::QuadraticSim;
+use tsr::train::lm_source::LmSource;
 use tsr::train::{GradSource, Trainer};
 use tsr::util::json::Json;
 
@@ -121,6 +122,94 @@ fn resumed_run_is_byte_identical_to_uninterrupted_for_every_method() {
                 full,
                 resumed,
                 "{}: resume at step {cut} diverged from the uninterrupted run",
+                m.label()
+            );
+        }
+    }
+}
+
+// ---------- native-LM source (--source lm) ----------
+
+fn fresh_lm_setup(m: &MethodCfg) -> (LmSource, Box<dyn DistOptimizer>, Vec<Matrix>) {
+    let spec = ModelSpec::proxy(32, 16, 24, 2, 2);
+    let src = LmSource::new(&spec, WORKERS, 2, 8, 21);
+    let blocks = src.blocks().to_vec();
+    let opt = m.build(&blocks, AdamHyper::default(), WORKERS);
+    let params = src.init_params(4);
+    (src, opt, params)
+}
+
+fn run_lm_uninterrupted(m: &MethodCfg, steps: usize) -> String {
+    let (mut src, mut opt, mut params) = fresh_lm_setup(m);
+    let (metrics, ledger) = trainer(steps).run(&mut src, opt.as_mut(), &mut params, steps);
+    metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+}
+
+fn run_lm_interrupted(m: &MethodCfg, cut: usize, steps: usize) -> String {
+    let (mut src, mut opt, mut params) = fresh_lm_setup(m);
+    let (metrics, ledger) = trainer(steps).run(&mut src, opt.as_mut(), &mut params, cut);
+    let ck = Checkpoint::capture(
+        cut as u64,
+        WORKERS,
+        &params,
+        opt.as_ref(),
+        &src,
+        &metrics,
+        &ledger,
+        Json::Null,
+    );
+    let text = ck.to_json().to_string_pretty();
+    drop((src, opt, params, metrics, ledger));
+
+    let ck = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let (mut src, mut opt, _) = fresh_lm_setup(m);
+    opt.load_state(&ck.opt_state, WORKERS).unwrap();
+    src.load_state(&ck.source_state).unwrap();
+    let mut params = ck.params.clone();
+    let metrics = RunMetrics::state_from_json(&ck.metrics).unwrap();
+    let ledger = CommLedger::from_json(&ck.ledger).unwrap();
+    let (metrics, ledger) = trainer(steps).run_from(
+        &mut src,
+        opt.as_mut(),
+        &mut params,
+        cut,
+        steps,
+        metrics,
+        ledger,
+    );
+    metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+}
+
+/// `--source lm` leg of the bitwise-resume contract: the LM source's
+/// state is its per-worker token-stream positions; killed mid-period
+/// (cut 3, k=4) or at a boundary (cut 8) and resumed through a full
+/// JSON text round trip must be byte-identical to the uninterrupted
+/// run — for the dense baseline, for TSR (whose refresh cadence must
+/// restart mid-period correctly), and for an error-feedback method.
+#[test]
+fn lm_resumed_run_is_byte_identical_to_uninterrupted() {
+    let k = 4;
+    let methods = vec![
+        MethodCfg::Adam,
+        MethodCfg::Tsr(TsrConfig {
+            rank: 6,
+            rank_emb: 4,
+            refresh_every: k,
+            refresh_emb: k,
+            oversample: 3,
+            ..Default::default()
+        }),
+        MethodCfg::TopK { keep_frac: 0.05 },
+    ];
+    let steps = 11;
+    for m in methods {
+        let full = run_lm_uninterrupted(&m, steps);
+        for cut in [3usize, 8] {
+            let resumed = run_lm_interrupted(&m, cut, steps);
+            assert_eq!(
+                full,
+                resumed,
+                "{} (lm source): resume at step {cut} diverged from the uninterrupted run",
                 m.label()
             );
         }
