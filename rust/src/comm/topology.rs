@@ -90,6 +90,29 @@ impl Topology {
         volume / bw + steps as f64 * lat
     }
 
+    /// Channel-perturbed copy: per-link bandwidths *divided* and
+    /// latencies *multiplied* by the given factors (all ≥ 1 for the
+    /// adversarial jitter model in `sim::adversity`). Factors of
+    /// exactly `1.0` are bit-preserving — `x / 1.0` and `x * 1.0` are
+    /// IEEE identities — which is what keeps the clean path of the
+    /// adversity-aware engine byte-identical to the plain one.
+    pub fn perturb_channels(
+        &self,
+        intra_bw_div: f64,
+        inter_bw_div: f64,
+        intra_lat_mult: f64,
+        inter_lat_mult: f64,
+    ) -> Self {
+        Self {
+            nodes: self.nodes,
+            gpus_per_node: self.gpus_per_node,
+            intra_bw: self.intra_bw / intra_bw_div,
+            inter_bw: self.inter_bw / inter_bw_div,
+            intra_lat: self.intra_lat * intra_lat_mult,
+            inter_lat: self.inter_lat * inter_lat_mult,
+        }
+    }
+
     /// Broadcast time (tree): ceil(log2 N) hops of the full payload.
     pub fn broadcast_time(&self, bytes: usize) -> f64 {
         let n = self.workers();

@@ -6,6 +6,7 @@ pub mod figures;
 pub mod lm_curves;
 pub mod runs;
 pub mod simtime;
+pub mod soak;
 pub mod tables;
 pub mod theory;
 

@@ -24,7 +24,7 @@ use crate::exp::MethodCfg;
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::onesided::OneSidedRefresh;
 use crate::optim::{AdamHyper, SyncPlan, TsrConfig};
-use crate::sim::{simulate_plans, MethodTimeline, SimCfg};
+use crate::sim::{simulate_plans_adv, Adversity, MethodTimeline, SimCfg};
 use crate::util::bench::{fmt_bytes, fmt_time};
 use crate::util::json::Json;
 
@@ -74,7 +74,8 @@ pub fn method_plans(blocks: &[BlockSpec], method: &MethodCfg, steps: usize) -> V
     (0..steps.max(1)).map(|t| opt.sync_plan(t as u64)).collect()
 }
 
-fn timeline_json(label: &str, tl: &MethodTimeline) -> Json {
+/// One method's timeline row (shared with `exp::soak`).
+pub fn timeline_json(label: &str, tl: &MethodTimeline) -> Json {
     Json::obj(vec![
         ("method", Json::str(label)),
         ("step_secs", Json::num(tl.avg_step_secs)),
@@ -84,13 +85,16 @@ fn timeline_json(label: &str, tl: &MethodTimeline) -> Json {
         ("peak_step_secs", Json::num(tl.peak_step_secs)),
         ("overlap_frac", Json::num(tl.overlap_frac)),
         ("payload_bytes_per_step", Json::num(tl.avg_payload_bytes)),
+        ("straggler_idle_secs", Json::num(tl.avg_straggler_idle_secs)),
     ])
 }
 
-/// The full experiment: all seven methods × the three cluster shapes.
-/// The per-method (plan extraction + three-topology simulation) cells
-/// are independent, so the threaded backend fans them out over OS
-/// threads; results are collected in roster order either way.
+/// The full experiment: all seven methods × the three cluster shapes,
+/// under an [`Adversity`] model (`Adversity::clean` for the nominal
+/// figure — bitwise-identical to the pre-adversity output). The
+/// per-method (plan extraction + three-topology simulation) cells are
+/// independent, so the threaded backend fans them out over OS threads;
+/// results are collected in roster order either way.
 pub fn simtime(
     scale: &str,
     nodes: usize,
@@ -98,6 +102,7 @@ pub fn simtime(
     steps: usize,
     cfg: &SimCfg,
     exec: &crate::exec::ExecBackend,
+    adv: &Adversity,
 ) -> Json {
     let spec = ModelSpec::by_name(scale).expect("unknown scale (60m|130m|350m|1b|roberta)");
     let topos = [
@@ -113,6 +118,16 @@ pub fn simtime(
         fmt_bytes(cfg.bucket_bytes as f64),
         if cfg.overlap { "overlap" } else { "no overlap" },
     );
+    if !adv.is_clean() {
+        let jitter = match &adv.jitter {
+            Some(j) => format!("amp {} seed {}", j.amp, j.seed),
+            None => "off".into(),
+        };
+        println!(
+            "  adversity: straggler pace {:.2}x, jitter {jitter}",
+            adv.straggler.pace()
+        );
+    }
     // One optimizer build per method (state is model-scale); the
     // extracted schedules are reused across all three topologies.
     let blocks = spec.blocks();
@@ -122,7 +137,7 @@ pub fn simtime(
         let plans = method_plans(&blocks, m, steps);
         let tls = topos
             .iter()
-            .map(|(_, topo)| simulate_plans(&plans, &blocks, topo, cfg))
+            .map(|(_, topo)| simulate_plans_adv(&plans, &blocks, topo, cfg, adv))
             .collect();
         (m.label(), tls)
     });
@@ -169,6 +184,7 @@ pub fn simtime(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::simulate_plans;
 
     #[test]
     fn roster_has_seven_methods() {

@@ -1,0 +1,329 @@
+//! `tsr soak` — the resilience sweep (DESIGN.md §11).
+//!
+//! Sweeps worker counts × cluster shapes × adversity scenarios for the
+//! four headline methods (dense AdamW, one-sided low-rank, TSR, TopK):
+//!
+//! * **clean / straggler / jitter** — timing cells from the
+//!   discrete-event engine under the seeded `sim::adversity` models:
+//!   predicted step time, exposed communication, peak bytes, and idle
+//!   straggler capacity;
+//! * **kill_resume** — one failure-injection [`Drill`] per cell: the
+//!   run is killed at `kill_at` through the checkpoint subsystem and
+//!   resumed twice — same world size (asserted **bitwise** against the
+//!   uninterrupted run) and at [`elastic_partner`] workers (asserted
+//!   within the loss-trajectory tolerance).
+//!
+//! Everything is seeded; the emitted JSON is byte-identical across
+//! repeat runs and across execution backends (CI's `soak-smoke` leg
+//! diffs both). The sweep also *asserts* the paper-facing sanity
+//! property: a straggler costs dense AdamW strictly more predicted
+//! step time than TSR on the multi-node and Ethernet shapes (the
+//! exposed-comm advantage survives adversity).
+//!
+//! Timing cells run on the CPU-feasible proxy shapes (`runs::
+//! proxy_spec` — hidden/4 with ranks scaled to match the paper's
+//! rank/hidden ratios); drills run on the tiny quadratic source.
+
+use crate::checkpoint::codec;
+use crate::comm::Topology;
+use crate::exec::ExecBackend;
+use crate::exp::runs::{proxy_onesided_rank, proxy_spec, proxy_tsr_cfg};
+use crate::exp::simtime::{method_plans, timeline_json};
+use crate::exp::MethodCfg;
+use crate::optim::onesided::OneSidedRefresh;
+use crate::optim::{SyncPlan, TsrConfig};
+use crate::resilience::{elastic_partner, Drill, DrillCfg};
+use crate::sim::{
+    simulate_plans_adv, Adversity, JitterModel, MethodTimeline, SimCfg, StragglerModel,
+};
+use crate::util::bench::fmt_time;
+use crate::util::json::Json;
+
+/// Sweep configuration (defaults match the CLI's).
+#[derive(Clone, Debug)]
+pub struct SoakCfg {
+    /// Proxy scale for the timing cells (60m|130m|350m|1b).
+    pub scale: String,
+    pub workers_list: Vec<usize>,
+    /// Total steps of each drill's reference run.
+    pub steps: usize,
+    /// Kill step for the drills (mid-refresh-period by default).
+    pub kill_at: usize,
+    /// Schedule horizon for the timing cells (covers refresh spikes).
+    pub plan_steps: usize,
+    pub seed: u64,
+    /// Compute multiplier of the single straggler in the straggler
+    /// scenario.
+    pub straggler_mult: f64,
+    /// Link-jitter amplitude in the jitter scenario.
+    pub jitter_amp: f64,
+    /// Worker counts above this skip the (training-loop) drills; the
+    /// skip is logged, never silent.
+    pub drill_cap: usize,
+    /// Relative loss-trajectory tolerance for elastic resumes.
+    pub elastic_tol: f64,
+    pub sim: SimCfg,
+}
+
+impl Default for SoakCfg {
+    fn default() -> Self {
+        Self {
+            scale: "60m".into(),
+            workers_list: vec![4, 8],
+            steps: 16,
+            kill_at: 7,
+            plan_steps: 30,
+            seed: 42,
+            straggler_mult: 2.0,
+            jitter_amp: 0.5,
+            drill_cap: 16,
+            elastic_tol: 0.5,
+            sim: SimCfg::default(),
+        }
+    }
+}
+
+const SCENARIOS: [&str; 3] = ["clean", "straggler", "jitter"];
+const TOPO_KINDS: [&str; 3] = ["single_node", "multi_node", "ethernet"];
+
+/// The three cluster shapes at a given worker count (same node/GPU
+/// split rule as `tsr train`: w/8 nodes of 8 when that divides evenly,
+/// else two nodes).
+fn topo_for(kind: &str, workers: usize) -> Topology {
+    let (nodes, gpus) = if workers >= 16 && workers % 8 == 0 {
+        (workers / 8, 8)
+    } else {
+        (2, workers.div_ceil(2))
+    };
+    match kind {
+        "single_node" => Topology::single_node(workers),
+        "multi_node" => Topology::multi_node(nodes, gpus),
+        "ethernet" => Topology::ethernet(nodes, gpus),
+        other => panic!("unknown topology kind {other}"),
+    }
+}
+
+/// Timing roster: AdamW, one-sided, TSR, TopK at proxy ranks. Index
+/// order is load-bearing — the straggler self-check reads AdamW at 0
+/// and TSR at 2.
+fn timing_methods(scale: &str) -> Vec<MethodCfg> {
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::OneSided {
+            rank: proxy_onesided_rank(scale),
+            k: 200,
+            refresh: OneSidedRefresh::RandomizedSvd,
+        },
+        MethodCfg::Tsr(proxy_tsr_cfg(scale)),
+        MethodCfg::TopK { keep_frac: 0.01 },
+    ]
+}
+
+/// Drill roster: the same four families at drill-sized ranks, refresh
+/// period `k` (the default `kill_at = 7` lands mid-period for k = 5).
+fn drill_methods(k: usize) -> Vec<MethodCfg> {
+    let tsr = TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 3,
+        ..Default::default()
+    };
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::OneSided {
+            rank: 6,
+            k,
+            refresh: OneSidedRefresh::ExactSvd,
+        },
+        MethodCfg::Tsr(tsr),
+        MethodCfg::TopK { keep_frac: 0.05 },
+    ]
+}
+
+fn adversity_for(scenario: &str, workers: usize, cfg: &SoakCfg) -> Adversity {
+    match scenario {
+        "clean" => Adversity::clean(workers),
+        "straggler" => Adversity {
+            straggler: StragglerModel::single(workers, cfg.straggler_mult),
+            jitter: None,
+        },
+        "jitter" => Adversity {
+            straggler: StragglerModel::none(workers),
+            jitter: Some(JitterModel {
+                seed: cfg.seed,
+                amp: cfg.jitter_amp,
+            }),
+        },
+        other => panic!("unknown scenario {other}"),
+    }
+}
+
+/// Run the full sweep; returns the deterministic JSON table. Panics if
+/// any drill breaks its verification tier or the straggler ordering
+/// self-check fails — a soak that "succeeds" has proven its claims.
+pub fn soak(cfg: &SoakCfg, exec: ExecBackend) -> Json {
+    let spec = proxy_spec(&cfg.scale);
+    let blocks = spec.blocks();
+    let methods = timing_methods(&cfg.scale);
+    println!(
+        "\nsoak — resilience sweep ({} proxy, workers {:?}, horizon {}, drills {} steps kill@{}, seed {})",
+        spec.name, cfg.workers_list, cfg.plan_steps, cfg.steps, cfg.kill_at, cfg.seed
+    );
+
+    // Schedules are shape-only: extract once per method, reuse across
+    // every (workers × topology × scenario) cell.
+    let plans: Vec<(String, Vec<SyncPlan>, usize)> = exec.map_workers(methods.len(), |mi| {
+        let m = &methods[mi];
+        let p = method_plans(&blocks, m, cfg.plan_steps);
+        let peak = p.iter().map(|pl| pl.total_bytes()).max().unwrap_or(0);
+        (m.label(), p, peak)
+    });
+
+    // ---- timing cells: clean / straggler / jitter ----
+    let mut cells: Vec<(usize, &str, &str, usize, MethodTimeline)> = Vec::new();
+    for &w in &cfg.workers_list {
+        for kind in TOPO_KINDS {
+            let topo = topo_for(kind, w);
+            for scenario in SCENARIOS {
+                let adv = adversity_for(scenario, topo.workers(), cfg);
+                for (mi, (_, p, _)) in plans.iter().enumerate() {
+                    let tl = simulate_plans_adv(p, &blocks, &topo, &cfg.sim, &adv);
+                    cells.push((w, kind, scenario, mi, tl));
+                }
+            }
+        }
+    }
+    let step_of = |w: usize, kind: &str, scenario: &str, mi: usize| -> f64 {
+        cells
+            .iter()
+            .find(|c| c.0 == w && c.1 == kind && c.2 == scenario && c.3 == mi)
+            .expect("cell exists")
+            .4
+            .avg_step_secs
+    };
+
+    // Self-check (acceptance criterion): on the shapes where cross-node
+    // bytes matter, a straggler must cost dense AdamW strictly more
+    // step time than TSR — the exposed-comm advantage survives.
+    for &w in &cfg.workers_list {
+        for kind in ["multi_node", "ethernet"] {
+            let d_adam = step_of(w, kind, "straggler", 0) - step_of(w, kind, "clean", 0);
+            let d_tsr = step_of(w, kind, "straggler", 2) - step_of(w, kind, "clean", 2);
+            assert!(
+                d_adam > d_tsr && d_tsr >= 0.0,
+                "straggler hurt AdamW no more than TSR ({kind}, {w} workers): \
+                 Δadamw {d_adam} vs Δtsr {d_tsr}"
+            );
+            println!(
+                "  [{kind:<11} w={w:<3}] straggler Δstep  adamw {}  tsr {}",
+                fmt_time(d_adam),
+                fmt_time(d_tsr)
+            );
+        }
+    }
+
+    let cell_rows: Vec<Json> = cells
+        .iter()
+        .map(|(w, kind, scenario, mi, tl)| {
+            let mut row = timeline_json(&plans[*mi].0, tl);
+            row.set("workers", Json::num(*w as f64));
+            row.set("topology", Json::str(*kind));
+            row.set("scenario", Json::str(*scenario));
+            row.set("peak_bytes", Json::num(plans[*mi].2 as f64));
+            row
+        })
+        .collect();
+
+    // ---- kill + resume drills ----
+    let mut drill_specs: Vec<(usize, &str, MethodCfg)> = Vec::new();
+    for &w in &cfg.workers_list {
+        if w > cfg.drill_cap {
+            println!(
+                "  soak: skipping kill+resume drills at {w} workers (> drill cap {})",
+                cfg.drill_cap
+            );
+            continue;
+        }
+        for kind in TOPO_KINDS {
+            for m in drill_methods(5) {
+                drill_specs.push((w, kind, m));
+            }
+        }
+    }
+    let drill_rows: Vec<Vec<Json>> = exec.map_workers(drill_specs.len(), |i| {
+        let (w, kind, m) = &drill_specs[i];
+        let mut dc = DrillCfg::quick(m.clone(), *w, cfg.steps, cfg.kill_at);
+        dc.seed = cfg.seed;
+        dc.topo = topo_for(kind, *w);
+        dc.exec = exec;
+        let drill = Drill::prepare(dc);
+        let same = drill.resume(*w);
+        same.assert_contract(cfg.elastic_tol);
+        let elastic = drill.resume(elastic_partner(*w));
+        elastic.assert_contract(cfg.elastic_tol);
+        [same, elastic]
+            .iter()
+            .map(|r| {
+                let mut row = r.to_json();
+                row.set("workers", Json::num(*w as f64));
+                row.set("topology", Json::str(*kind));
+                row.set("scenario", Json::str("kill_resume"));
+                row
+            })
+            .collect()
+    });
+    let drills: Vec<Json> = drill_rows.into_iter().flatten().collect();
+    println!(
+        "  drills: {} kill+resume cells ({} rows) — bitwise + elastic contracts held",
+        drill_specs.len(),
+        drills.len()
+    );
+
+    Json::obj(vec![
+        ("scale", Json::str(cfg.scale.clone())),
+        ("spec", Json::str(spec.name.clone())),
+        (
+            "workers",
+            Json::Arr(cfg.workers_list.iter().map(|&w| Json::num(w as f64)).collect()),
+        ),
+        ("plan_steps", Json::num(cfg.plan_steps as f64)),
+        ("drill_steps", Json::num(cfg.steps as f64)),
+        ("kill_at", Json::num(cfg.kill_at as f64)),
+        ("seed", codec::u64_to_json(cfg.seed)),
+        ("straggler_mult", Json::num(cfg.straggler_mult)),
+        ("jitter_amp", Json::num(cfg.jitter_amp)),
+        ("elastic_tol", Json::num(cfg.elastic_tol)),
+        ("bucket_bytes", Json::num(cfg.sim.bucket_bytes as f64)),
+        ("cells", Json::Arr(cell_rows)),
+        ("drills", Json::Arr(drills)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topo_for_covers_all_kinds_at_any_worker_count() {
+        for w in [2usize, 4, 7, 16, 24] {
+            assert_eq!(topo_for("single_node", w).workers(), w);
+            assert!(topo_for("multi_node", w).nodes > 1);
+            assert!(topo_for("ethernet", w).inter_bw < 16e9 + 1.0);
+        }
+        assert_eq!(topo_for("multi_node", 16).nodes, 2);
+        assert_eq!(topo_for("multi_node", 24).nodes, 3);
+    }
+
+    #[test]
+    fn rosters_are_four_methods_with_fixed_indices() {
+        let t = timing_methods("60m");
+        assert_eq!(t.len(), 4);
+        assert!(matches!(t[0], MethodCfg::Adam));
+        assert!(matches!(t[2], MethodCfg::Tsr(_)));
+        let d = drill_methods(5);
+        assert_eq!(d.len(), 4);
+        assert!(matches!(d[0], MethodCfg::Adam));
+    }
+}

@@ -26,6 +26,7 @@ pub mod metrics;
 pub mod model;
 pub mod nn;
 pub mod optim;
+pub mod resilience;
 pub mod runtime;
 pub mod sim;
 pub mod train;

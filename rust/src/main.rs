@@ -4,6 +4,7 @@
 //!   table1|table2|table3|table4|table6   regenerate paper tables
 //!   fig1|fig3|fig4|fig5                  regenerate paper figure data
 //!   simtime                              Fig 6: step-time breakdown (sim/)
+//!   soak                                 resilience sweep: straggler/jitter/kill+resume
 //!   theory                               Theorem 1 validation sweep
 //!   lm-curves                            quality-vs-bytes on the native LM (nn/)
 //!   train                                end-to-end training run (pjrt|quad|lm)
@@ -63,15 +64,52 @@ fn main() {
                 overlap: !args.flag("no-overlap"),
                 hierarchical: !args.flag("flat"),
             };
+            let nodes = args.get_usize("nodes", 4);
+            let gpus = args.get_usize("gpus", 8);
+            let adv = tsr::sim::Adversity::from_knobs(
+                nodes * gpus,
+                args.get_f64("straggler", 1.0),
+                args.get_f64("jitter", 0.0),
+                args.get_u64("seed", 42),
+            );
             let j = tsr::exp::simtime::simtime(
                 args.get_or("scale", "60m"),
-                args.get_usize("nodes", 4),
-                args.get_usize("gpus", 8),
+                nodes,
+                gpus,
                 args.get_usize("steps", 100),
                 &cfg,
                 &backend_from_args(&args),
+                &adv,
             );
             write_results("fig6_simtime.json", &j);
+        }
+        Some("soak") => {
+            let cfg = tsr::exp::soak::SoakCfg {
+                scale: args.get_or("scale", "60m").to_string(),
+                workers_list: args
+                    .get_or("workers-list", "4,8")
+                    .split(',')
+                    .filter_map(|s| s.trim().parse().ok())
+                    .collect(),
+                steps: args.get_usize("steps", 16),
+                kill_at: args.get_usize("kill-at", 7),
+                plan_steps: args.get_usize("plan-steps", 30),
+                seed: args.get_u64("seed", 42),
+                straggler_mult: args.get_f64("straggler", 2.0),
+                jitter_amp: args.get_f64("jitter", 0.5),
+                drill_cap: args.get_usize("drill-cap", 16),
+                elastic_tol: args.get_f64("elastic-tol", 0.5),
+                sim: tsr::sim::SimCfg {
+                    bucket_bytes: args.get_usize("bucket-kb", 25 * 1024) * 1024,
+                    ..Default::default()
+                },
+            };
+            assert!(
+                !cfg.workers_list.is_empty(),
+                "--workers-list must name at least one worker count"
+            );
+            let j = tsr::exp::soak::soak(&cfg, backend_from_args(&args));
+            write_results("soak.json", &j);
         }
         Some("lm-curves") => {
             let cfg = tsr::exp::lm_curves::LmCurvesCfg {
@@ -103,7 +141,13 @@ fn main() {
                  \n  tables:   table1 table2 table3 [--loss-steps N] table4 table6\
                  \n  figures:  fig1 fig3 fig4 fig5 [--steps N --workers W]\
                  \n  simtime:  simtime [--scale 60m --nodes 4 --gpus 8 --steps N \
-                 --bucket-kb K --tokens T --flops F --no-overlap --flat]\
+                 --bucket-kb K --tokens T --flops F --no-overlap --flat \
+                 --straggler MULT --jitter AMP --seed S]\
+                 \n  soak:     soak [--scale 60m --workers-list 4,8 --steps 16 --kill-at 7 \
+                 --plan-steps 30 --seed 42 --straggler 2.0 --jitter 0.5 --drill-cap 16 \
+                 --elastic-tol 0.5 --bucket-kb K --backend B] — resilience sweep: \
+                 clean/straggler/jitter timing cells plus kill+resume drills \
+                 (bitwise same-world, tolerance elastic; DESIGN.md §11)\
                  \n  theory:   theory [--horizons 50,100,...]\
                  \n  lm:       lm-curves [--steps N --workers W --seed S] — loss-vs-bytes \
                  table on the native transformer LM (AdamW vs TSR vs baselines, \

@@ -1,0 +1,294 @@
+//! Failure-injection drills (DESIGN.md §11).
+//!
+//! A [`Drill`] kills a training run at an arbitrary step *through the
+//! checkpoint subsystem* — the manifest goes through a full JSON text
+//! round trip and every live object is dropped, exactly what a process
+//! death plus restart does — then resumes elastically and verifies the
+//! outcome against one of two tiers:
+//!
+//! * **bitwise** (same world size, either backend): the resumed run's
+//!   deterministic metrics JSON — weights fingerprint and every ledger
+//!   column included — must equal the uninterrupted run's byte for
+//!   byte (the DESIGN.md §9 resume contract, now exercised by a
+//!   harness instead of only by tests);
+//! * **tolerance** (changed world size): bitwise equality is impossible
+//!   (the noise stream fans out differently and error-feedback buffers
+//!   are re-sharded from their canonical mean), so the post-resume loss
+//!   trajectory on the quadratic source must track the uninterrupted
+//!   run within a relative tolerance.
+//!
+//! `tsr soak` runs one drill per (workers × topology × method) cell;
+//! `tests/resilience.rs` pins both tiers across both exec backends.
+
+use crate::checkpoint::Checkpoint;
+use crate::comm::{CommLedger, Topology};
+use crate::exec::ExecBackend;
+use crate::exp::MethodCfg;
+use crate::linalg::Matrix;
+use crate::metrics::RunMetrics;
+use crate::model::ModelSpec;
+use crate::optim::{AdamHyper, DistOptimizer, LrSchedule};
+use crate::train::gradsim::QuadraticSim;
+use crate::train::{GradSource, Trainer};
+use crate::util::json::Json;
+
+/// One drill's scenario: which run to kill, where, and on what cluster.
+#[derive(Clone, Debug)]
+pub struct DrillCfg {
+    pub method: MethodCfg,
+    pub spec: ModelSpec,
+    /// World size of the original (killed) run.
+    pub workers: usize,
+    /// Total optimizer steps of the uninterrupted reference run.
+    pub steps: usize,
+    /// Step at which the run is killed (checkpoint + drop everything).
+    pub kill_at: usize,
+    pub seed: u64,
+    /// Gradient-noise scale of the quadratic source.
+    pub noise: f32,
+    pub hyper: AdamHyper,
+    pub topo: Topology,
+    pub exec: ExecBackend,
+}
+
+impl DrillCfg {
+    /// A tiny quadratic-source scenario (sized for test/soak budgets).
+    pub fn quick(method: MethodCfg, workers: usize, steps: usize, kill_at: usize) -> Self {
+        assert!(kill_at > 0 && kill_at < steps, "kill_at must be mid-run");
+        Self {
+            method,
+            spec: ModelSpec::proxy(200, 32, 64, 2, 2),
+            workers,
+            steps,
+            kill_at,
+            seed: 11,
+            noise: 0.01,
+            hyper: AdamHyper {
+                lr: 0.05,
+                weight_decay: 0.0,
+                scale: 1.0,
+                ..Default::default()
+            },
+            topo: Topology::multi_node(2, workers.div_ceil(2)),
+            exec: ExecBackend::Sequential,
+        }
+    }
+}
+
+/// Outcome of one kill + resume, against the uninterrupted reference.
+#[derive(Clone, Debug)]
+pub struct DrillReport {
+    pub method: String,
+    /// World size the run resumed at.
+    pub resume_workers: usize,
+    /// Whether this was an elastic (changed world size) resume.
+    pub elastic: bool,
+    /// Deterministic metrics JSONs byte-identical (the §9 contract).
+    pub bitwise: bool,
+    pub full_final_loss: f64,
+    pub resumed_final_loss: f64,
+    /// Mean relative loss deviation over the post-resume steps:
+    /// `mean_t |l_res[t] − l_full[t]| / (mean_t |l_full[t]| + ε)`.
+    pub traj_delta_rel: f64,
+}
+
+impl DrillReport {
+    /// Panic unless the applicable verification tier holds: same-world
+    /// resumes must be bitwise; elastic resumes must stay within `tol`
+    /// relative trajectory deviation.
+    pub fn assert_contract(&self, tol: f64) {
+        if self.elastic {
+            assert!(
+                self.traj_delta_rel < tol,
+                "{}: elastic resume at {} workers drifted {:.4} rel (tol {tol})",
+                self.method,
+                self.resume_workers,
+                self.traj_delta_rel,
+            );
+        } else {
+            assert!(
+                self.bitwise,
+                "{}: same-world resume at {} workers broke the bitwise contract",
+                self.method,
+                self.resume_workers,
+            );
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(self.method.clone())),
+            ("resume_workers", Json::num(self.resume_workers as f64)),
+            ("elastic", Json::Bool(self.elastic)),
+            ("bitwise", Json::Bool(self.bitwise)),
+            ("full_final_loss", Json::num(self.full_final_loss)),
+            ("resumed_final_loss", Json::num(self.resumed_final_loss)),
+            ("post_resume_loss_delta", Json::num(self.traj_delta_rel)),
+        ])
+    }
+}
+
+/// A prepared kill: the uninterrupted reference run's outputs plus the
+/// manifest text that survived the "process death". `resume` can then
+/// be called repeatedly (same or changed world size) — the manifest is
+/// re-parsed from text each time, as a restart would.
+pub struct Drill {
+    cfg: DrillCfg,
+    /// Uninterrupted run: deterministic metrics JSON + loss trajectory.
+    full_json: String,
+    full_losses: Vec<f32>,
+    /// The checkpoint manifest as serialized text — all that's left of
+    /// the killed run.
+    ckpt_text: String,
+}
+
+impl Drill {
+    fn setup(
+        cfg: &DrillCfg,
+        workers: usize,
+    ) -> (QuadraticSim, Box<dyn DistOptimizer>, Vec<Matrix>) {
+        let intrinsic = (cfg.spec.hidden / 2).max(8);
+        let sim = QuadraticSim::new(&cfg.spec, workers, intrinsic, cfg.noise, cfg.seed);
+        let blocks = sim.blocks().to_vec();
+        let opt = cfg.method.build(&blocks, cfg.hyper, workers);
+        let params = sim.init_params(cfg.seed ^ 0xF00D);
+        (sim, opt, params)
+    }
+
+    fn trainer(cfg: &DrillCfg) -> Trainer {
+        Trainer::new(cfg.topo.clone(), LrSchedule::paper(cfg.steps)).with_backend(cfg.exec)
+    }
+
+    /// Run the uninterrupted reference AND the killed run (to
+    /// `kill_at`), capturing the manifest through a full JSON text
+    /// round trip and dropping every live object.
+    pub fn prepare(cfg: DrillCfg) -> Self {
+        // Reference: the run nothing ever happened to.
+        let (mut sim, mut opt, mut params) = Self::setup(&cfg, cfg.workers);
+        let (metrics, ledger) =
+            Self::trainer(&cfg).run(&mut sim, opt.as_mut(), &mut params, cfg.steps);
+        let full_json = metrics.to_json_deterministic(&ledger, &params).to_string_pretty();
+        let full_losses = metrics.loss.clone();
+        drop((sim, opt, params, metrics, ledger));
+
+        // The victim: killed at kill_at, surviving only as manifest text.
+        let (mut sim, mut opt, mut params) = Self::setup(&cfg, cfg.workers);
+        let (metrics, ledger) =
+            Self::trainer(&cfg).run(&mut sim, opt.as_mut(), &mut params, cfg.kill_at);
+        let ck = Checkpoint::capture(
+            cfg.kill_at as u64,
+            cfg.workers,
+            &params,
+            opt.as_ref(),
+            &sim,
+            &metrics,
+            &ledger,
+            Json::Null,
+        );
+        let ckpt_text = ck.to_json().to_string_pretty();
+        drop((sim, opt, params, metrics, ledger));
+
+        Self {
+            cfg,
+            full_json,
+            full_losses,
+            ckpt_text,
+        }
+    }
+
+    /// The uninterrupted run's deterministic metrics JSON.
+    pub fn full_json(&self) -> &str {
+        &self.full_json
+    }
+
+    /// Resume the killed run at `resume_workers` (the "new process":
+    /// everything rebuilt from scratch plus the manifest text) and
+    /// compare against the uninterrupted reference.
+    pub fn resume(&self, resume_workers: usize) -> DrillReport {
+        let cfg = &self.cfg;
+        let ck = Checkpoint::from_json(&Json::parse(&self.ckpt_text).expect("manifest parses"))
+            .expect("manifest loads");
+        assert_eq!(ck.step, cfg.kill_at as u64);
+
+        let (mut sim, mut opt, _) = Self::setup(cfg, resume_workers);
+        assert_eq!(opt.name(), ck.method, "method guard");
+        opt.load_state(&ck.opt_state, resume_workers)
+            .expect("optimizer state restores");
+        sim.load_state(&ck.source_state).expect("source state restores");
+        let mut params = ck.params.clone();
+        let metrics = RunMetrics::state_from_json(&ck.metrics).expect("metrics restore");
+        let ledger = CommLedger::from_json(&ck.ledger).expect("ledger restores");
+        let (metrics, ledger) = Self::trainer(cfg).run_from(
+            &mut sim,
+            opt.as_mut(),
+            &mut params,
+            cfg.kill_at,
+            cfg.steps,
+            metrics,
+            ledger,
+        );
+        let resumed_json = metrics.to_json_deterministic(&ledger, &params).to_string_pretty();
+
+        // Post-resume trajectory deviation (f64, order-stable sums).
+        let mut dev = 0.0f64;
+        let mut mag = 0.0f64;
+        for t in cfg.kill_at..cfg.steps {
+            let f = self.full_losses[t] as f64;
+            let r = metrics.loss[t] as f64;
+            dev += (r - f).abs();
+            mag += f.abs();
+        }
+        let n = (cfg.steps - cfg.kill_at) as f64;
+        let traj_delta_rel = (dev / n) / (mag / n + 1e-12);
+
+        DrillReport {
+            method: cfg.method.label(),
+            resume_workers,
+            elastic: resume_workers != cfg.workers,
+            bitwise: resumed_json == self.full_json,
+            full_final_loss: {
+                let mut m = RunMetrics::new("full");
+                m.loss = self.full_losses.clone();
+                m.final_loss() as f64
+            },
+            resumed_final_loss: metrics.final_loss() as f64,
+            traj_delta_rel,
+        }
+    }
+}
+
+/// The elastic partner world size drilled alongside a same-world
+/// resume: shrink by one worker (grow when too small to shrink), so
+/// every drill exercises the mean-reshard path with a different — and
+/// for odd sizes ragged — shard split.
+pub fn elastic_partner(workers: usize) -> usize {
+    if workers < 4 {
+        workers + 1
+    } else {
+        workers - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_partner_always_differs_and_stays_positive() {
+        for w in 1..=16 {
+            let p = elastic_partner(w);
+            assert_ne!(p, w);
+            assert!(p >= 1);
+        }
+    }
+
+    #[test]
+    fn same_world_drill_is_bitwise_for_adamw() {
+        let drill = Drill::prepare(DrillCfg::quick(MethodCfg::Adam, 2, 9, 4));
+        let report = drill.resume(2);
+        assert!(!report.elastic);
+        assert!(report.bitwise);
+        assert_eq!(report.traj_delta_rel, 0.0);
+        report.assert_contract(0.5);
+    }
+}

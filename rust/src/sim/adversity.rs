@@ -1,0 +1,198 @@
+//! Deterministic adversity models for the discrete-event engine:
+//! stragglers and link jitter (DESIGN.md §11).
+//!
+//! Both models are *seeded and pure* — the same configuration always
+//! produces the same perturbation, so every `tsr soak` sweep (and the
+//! CI leg that runs it twice and diffs the JSON) stays byte-identical.
+//!
+//! * [`StragglerModel`] — per-worker compute-time multipliers `m_w ≥ 1`.
+//!   Data-parallel collectives are synchronous, so a degraded worker
+//!   (preempted, thermally throttled, failing HBM) paces the whole
+//!   group: gradients become ready at `max_w m_w` × the nominal time,
+//!   and every ring step waits on the slow participant's injection, so
+//!   per-bucket collective cost scales by the same factor. The healthy
+//!   workers' wasted capacity is reported as `straggler_idle_secs`.
+//! * [`JitterModel`] — per-step multiplicative α–β perturbations of the
+//!   [`Topology`] channels (bandwidth divided, latency multiplied by a
+//!   factor in `[1, 1+amp]`), resampled deterministically per step from
+//!   `(seed, t)`. Jitter is adversarial: `amp = 0` reproduces the clean
+//!   timeline bit-for-bit, `amp > 0` can only slow a step down.
+
+use crate::comm::Topology;
+use crate::util::rng::Xoshiro256;
+
+/// Per-worker compute-time multipliers (`1.0` = nominal speed).
+#[derive(Clone, Debug)]
+pub struct StragglerModel {
+    pub mults: Vec<f64>,
+}
+
+impl StragglerModel {
+    /// Every worker at nominal speed.
+    pub fn none(workers: usize) -> Self {
+        Self {
+            mults: vec![1.0; workers.max(1)],
+        }
+    }
+
+    /// One straggler (worker 0) at `mult` × nominal compute time.
+    pub fn single(workers: usize, mult: f64) -> Self {
+        let mut m = Self::none(workers);
+        m.mults[0] = mult.max(1.0);
+        m
+    }
+
+    /// Seeded heterogeneous fleet: worker `w` draws `1 + max_extra·u³`
+    /// with `u ~ U[0,1)` from `for_stream(seed, w)` — a heavy-ish tail
+    /// where most workers are near-nominal and a few lag.
+    pub fn seeded(workers: usize, seed: u64, max_extra: f64) -> Self {
+        let mults = (0..workers.max(1))
+            .map(|w| {
+                let u = Xoshiro256::for_stream(seed, w as u64).next_f64();
+                1.0 + max_extra.max(0.0) * u * u * u
+            })
+            .collect();
+        Self { mults }
+    }
+
+    /// The pacing multiplier: synchronous data parallelism runs at the
+    /// slowest worker's speed.
+    pub fn pace(&self) -> f64 {
+        self.mults.iter().fold(1.0f64, |a, &b| a.max(b))
+    }
+
+    /// Mean over workers of `pace − m_w`: idle compute-capacity seconds
+    /// per second of nominal backward time (0 for a homogeneous fleet).
+    pub fn idle_frac(&self) -> f64 {
+        let pace = self.pace();
+        let sum: f64 = self.mults.iter().map(|&m| pace - m).sum();
+        sum / self.mults.len() as f64
+    }
+}
+
+/// Seeded per-step α–β link jitter. Factors are log-free multiplicative
+/// perturbations in `[1, 1+amp]`, drawn per `(seed, step)`; within a
+/// step every bucket sees the same perturbed channels.
+#[derive(Clone, Copy, Debug)]
+pub struct JitterModel {
+    pub seed: u64,
+    /// Worst-case fractional slowdown per channel parameter (≥ 0).
+    pub amp: f64,
+}
+
+impl JitterModel {
+    /// The four per-link factors for step `t`, in a fixed draw order:
+    /// `[intra_bw_div, inter_bw_div, intra_lat_mult, inter_lat_mult]`.
+    pub fn factors(&self, t: u64) -> [f64; 4] {
+        let mut rng = Xoshiro256::for_stream(self.seed, t);
+        let amp = self.amp.max(0.0);
+        [(); 4].map(|_| 1.0 + amp * rng.next_f64())
+    }
+
+    /// Channel-perturbed copy of `topo` for step `t`. With `amp = 0`
+    /// every factor is exactly `1.0` and the copy is bit-identical.
+    pub fn perturb(&self, topo: &Topology, t: u64) -> Topology {
+        let [ibw, xbw, ilat, xlat] = self.factors(t);
+        topo.perturb_channels(ibw, xbw, ilat, xlat)
+    }
+}
+
+/// Everything misbehaving about the cluster for one simulated run.
+#[derive(Clone, Debug)]
+pub struct Adversity {
+    pub straggler: StragglerModel,
+    pub jitter: Option<JitterModel>,
+}
+
+impl Adversity {
+    /// A well-behaved cluster: the engine's adversity-aware paths
+    /// reproduce the clean timeline bit-for-bit under this value.
+    pub fn clean(workers: usize) -> Self {
+        Self {
+            straggler: StragglerModel::none(workers),
+            jitter: None,
+        }
+    }
+
+    /// CLI-knob constructor: `straggler_mult > 1` puts one straggler at
+    /// that multiplier, `jitter_amp > 0` enables seeded link jitter.
+    pub fn from_knobs(workers: usize, straggler_mult: f64, jitter_amp: f64, seed: u64) -> Self {
+        Self {
+            straggler: if straggler_mult > 1.0 {
+                StragglerModel::single(workers, straggler_mult)
+            } else {
+                StragglerModel::none(workers)
+            },
+            jitter: if jitter_amp > 0.0 {
+                Some(JitterModel {
+                    seed,
+                    amp: jitter_amp,
+                })
+            } else {
+                None
+            },
+        }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.straggler.pace() == 1.0 && self.jitter.is_none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pace_is_max_and_idle_frac_means_the_rest() {
+        let s = StragglerModel {
+            mults: vec![1.0, 2.0, 1.5, 1.0],
+        };
+        assert_eq!(s.pace(), 2.0);
+        // (1 + 0 + 0.5 + 1) / 4
+        assert!((s.idle_frac() - 0.625).abs() < 1e-15);
+        assert_eq!(StragglerModel::none(4).idle_frac(), 0.0);
+    }
+
+    #[test]
+    fn single_puts_the_multiplier_on_worker_zero() {
+        let s = StragglerModel::single(3, 2.5);
+        assert_eq!(s.mults, vec![2.5, 1.0, 1.0]);
+        // Sub-nominal multipliers clamp to 1 (stragglers only slow down).
+        assert_eq!(StragglerModel::single(2, 0.5).pace(), 1.0);
+    }
+
+    #[test]
+    fn seeded_is_deterministic_and_bounded() {
+        let a = StragglerModel::seeded(8, 7, 1.5);
+        let b = StragglerModel::seeded(8, 7, 1.5);
+        assert_eq!(a.mults, b.mults);
+        assert!(a.mults.iter().all(|&m| (1.0..2.5).contains(&m)));
+        assert_ne!(a.mults, StragglerModel::seeded(8, 8, 1.5).mults);
+    }
+
+    #[test]
+    fn zero_amp_jitter_is_bitwise_identity() {
+        let topo = Topology::multi_node(2, 4);
+        let j = JitterModel { seed: 3, amp: 0.0 };
+        let p = j.perturb(&topo, 5);
+        assert_eq!(p.intra_bw.to_bits(), topo.intra_bw.to_bits());
+        assert_eq!(p.inter_bw.to_bits(), topo.inter_bw.to_bits());
+        assert_eq!(p.intra_lat.to_bits(), topo.intra_lat.to_bits());
+        assert_eq!(p.inter_lat.to_bits(), topo.inter_lat.to_bits());
+    }
+
+    #[test]
+    fn jitter_is_per_step_deterministic_and_adversarial() {
+        let topo = Topology::ethernet(2, 2);
+        let j = JitterModel { seed: 11, amp: 0.5 };
+        let a = j.perturb(&topo, 3);
+        let b = j.perturb(&topo, 3);
+        assert_eq!(a.inter_bw.to_bits(), b.inter_bw.to_bits());
+        // Adversarial: bandwidth never rises, latency never falls.
+        assert!(a.inter_bw <= topo.inter_bw && a.intra_bw <= topo.intra_bw);
+        assert!(a.inter_lat >= topo.inter_lat && a.intra_lat >= topo.intra_lat);
+        // Factors vary across steps (not a frozen perturbation).
+        assert_ne!(j.factors(0), j.factors(1));
+    }
+}

@@ -21,6 +21,7 @@
 use crate::comm::Topology;
 use crate::model::BlockSpec;
 use crate::optim::{DistOptimizer, SyncPlan};
+use crate::sim::adversity::Adversity;
 use crate::sim::bucket::BucketPlan;
 
 /// Engine configuration: cluster compute rate + bucketing + toggles.
@@ -65,6 +66,10 @@ pub struct StepTimeline {
     /// Fraction of comm-busy time hidden behind compute.
     pub overlap_frac: f64,
     pub buckets: usize,
+    /// Compute capacity wasted waiting for stragglers: mean over
+    /// workers of `(pace − m_w)` × the nominal backward time
+    /// (`sim::adversity::StragglerModel`). Zero on a clean cluster.
+    pub straggler_idle_secs: f64,
 }
 
 /// Backward-compute seconds for one block.
@@ -105,19 +110,58 @@ pub fn collective_secs(topo: &Topology, cfg: &SimCfg, bytes: usize) -> f64 {
     intra + inter
 }
 
-/// Simulate one step of `plan` on `topo`.
+/// Simulate one step of `plan` on a well-behaved `topo` — the clean
+/// special case of [`simulate_step_adv`] (kept as the stable entry
+/// point for the oracle-equality contract and existing callers).
 pub fn simulate_step(
     blocks: &[BlockSpec],
     plan: &SyncPlan,
     topo: &Topology,
     cfg: &SimCfg,
 ) -> StepTimeline {
-    // Backward compute finishes block-by-block in reverse forward order.
+    simulate_step_adv(blocks, plan, topo, cfg, &Adversity::clean(topo.workers()), 0)
+}
+
+/// [`simulate_step`] under an [`Adversity`] model at step index `t`
+/// (the jitter resample key).
+///
+/// Straggler semantics: synchronous data parallelism runs at the
+/// slowest worker's speed, so the pacing multiplier
+/// `StragglerModel::pace()` scales BOTH gradient readiness (the
+/// backward timeline) and each bucket's collective cost (every ring
+/// step waits on the degraded worker's injection). Jitter perturbs the
+/// per-link α–β channels once per step. A clean adversity multiplies
+/// by exactly `1.0` everywhere, reproducing the plain timeline
+/// bit-for-bit — the oracle-equality test still holds through this
+/// path.
+pub fn simulate_step_adv(
+    blocks: &[BlockSpec],
+    plan: &SyncPlan,
+    topo: &Topology,
+    cfg: &SimCfg,
+    adv: &Adversity,
+    t: u64,
+) -> StepTimeline {
+    let pace = adv.straggler.pace();
+    let jittered;
+    let topo = match &adv.jitter {
+        Some(j) => {
+            jittered = j.perturb(topo, t);
+            &jittered
+        }
+        None => topo,
+    };
+    // Backward compute finishes block-by-block in reverse forward order,
+    // paced by the slowest worker. `base_clock` tracks the nominal
+    // (unstraggled) backward time for the idle-capacity report.
     let nblocks = blocks.len();
     let mut compute_end = vec![0.0f64; nblocks];
     let mut clock = 0.0f64;
+    let mut base_clock = 0.0f64;
     for b in (0..nblocks).rev() {
-        clock += backward_secs(&blocks[b], cfg);
+        let base = backward_secs(&blocks[b], cfg);
+        base_clock += base;
+        clock += base * pace;
         compute_end[b] = clock;
     }
     let compute_secs = clock;
@@ -127,7 +171,7 @@ pub fn simulate_step(
     let mut stream_free = 0.0f64;
     let mut last_end = 0.0f64;
     for bucket in &bp.buckets {
-        let cost = collective_secs(topo, cfg, bucket.bytes);
+        let cost = collective_secs(topo, cfg, bucket.bytes) * pace;
         comm_busy += cost;
         if cfg.overlap {
             let ready = bucket
@@ -161,6 +205,7 @@ pub fn simulate_step(
         step_secs,
         overlap_frac,
         buckets: bp.len(),
+        straggler_idle_secs: adv.straggler.idle_frac() * base_clock,
     }
 }
 
@@ -176,6 +221,9 @@ pub struct MethodTimeline {
     /// Hidden fraction of all comm-busy time over the horizon.
     pub overlap_frac: f64,
     pub avg_payload_bytes: f64,
+    /// Mean wasted compute capacity per step (see
+    /// [`StepTimeline::straggler_idle_secs`]).
+    pub avg_straggler_idle_secs: f64,
 }
 
 /// Simulate `steps` consecutive steps of `opt`'s payload schedule and
@@ -203,18 +251,32 @@ pub fn simulate_plans(
     topo: &Topology,
     cfg: &SimCfg,
 ) -> MethodTimeline {
+    simulate_plans_adv(plans, blocks, topo, cfg, &Adversity::clean(topo.workers()))
+}
+
+/// [`simulate_plans`] under an [`Adversity`] model. The plan index is
+/// the jitter resample key, so a jittered horizon sees per-step channel
+/// perturbations (and its peak step reflects the worst draw).
+pub fn simulate_plans_adv(
+    plans: &[SyncPlan],
+    blocks: &[BlockSpec],
+    topo: &Topology,
+    cfg: &SimCfg,
+    adv: &Adversity,
+) -> MethodTimeline {
     let steps = plans.len().max(1);
     let mut out = MethodTimeline::default();
     let mut busy = 0.0f64;
     let mut exposed = 0.0f64;
-    for plan in plans {
-        let tl = simulate_step(blocks, plan, topo, cfg);
+    for (t, plan) in plans.iter().enumerate() {
+        let tl = simulate_step_adv(blocks, plan, topo, cfg, adv, t as u64);
         out.avg_step_secs += tl.step_secs;
         out.avg_compute_secs += tl.compute_secs;
         out.avg_comm_busy_secs += tl.comm_busy_secs;
         out.avg_exposed_secs += tl.exposed_comm_secs;
         out.peak_step_secs = out.peak_step_secs.max(tl.step_secs);
         out.avg_payload_bytes += plan.total_bytes() as f64;
+        out.avg_straggler_idle_secs += tl.straggler_idle_secs;
         busy += tl.comm_busy_secs;
         exposed += tl.exposed_comm_secs;
     }
@@ -224,6 +286,7 @@ pub fn simulate_plans(
     out.avg_comm_busy_secs *= inv;
     out.avg_exposed_secs *= inv;
     out.avg_payload_bytes *= inv;
+    out.avg_straggler_idle_secs *= inv;
     out.overlap_frac = if busy > 0.0 {
         (1.0 - exposed / busy).clamp(0.0, 1.0)
     } else {
@@ -237,6 +300,7 @@ mod tests {
     use super::*;
     use crate::comm::LayerClass;
     use crate::optim::SyncItem;
+    use crate::sim::adversity::{JitterModel, StragglerModel};
 
     fn blocks3() -> Vec<BlockSpec> {
         vec![
@@ -342,6 +406,68 @@ mod tests {
             fused.comm_busy_secs,
             unfused.comm_busy_secs
         );
+    }
+
+    #[test]
+    fn clean_adversity_reproduces_plain_timeline_bitwise() {
+        let blocks = blocks3();
+        let plan = dense_plan(&blocks);
+        let topo = Topology::multi_node(2, 4);
+        let cfg = SimCfg::default();
+        let plain = simulate_step(&blocks, &plan, &topo, &cfg);
+        let adv = simulate_step_adv(&blocks, &plan, &topo, &cfg, &Adversity::clean(8), 3);
+        assert_eq!(plain.step_secs.to_bits(), adv.step_secs.to_bits());
+        assert_eq!(plain.compute_secs.to_bits(), adv.compute_secs.to_bits());
+        assert_eq!(plain.comm_busy_secs.to_bits(), adv.comm_busy_secs.to_bits());
+        assert_eq!(
+            plain.exposed_comm_secs.to_bits(),
+            adv.exposed_comm_secs.to_bits()
+        );
+        assert_eq!(adv.straggler_idle_secs, 0.0);
+    }
+
+    #[test]
+    fn straggler_paces_the_whole_step_and_reports_idle_capacity() {
+        let blocks = blocks3();
+        let plan = dense_plan(&blocks);
+        let topo = Topology::multi_node(2, 4);
+        let cfg = SimCfg::default();
+        let clean = simulate_step(&blocks, &plan, &topo, &cfg);
+        let adv = Adversity {
+            straggler: StragglerModel::single(8, 2.0),
+            jitter: None,
+        };
+        let slow = simulate_step_adv(&blocks, &plan, &topo, &cfg, &adv, 0);
+        // Compute and collectives both scale by the pacing multiplier,
+        // so the step is 2× (up to fp association) — strictly slower.
+        assert!(slow.step_secs > 1.99 * clean.step_secs);
+        assert!(slow.step_secs < 2.01 * clean.step_secs);
+        // 7 of 8 workers idle (2−1)× the nominal backward time.
+        let expect_idle = 7.0 / 8.0 * clean.compute_secs;
+        assert!((slow.straggler_idle_secs - expect_idle).abs() < 1e-12 * expect_idle.max(1.0));
+    }
+
+    #[test]
+    fn jitter_only_slows_steps_down() {
+        let blocks = blocks3();
+        let topo = Topology::ethernet(2, 4);
+        let cfg = SimCfg::default();
+        let plans: Vec<SyncPlan> = (0..10).map(|_| dense_plan(&blocks)).collect();
+        let clean = simulate_plans(&plans, &blocks, &topo, &cfg);
+        let adv = Adversity {
+            straggler: StragglerModel::none(8),
+            jitter: Some(JitterModel { seed: 5, amp: 0.5 }),
+        };
+        let jit = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &adv);
+        assert!(jit.avg_step_secs >= clean.avg_step_secs);
+        assert!(jit.avg_exposed_secs >= clean.avg_exposed_secs);
+        // amp = 0 is a bitwise identity end to end.
+        let zero = Adversity {
+            straggler: StragglerModel::none(8),
+            jitter: Some(JitterModel { seed: 5, amp: 0.0 }),
+        };
+        let z = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &zero);
+        assert_eq!(z.avg_step_secs.to_bits(), clean.avg_step_secs.to_bits());
     }
 
     #[test]

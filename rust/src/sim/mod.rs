@@ -20,17 +20,25 @@
 //!   (hierarchical reduce-scatter → leader ring → broadcast). Reports
 //!   predicted step time, exposed (non-overlapped) communication, and
 //!   the overlap fraction.
+//! * [`adversity`] — deterministic, seeded cluster-misbehaviour models
+//!   (per-worker compute stragglers; per-step α–β link jitter) threaded
+//!   through the engine's `*_adv` entry points. A clean adversity is a
+//!   bitwise no-op, so the oracle contract below survives the plumbing.
 //! * the closed-form `Topology::allreduce_time` remains the documented
 //!   degenerate-case oracle: flat ring + single bucket + no overlap
 //!   reproduces it exactly (`tests/sim_engine.rs`).
 //!
-//! Surfaced as the `tsr simtime` CLI experiment (`exp::simtime`), the
-//! `sim_step` bench, and `Trainer`'s optional per-run time prediction.
+//! Surfaced as the `tsr simtime` / `tsr soak` CLI experiments
+//! (`exp::simtime`, `exp::soak`), the `sim_step` bench, and `Trainer`'s
+//! optional per-run time prediction.
 
+pub mod adversity;
 pub mod bucket;
 pub mod engine;
 
+pub use adversity::{Adversity, JitterModel, StragglerModel};
 pub use bucket::{Bucket, BucketPlan};
 pub use engine::{
-    simulate_method, simulate_plans, simulate_step, MethodTimeline, SimCfg, StepTimeline,
+    simulate_method, simulate_plans, simulate_plans_adv, simulate_step, simulate_step_adv,
+    MethodTimeline, SimCfg, StepTimeline,
 };

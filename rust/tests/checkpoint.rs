@@ -331,6 +331,179 @@ fn elastic_resume_reshards_error_feedback_on_ragged_numel() {
     }
 }
 
+/// Distance in units-in-the-last-place between two f32s. Equal values
+/// (including +0 vs -0) are 0; differing signs are "far".
+fn ulp_dist(a: f32, b: f32) -> u32 {
+    if a == b {
+        return 0;
+    }
+    if a.is_sign_negative() != b.is_sign_negative() {
+        return u32::MAX;
+    }
+    a.to_bits().abs_diff(b.to_bits())
+}
+
+/// Satellite: elastic EF re-shard across NON-power-of-two world sizes,
+/// at the codec level. 3 -> 5 (ragged: 42 % 5 != 0): each restored
+/// element is `fl(fl(5c)/5)` — two f32 roundings — so the across-worker
+/// mean of the restored buffers is within 2 ulp of the canonical mean.
+/// 7 -> 2: x2 and /2 are exact in binary floating point, so the
+/// restored mean is bitwise the canonical mean.
+#[test]
+fn elastic_reshard_mean_tracks_canonical_across_odd_world_sizes() {
+    use tsr::checkpoint::{errors_from_json, errors_to_json};
+    let mut rng = tsr::util::rng::Xoshiro256::new(77);
+    for (w_save, w_load, max_ulp) in [(3usize, 5usize, 2u32), (7, 2, 0)] {
+        let errors: Vec<Matrix> =
+            (0..w_save).map(|_| Matrix::gaussian(6, 7, 1.0, &mut rng)).collect();
+        // Canonical mean, summed in worker order exactly like the codec.
+        let mut canon = errors[0].clone();
+        for e in &errors[1..] {
+            canon.add_assign(e);
+        }
+        canon.scale(1.0 / w_save as f32);
+        let restored = errors_from_json(&errors_to_json(&errors), 6, 7, w_load, "ef").unwrap();
+        assert_eq!(restored.len(), w_load);
+        for i in 0..canon.numel() {
+            // Exactly one worker owns element i; the others hold +0,
+            // so this sum is the owner's stored value, exactly.
+            let sum: f32 = restored.iter().map(|m| m.data[i]).sum();
+            let got = sum / w_load as f32;
+            assert!(
+                ulp_dist(got, canon.data[i]) <= max_ulp,
+                "{w_save}->{w_load} elem {i}: {got} vs {} ({} ulp)",
+                canon.data[i],
+                ulp_dist(got, canon.data[i])
+            );
+        }
+    }
+}
+
+/// Satellite: the elastic-resume matrix extended to non-power-of-two
+/// world sizes through the real optimizers: error-feedback methods
+/// saved at W=3 resume at W'=5 (growing), and saved at W=7 resume at
+/// W'=2 (shrinking), re-sharding their buffers to the NEW world size
+/// and continuing to train on finite numbers.
+#[test]
+fn elastic_resume_covers_non_power_of_two_world_sizes() {
+    use tsr::model::BlockSpec;
+    // 6x7 = 42 elements: ragged for 5 workers (42 % 5 = 2).
+    let blocks = vec![BlockSpec {
+        name: "w".into(),
+        rows: 6,
+        cols: 7,
+        class: tsr::comm::LayerClass::Linear,
+    }];
+    for (w_save, w_load) in [(3usize, 5usize), (7, 2)] {
+        for m in [MethodCfg::TopK { keep_frac: 0.1 }, MethodCfg::Sign { k_var: 4 }] {
+            let mut opt = m.build(&blocks, AdamHyper::default(), w_save);
+            let mut params = vec![Matrix::zeros(6, 7)];
+            let topo = Topology::single_node(w_save);
+            let mut ledger = CommLedger::new();
+            let mut rng = tsr::util::rng::Xoshiro256::new(9);
+            for _ in 0..3 {
+                let mut grads: Vec<Vec<Matrix>> = (0..w_save)
+                    .map(|_| vec![Matrix::gaussian(6, 7, 1.0, &mut rng)])
+                    .collect();
+                opt.step(&mut tsr::optim::StepCtx {
+                    params: &mut params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &topo,
+                    lr_mult: 1.0,
+                    exec: &tsr::exec::ExecBackend::Sequential,
+                });
+                ledger.end_step();
+            }
+            let state = Json::parse(&opt.save_state().to_string_pretty()).unwrap();
+            let mut re = m.build(&blocks, AdamHyper::default(), w_load);
+            re.load_state(&state, w_load).unwrap();
+            // One 42-element EF buffer per worker of the NEW world size.
+            let delta = (w_load as i64 - w_save as i64) * 42;
+            assert_eq!(
+                re.state_elements() as i64,
+                opt.state_elements() as i64 + delta,
+                "{}: {w_save}->{w_load} EF element accounting",
+                m.label()
+            );
+            let topo2 = Topology::single_node(w_load);
+            let mut grads: Vec<Vec<Matrix>> = (0..w_load)
+                .map(|_| vec![Matrix::gaussian(6, 7, 1.0, &mut rng)])
+                .collect();
+            re.step(&mut tsr::optim::StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo2,
+                lr_mult: 1.0,
+                exec: &tsr::exec::ExecBackend::Sequential,
+            });
+            ledger.end_step();
+            for p in &params {
+                assert!(
+                    p.data.iter().all(|v| v.is_finite()),
+                    "{}: {w_save}->{w_load}",
+                    m.label()
+                );
+            }
+        }
+    }
+}
+
+/// Satellite: manifest robustness — three distinct corruptions fail
+/// loudly with three DISTINCT error messages (no panics, no silent
+/// fallback): a truncated file, an unknown `version`, and a
+/// structurally valid tensor entry whose declared shape contradicts
+/// its payload length.
+#[test]
+fn corrupt_manifests_fail_loudly_with_distinct_errors() {
+    let (mut sim, mut opt, mut params) = fresh_setup(&MethodCfg::Adam);
+    let (metrics, ledger) = trainer(6).run(&mut sim, opt.as_mut(), &mut params, 4);
+    let ck = Checkpoint::capture(
+        4,
+        WORKERS,
+        &params,
+        opt.as_ref(),
+        &sim,
+        &metrics,
+        &ledger,
+        Json::Null,
+    );
+    let text = ck.to_json().to_string_pretty();
+
+    // (a) Truncated file: must surface a parse error, not a panic.
+    let dir = std::env::temp_dir().join("tsr_ckpt_corrupt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ckpt_trunc.json");
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let err_trunc = Checkpoint::load(&path).unwrap_err();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // (b) Unknown version: names both the found and supported versions.
+    let mut j = Json::parse(&text).unwrap();
+    j.set("version", Json::num(99.0));
+    let err_version = Checkpoint::from_json(&j).unwrap_err();
+    assert!(
+        err_version.contains("version 99") && err_version.contains("reads 1"),
+        "unhelpful version error: {err_version}"
+    );
+
+    // (c) Structurally valid JSON whose declared rows/cols no longer
+    // match the hex payload length.
+    let mut j = Json::parse(&text).unwrap();
+    let mut arr = j.get("params").as_arr().unwrap().to_vec();
+    let rows = arr[0].get("rows").as_u64().unwrap();
+    arr[0].set("rows", Json::num((rows + 1) as f64));
+    j.set("params", Json::Arr(arr));
+    let err_shape = Checkpoint::from_json(&j).unwrap_err();
+    assert!(err_shape.contains("payload has"), "unhelpful shape error: {err_shape}");
+
+    // Three different failures, three different diagnoses.
+    assert_ne!(err_trunc, err_version);
+    assert_ne!(err_version, err_shape);
+    assert_ne!(err_trunc, err_shape);
+}
+
 /// Structural guards: wrong method, wrong block count, wrong shapes
 /// must be rejected, not silently mis-restored.
 #[test]

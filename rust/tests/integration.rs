@@ -164,6 +164,89 @@ fn compressed_baseline_byte_signatures() {
     assert!((ledger.peak_bytes() as f64) < 0.1 * dense);
 }
 
+/// Satellite (property): plan == ledger byte parity survives randomized
+/// mid-period `seek()` points AND ragged shards. Odd vocab/hidden make
+/// every matrix block's numel odd, so the even worker counts always
+/// split `numel % workers != 0` — the shard-boundary case the ring
+/// collectives and EF-buffer bookkeeping must agree on.
+#[test]
+fn prop_plan_ledger_parity_on_ragged_shards_and_random_seek() {
+    use tsr::util::prop::{check, dim};
+    check("plan==ledger ragged+seek", 6, |rng| {
+        let vocab = 2 * dim(rng, 100, 160) + 1;
+        let hidden = 2 * dim(rng, 8, 14) + 1;
+        let spec = ModelSpec::proxy(vocab, hidden, 2 * hidden, 1, 2);
+        let workers = if dim(rng, 0, 1) == 0 { 2 } else { 4 };
+        let k = dim(rng, 2, 6);
+        let t0 = dim(rng, 0, 2 * k + 1);
+        let steps = t0 + k + 2;
+        let tsr = TsrConfig {
+            rank: 8,
+            rank_emb: 4,
+            refresh_every: k,
+            refresh_emb: k,
+            oversample: 3,
+            ..Default::default()
+        };
+        let methods = vec![
+            MethodCfg::Adam,
+            MethodCfg::OneSided {
+                rank: 6,
+                k,
+                refresh: OneSidedRefresh::ExactSvd,
+            },
+            MethodCfg::Tsr(tsr.clone()),
+            MethodCfg::TsrSgd(tsr.clone()),
+            MethodCfg::PowerSgd { rank: 5 },
+            MethodCfg::Sign { k_var: k },
+            MethodCfg::TopK { keep_frac: 0.03 },
+        ];
+        for m in methods {
+            let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
+            let blocks = sim.blocks().to_vec();
+            assert!(
+                blocks.iter().any(|b| b.numel() % workers != 0),
+                "generator must produce ragged shards"
+            );
+            let mut opt = m.build(&blocks, AdamHyper::default(), workers);
+            opt.seek(t0 as u64);
+            let plans: Vec<_> = (t0..steps).map(|t| opt.sync_plan(t as u64)).collect();
+            let mut params = sim.init_params(1);
+            let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+            let topo = Topology::multi_node(2, workers.div_ceil(2));
+            let mut ledger = CommLedger::new();
+            for t in t0..steps {
+                sim.compute(&params, t, &mut grads);
+                opt.step(&mut StepCtx {
+                    params: &mut params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &topo,
+                    lr_mult: 1.0,
+                    exec: &tsr::exec::ExecBackend::Sequential,
+                });
+                ledger.end_step();
+            }
+            for (i, plan) in plans.iter().enumerate() {
+                assert_eq!(
+                    plan.total_bytes(),
+                    ledger.step(i).total,
+                    "{} V={vocab} H={hidden} W={workers} k={k} t0={t0} step {}",
+                    m.label(),
+                    t0 + i
+                );
+                assert_eq!(
+                    plan.has_refresh(),
+                    ledger.step(i).refresh,
+                    "{} V={vocab} H={hidden} W={workers} k={k} t0={t0} step {} refresh",
+                    m.label(),
+                    t0 + i
+                );
+            }
+        }
+    });
+}
+
 /// Paper orderings hold end-to-end on a real (simulated-gradient) run:
 /// bytes TSR < one-sided < dense; peak randomized < dense-refresh; and
 /// all three reach comparable loss on a low-intrinsic-dim objective.

@@ -1,0 +1,212 @@
+//! Resilience harness integration tests (DESIGN.md §11).
+//!
+//! Three layers: the seeded straggler/jitter adversity models in the
+//! discrete-event timing engine (including the paper-facing ordering —
+//! a straggler costs dense AdamW strictly more than TSR); the
+//! failure-injection [`Drill`]s that kill a run through the checkpoint
+//! subsystem and resume it bitwise (same world) or within tolerance
+//! (elastic), across BOTH execution backends; and the `tsr soak` sweep
+//! itself, which must emit byte-identical JSON across repeat runs and
+//! across backends.
+
+use tsr::exec::ExecBackend;
+use tsr::exp::simtime::method_plans;
+use tsr::exp::soak::{soak, SoakCfg};
+use tsr::exp::MethodCfg;
+use tsr::model::ModelSpec;
+use tsr::optim::onesided::OneSidedRefresh;
+use tsr::optim::TsrConfig;
+use tsr::resilience::{elastic_partner, Drill, DrillCfg};
+use tsr::sim::{simulate_plans_adv, Adversity, JitterModel, SimCfg, StragglerModel};
+
+fn all_seven(k: usize) -> Vec<MethodCfg> {
+    let tsr = TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 3,
+        ..Default::default()
+    };
+    vec![
+        MethodCfg::Adam,
+        MethodCfg::OneSided {
+            rank: 6,
+            k,
+            refresh: OneSidedRefresh::ExactSvd,
+        },
+        MethodCfg::Tsr(tsr.clone()),
+        MethodCfg::TsrSgd(tsr),
+        MethodCfg::PowerSgd { rank: 5 },
+        MethodCfg::Sign { k_var: k },
+        MethodCfg::TopK { keep_frac: 0.03 },
+    ]
+}
+
+fn tsr_timing_cfg() -> MethodCfg {
+    MethodCfg::Tsr(TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: 10,
+        refresh_emb: 10,
+        oversample: 3,
+        ..Default::default()
+    })
+}
+
+/// Acceptance criterion: a 2x straggler on one worker increases
+/// predicted step time for dense AdamW strictly more than for TSR on a
+/// cross-node topology. The straggler paces the whole step (compute
+/// AND collectives), so the absolute penalty scales with the method's
+/// clean step time — and AdamW's exposed comm makes that larger.
+#[test]
+fn straggler_hurts_adamw_strictly_more_than_tsr() {
+    let spec = ModelSpec::proxy(400, 48, 96, 2, 3);
+    let blocks = spec.blocks();
+    let topo = tsr::comm::Topology::multi_node(4, 4);
+    let cfg = SimCfg::default();
+    let clean = Adversity::clean(16);
+    let slow = Adversity {
+        straggler: StragglerModel::single(16, 2.0),
+        jitter: None,
+    };
+    let delta = |m: &MethodCfg| {
+        let plans = method_plans(&blocks, m, 25);
+        let adv = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &slow).avg_step_secs;
+        let base = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &clean).avg_step_secs;
+        adv - base
+    };
+    let d_adam = delta(&MethodCfg::Adam);
+    let d_tsr = delta(&tsr_timing_cfg());
+    assert!(
+        d_adam > d_tsr && d_tsr > 0.0,
+        "straggler penalty must order adamw > tsr > 0: Δadamw {d_adam} Δtsr {d_tsr}"
+    );
+}
+
+/// Jitter can only hurt (factors >= 1), is seeded-deterministic, and
+/// amplitude 0 is bitwise the clean timeline.
+#[test]
+fn jitter_is_deterministic_monotone_and_bitwise_clean_at_amp_zero() {
+    let spec = ModelSpec::proxy(400, 48, 96, 2, 3);
+    let blocks = spec.blocks();
+    let topo = tsr::comm::Topology::multi_node(2, 4);
+    let cfg = SimCfg::default();
+    let plans = method_plans(&blocks, &MethodCfg::Adam, 20);
+    let jit = |amp: f64| Adversity {
+        straggler: StragglerModel::none(8),
+        jitter: Some(JitterModel { seed: 7, amp }),
+    };
+    let clean = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &Adversity::clean(8));
+    let amp0 = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &jit(0.0));
+    assert_eq!(
+        amp0.avg_step_secs.to_bits(),
+        clean.avg_step_secs.to_bits(),
+        "amp=0 jitter must be bitwise the clean timeline"
+    );
+    let a = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &jit(0.5));
+    let b = simulate_plans_adv(&plans, &blocks, &topo, &cfg, &jit(0.5));
+    assert_eq!(a.avg_step_secs.to_bits(), b.avg_step_secs.to_bits(), "seeded => repeatable");
+    assert!(
+        a.avg_step_secs >= clean.avg_step_secs,
+        "bandwidth /f and latency *f with f >= 1 cannot speed a step up"
+    );
+}
+
+/// Tentpole contract, tier 1: kill at a mid-period step and resume at
+/// the SAME world size — byte-identical metrics JSON for all seven
+/// methods, on both execution backends.
+#[test]
+fn kill_and_same_world_resume_is_bitwise_for_all_methods_on_both_backends() {
+    for exec in [ExecBackend::Sequential, ExecBackend::Threaded { threads: 2 }] {
+        for m in all_seven(5) {
+            let mut dc = DrillCfg::quick(m, 2, 9, 4);
+            dc.exec = exec;
+            let drill = Drill::prepare(dc);
+            let report = drill.resume(2);
+            assert!(!report.elastic);
+            assert!(
+                report.bitwise,
+                "{} on {}: same-world resume not bitwise",
+                report.method,
+                exec.name()
+            );
+            assert_eq!(report.traj_delta_rel, 0.0);
+            report.assert_contract(0.5);
+        }
+    }
+}
+
+/// Tentpole contract, tier 2: elastic resumes (shrink 4->3, grow 2->3)
+/// stay within the loss-trajectory tolerance on the quad source for
+/// the four headline families.
+#[test]
+fn elastic_resume_tracks_the_full_run_within_tolerance() {
+    let methods = || {
+        vec![
+            MethodCfg::Adam,
+            MethodCfg::Tsr(TsrConfig {
+                rank: 8,
+                rank_emb: 4,
+                refresh_every: 5,
+                refresh_emb: 5,
+                oversample: 3,
+                ..Default::default()
+            }),
+            MethodCfg::TopK { keep_frac: 0.05 },
+            MethodCfg::Sign { k_var: 5 },
+        ]
+    };
+    for (from, to) in [(4usize, 3usize), (2, 3)] {
+        assert_eq!(elastic_partner(from), to, "drilling the soak's own partner rule");
+        for m in methods() {
+            let drill = Drill::prepare(DrillCfg::quick(m, from, 12, 5));
+            let report = drill.resume(to);
+            assert!(report.elastic);
+            assert!(
+                report.full_final_loss.is_finite() && report.resumed_final_loss.is_finite(),
+                "{}: {from}->{to} produced non-finite losses",
+                report.method
+            );
+            report.assert_contract(0.5);
+        }
+    }
+}
+
+fn tiny_soak_cfg() -> SoakCfg {
+    SoakCfg {
+        workers_list: vec![2],
+        steps: 8,
+        kill_at: 3,
+        plan_steps: 12,
+        ..Default::default()
+    }
+}
+
+/// The soak sweep is deterministic: two runs emit byte-identical JSON,
+/// and the threaded backend reproduces the sequential bytes. Also pins
+/// the table's shape so schema drift is caught here, not in CI's diff.
+#[test]
+fn soak_json_is_byte_identical_across_runs_and_backends() {
+    let cfg = tiny_soak_cfg();
+    let a = soak(&cfg, ExecBackend::Sequential);
+    let b = soak(&cfg, ExecBackend::Sequential);
+    assert_eq!(a.to_string_pretty(), b.to_string_pretty(), "repeat runs must not drift");
+    let c = soak(&cfg, ExecBackend::Threaded { threads: 2 });
+    assert_eq!(
+        a.to_string_pretty(),
+        c.to_string_pretty(),
+        "threaded backend must reproduce sequential bytes"
+    );
+
+    // 1 worker count x 3 topologies x 3 scenarios x 4 methods.
+    assert_eq!(a.get("cells").as_arr().unwrap().len(), 36);
+    // 1 worker count x 3 topologies x 4 methods x {same, elastic}.
+    assert_eq!(a.get("drills").as_arr().unwrap().len(), 24);
+    for d in a.get("drills").as_arr().unwrap() {
+        assert_eq!(d.get("scenario").as_str().unwrap(), "kill_resume");
+        if d.get("elastic").as_bool() == Some(false) {
+            assert_eq!(d.get("bitwise").as_bool(), Some(true));
+        }
+    }
+}

@@ -190,6 +190,90 @@ fn sync_plan_matches_metered_ledger_from_mid_period_start() {
     }
 }
 
+/// Satellite (property): the `optim::refresh_due` algebra over random
+/// `(init_step, every, seek, t)` tuples — the predicate both `step()`
+/// and `sync_plan()` consult, so its algebra IS the schedule contract.
+#[test]
+fn prop_refresh_due_algebra() {
+    use tsr::optim::refresh_due;
+    use tsr::util::prop::{check, dim, DEFAULT_CASES};
+    check("refresh_due algebra", DEFAULT_CASES, |rng| {
+        let every = dim(rng, 1, 12) as u64;
+        let seek = dim(rng, 0, 40) as u64;
+        let t = seek + dim(rng, 0, 30) as u64;
+        // Uninitialized state must refresh at the next executed step —
+        // the mid-period-start case a resume creates.
+        assert!(refresh_due(None, seek, every, seek));
+        // The cadence fires regardless of the init bookkeeping.
+        if t % every == 0 {
+            assert!(refresh_due(None, seek, every, t));
+            assert!(refresh_due(Some(seek), seek, every, t));
+        }
+        // The step that first built the state always refreshes.
+        assert!(refresh_due(Some(t), seek, every, t));
+        // Off-cadence with state built elsewhere: no refresh — the
+        // steady-state r×r-only step.
+        if t % every != 0 && t != seek {
+            assert!(!refresh_due(Some(seek), seek, every, t));
+        }
+    });
+}
+
+/// Satellite (property): schedule == ledger parity from RANDOM
+/// mid-period starts — generalizes the fixed `t0 = 7, k = 5` case
+/// above over random refresh periods and seek points, for all seven
+/// methods.
+#[test]
+fn prop_sync_plan_matches_ledger_at_random_seek() {
+    use tsr::util::prop::{check, dim};
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let workers = 2;
+    check("plan==ledger from random seek", 8, |rng| {
+        let k = dim(rng, 2, 7);
+        let t0 = dim(rng, 0, 3 * k + 2);
+        let steps = t0 + k + dim(rng, 1, k + 2);
+        for m in all_seven(k) {
+            let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
+            let blocks = sim.blocks().to_vec();
+            let mut opt = m.build(&blocks, AdamHyper::default(), workers);
+            opt.seek(t0 as u64);
+            let plans: Vec<_> = (t0..steps).map(|t| opt.sync_plan(t as u64)).collect();
+            let mut params = sim.init_params(1);
+            let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+            let topo = Topology::multi_node(2, 1);
+            let mut ledger = CommLedger::new();
+            for t in t0..steps {
+                sim.compute(&params, t, &mut grads);
+                opt.step(&mut StepCtx {
+                    params: &mut params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &topo,
+                    lr_mult: 1.0,
+                    exec: &tsr::exec::ExecBackend::Sequential,
+                });
+                ledger.end_step();
+            }
+            for (i, plan) in plans.iter().enumerate() {
+                assert_eq!(
+                    plan.total_bytes(),
+                    ledger.step(i).total,
+                    "{} k={k} t0={t0} step {}: schedule bytes != metered bytes",
+                    m.label(),
+                    t0 + i
+                );
+                assert_eq!(
+                    plan.has_refresh(),
+                    ledger.step(i).refresh,
+                    "{} k={k} t0={t0} step {}: refresh flag mismatch",
+                    m.label(),
+                    t0 + i
+                );
+            }
+        }
+    });
+}
+
 /// Bucketed + overlapped time is never worse than serial unbucketed
 /// time, and strictly better when many small payloads share a latency-
 /// dominated link.
