@@ -193,10 +193,12 @@ pub fn hier_volume_bytes(numel: usize, nodes: usize, gpus_per_node: usize) -> Hi
 ///   matches the topology shape (flat ring otherwise) — on the
 ///   [`ExecBackend::Threaded`] backend the same schedule runs as a
 ///   rendezvous ring over one OS thread per worker
-///   (`exec::threaded::allreduce_mean`), bitwise-identically,
+///   (`exec::threaded::allreduce_mean`), and on
+///   [`ExecBackend::Process`] as a socket ring over one OS process per
+///   worker (`exec::process::allreduce_mean`), bitwise-identically,
 /// * meters the aggregate wire volume per link class into the ledger's
-///   intra/inter columns (threaded: *measured* from the chunks that
-///   crossed thread boundaries),
+///   intra/inter columns (threaded/process: *measured* from the chunks
+///   that crossed thread/socket boundaries),
 /// * meters the synchronized-object payload under `class` (unchanged
 ///   semantics — the analytic byte profiles stay exact),
 /// * adds the serial α–β time oracle ([`Topology::allreduce_time`]) to
@@ -217,10 +219,16 @@ pub fn sync_mean(
     let payload = numel * BYTES_F32;
     if n > 1 {
         if n == topo.workers() {
-            let vol = if exec.is_threaded() {
-                crate::exec::threaded::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
-            } else {
-                hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+            let vol = match exec {
+                ExecBackend::Threaded { .. } => {
+                    crate::exec::threaded::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+                }
+                ExecBackend::Process { .. } => {
+                    crate::exec::process::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+                }
+                ExecBackend::Sequential => {
+                    hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+                }
             };
             ledger.record_link(vol.intra_bytes, vol.inter_bytes);
         } else {
@@ -228,14 +236,22 @@ pub fn sync_mean(
             // flat ring, attributed to the slowest link class it crosses.
             // (Aggregate volume via the shared closed form —
             // ring_allreduce_mean's return is per-worker, not aggregate,
-            // and must not be metered here. The threaded flat ring's
-            // measured total equals the closed form exactly, ragged
-            // payloads included, so both backends meter identically.)
-            if exec.is_threaded() {
-                let measured = crate::exec::threaded::allreduce_mean(workers, 1, n);
-                debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
-            } else {
-                ring_allreduce_mean(workers);
+            // and must not be metered here. The threaded and process
+            // flat rings' measured totals equal the closed form exactly,
+            // ragged payloads included, so all backends meter
+            // identically.)
+            match exec {
+                ExecBackend::Threaded { .. } => {
+                    let measured = crate::exec::threaded::allreduce_mean(workers, 1, n);
+                    debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
+                }
+                ExecBackend::Process { .. } => {
+                    let measured = crate::exec::process::allreduce_mean(workers, 1, n);
+                    debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
+                }
+                ExecBackend::Sequential => {
+                    ring_allreduce_mean(workers);
+                }
             }
             let vol = if topo.nodes > 1 {
                 hier_wire_split(payload, n, 1)

@@ -1,7 +1,7 @@
 //! Execution backends: how the simulated data-parallel worker group
-//! actually runs on this host (DESIGN.md §8).
+//! actually runs on this host (DESIGN.md §8, §12).
 //!
-//! Two backends implement the same step semantics:
+//! Three backends implement the same step semantics:
 //!
 //! * [`ExecBackend::Sequential`] — the original in-place loop: one OS
 //!   thread iterates workers and moves collective chunks between their
@@ -15,18 +15,30 @@
 //!   boundary. The backend also shards the dense-Adam moment update and
 //!   fans the per-worker rSVD sketch / projection work out over threads,
 //!   which is what makes it faster wall-clock on multi-core hosts.
+//! * [`ExecBackend::Process`] — one real OS **process** per simulated
+//!   worker ([`process`], DESIGN.md §12). Collectives run as rendezvous
+//!   rings over localhost TCP sockets with a length-prefixed checksummed
+//!   frame codec (`net/`), so the wire columns meter bytes that were
+//!   literally serialized onto a socket and read back off it. Per-worker
+//!   fan-out compute (sketches, projections, elementwise shards) stays
+//!   in the coordinator process — only the collective path crosses the
+//!   process boundary.
 //!
-//! **Determinism contract.** For any method, topology, and seed, both
+//! **Determinism contract.** For any method, topology, and seed, all
 //! backends produce bitwise-identical weights and identical ledger byte
-//! columns. The threaded rings replay the sequential schedule exactly —
-//! the chunk a worker reduces at ring step `s` is fixed by `(position,
-//! s)`, each element receives its additions in the same order, and a
-//! barrier separates steps — so no atomics-order nondeterminism can
+//! columns. The threaded and process rings replay the sequential
+//! schedule exactly — the chunk a worker reduces at ring step `s` is
+//! fixed by `(position, s)`, each element receives its additions in the
+//! same order (threaded: barrier per step; process: message arrival
+//! order on per-pair TCP streams), and f32 payloads cross the wire as
+//! little-endian bit patterns — so no reordering or re-encoding can
 //! creep into the f32 sums. Elementwise shards (dense Adam) and
 //! per-worker fan-outs (sketches, core projections) are trivially
 //! order-free. `tests/exec_parity.rs` enforces this for all seven
-//! optimizers; CI diffs two full `tsr train` runs byte-for-byte.
+//! optimizers; CI diffs full `tsr train` runs byte-for-byte across all
+//! three backends.
 
+pub mod process;
 pub mod threaded;
 
 /// Which execution engine drives collectives and hot-path loops.
@@ -38,6 +50,11 @@ pub enum ExecBackend {
     /// One OS thread per simulated worker for collectives; up to
     /// `threads` OS threads for elementwise / per-worker fan-out work.
     Threaded { threads: usize },
+    /// One OS process per simulated worker for collectives, rings over
+    /// localhost TCP. `workers` is the world size to pre-spawn (0 =
+    /// spawn lazily at the first collective); groups are pooled per
+    /// world size either way.
+    Process { workers: usize },
 }
 
 impl ExecBackend {
@@ -48,30 +65,51 @@ impl ExecBackend {
         }
     }
 
-    /// Parse a CLI/env backend name (`sequential` | `threaded`).
-    pub fn parse(name: &str) -> Option<Self> {
+    /// Process backend with lazy group spawning.
+    pub fn process() -> Self {
+        Self::Process { workers: 0 }
+    }
+
+    /// Parse a CLI/env backend name. Unknown names are a loud error
+    /// listing the valid set — a typo must never fall back silently.
+    pub fn parse(name: &str) -> Result<Self, String> {
         match name.trim() {
-            "sequential" | "seq" => Some(Self::Sequential),
-            "threaded" | "thread" => Some(Self::threaded()),
-            _ => None,
+            "sequential" | "seq" => Ok(Self::Sequential),
+            "threaded" | "thread" => Ok(Self::threaded()),
+            "process" | "proc" => Ok(Self::process()),
+            other => Err(format!(
+                "unknown execution backend `{other}` (valid: sequential | threaded | process)"
+            )),
         }
     }
 
     /// Backend selected by the `TSR_BACKEND` environment variable
-    /// (default `sequential`). CI runs the whole test suite once with
-    /// `TSR_BACKEND=threaded` to exercise the threaded paths everywhere
-    /// a `Trainer` or experiment driver is constructed.
+    /// (default `sequential`); a set-but-invalid value panics with the
+    /// valid list rather than silently running the wrong backend. CI
+    /// runs the whole test suite once per backend to exercise each path
+    /// everywhere a `Trainer` or experiment driver is constructed.
     pub fn from_env() -> Self {
-        std::env::var("TSR_BACKEND")
-            .ok()
-            .and_then(|v| Self::parse(&v))
-            .unwrap_or(Self::Sequential)
+        match std::env::var("TSR_BACKEND") {
+            Ok(v) => Self::parse(&v).unwrap_or_else(|e| panic!("TSR_BACKEND: {e}")),
+            Err(_) => Self::Sequential,
+        }
+    }
+
+    /// Size the backend to a known world size: the process backend
+    /// records it so the trainer can pre-spawn the worker group before
+    /// step 0. No-op for the in-process backends.
+    pub fn sized_for(self, workers: usize) -> Self {
+        match self {
+            Self::Process { .. } => Self::Process { workers },
+            other => other,
+        }
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Self::Sequential => "sequential",
             Self::Threaded { .. } => "threaded",
+            Self::Process { .. } => "process",
         }
     }
 
@@ -79,11 +117,17 @@ impl ExecBackend {
         matches!(self, Self::Threaded { .. })
     }
 
+    pub fn is_process(&self) -> bool {
+        matches!(self, Self::Process { .. })
+    }
+
     /// Worker-thread budget for elementwise shards and fan-outs (1 for
-    /// the sequential backend).
+    /// the sequential backend, and for the process backend — its
+    /// children only serve collectives; fan-out compute stays in the
+    /// coordinator).
     pub fn threads(&self) -> usize {
         match self {
-            Self::Sequential => 1,
+            Self::Sequential | Self::Process { .. } => 1,
             Self::Threaded { threads } => (*threads).max(1),
         }
     }
@@ -94,7 +138,7 @@ impl ExecBackend {
     /// index's computation touches only its own inputs.
     pub fn map_workers<T: Send>(&self, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
         match self {
-            Self::Sequential => (0..n).map(f).collect(),
+            Self::Sequential | Self::Process { .. } => (0..n).map(f).collect(),
             Self::Threaded { threads } => crate::util::pool::parallel_map(n, (*threads).max(1), f),
         }
     }
@@ -108,26 +152,68 @@ pub fn shard_bounds(len: usize, shards: usize) -> Vec<usize> {
     (0..=s).map(|c| c * len / s).collect()
 }
 
+/// Chunk boundaries `lo + c·(hi−lo)/m` for `c = 0..=m` — the single
+/// splitting rule every ring collective uses, shared by the threaded
+/// and process backends so their schedules cannot drift from the
+/// sequential primitives in `comm::collective` (the parity suite pins
+/// all three to each other).
+pub(crate) fn chunk_starts(lo: usize, hi: usize, m: usize) -> Vec<usize> {
+    let len = hi - lo;
+    (0..=m).map(|c| lo + c * len / m).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn parse_and_name_roundtrip() {
-        assert_eq!(ExecBackend::parse("sequential"), Some(ExecBackend::Sequential));
+        assert_eq!(ExecBackend::parse("sequential"), Ok(ExecBackend::Sequential));
         assert!(ExecBackend::parse("threaded").unwrap().is_threaded());
-        assert_eq!(ExecBackend::parse("gpu"), None);
+        assert!(ExecBackend::parse("process").unwrap().is_process());
         assert_eq!(ExecBackend::Sequential.name(), "sequential");
         assert_eq!(ExecBackend::threaded().name(), "threaded");
+        assert_eq!(ExecBackend::process().name(), "process");
         assert_eq!(ExecBackend::Sequential.threads(), 1);
+        assert_eq!(ExecBackend::process().threads(), 1);
         assert!(ExecBackend::threaded().threads() >= 1);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names_loudly() {
+        // A typo must produce an error naming the valid set, not a
+        // silent fallback (the old behavior for TSR_BACKEND).
+        for bogus in ["gpu", "Threaded", "processs", "", "  "] {
+            let err = ExecBackend::parse(bogus).unwrap_err();
+            assert!(
+                err.contains("sequential | threaded | process"),
+                "`{bogus}` -> {err}"
+            );
+            assert!(err.contains("unknown execution backend"), "`{bogus}` -> {err}");
+        }
+        // Trimmed aliases still parse.
+        assert_eq!(ExecBackend::parse(" seq "), Ok(ExecBackend::Sequential));
+        assert!(ExecBackend::parse("proc").unwrap().is_process());
+    }
+
+    #[test]
+    fn sized_for_touches_only_the_process_backend() {
+        assert_eq!(
+            ExecBackend::process().sized_for(8),
+            ExecBackend::Process { workers: 8 }
+        );
+        assert_eq!(ExecBackend::Sequential.sized_for(8), ExecBackend::Sequential);
+        let t = ExecBackend::threaded();
+        assert_eq!(t.sized_for(8), t);
     }
 
     #[test]
     fn map_workers_matches_serial_map() {
         let serial = ExecBackend::Sequential.map_workers(13, |i| i * i);
         let par = ExecBackend::Threaded { threads: 4 }.map_workers(13, |i| i * i);
+        let proc = ExecBackend::process().map_workers(13, |i| i * i);
         assert_eq!(serial, par);
+        assert_eq!(serial, proc);
     }
 
     #[test]
@@ -139,6 +225,15 @@ mod tests {
             for w in b.windows(2) {
                 assert!(w[0] <= w[1]);
             }
+        }
+    }
+
+    #[test]
+    fn chunk_starts_match_shard_bounds_at_zero_offset() {
+        for (len, m) in [(37usize, 5usize), (4, 7), (0, 3), (12, 4)] {
+            assert_eq!(chunk_starts(0, len, m), shard_bounds(len, m));
+            let shifted = chunk_starts(10, 10 + len, m);
+            assert!(shifted.iter().zip(shard_bounds(len, m)).all(|(a, b)| *a == 10 + b));
         }
     }
 }

@@ -1,0 +1,471 @@
+//! Process execution backend: one real OS process per simulated worker,
+//! ring collectives over localhost TCP (DESIGN.md §12).
+//!
+//! The coordinator (this module, running in the main `tsr` process)
+//! keeps ownership of the per-worker buffers — exactly like the other
+//! backends — and, per collective, scatters each worker's buffer to its
+//! child process, lets the children run the socket-ring all-reduce
+//! among themselves ([`worker`]), and gathers the reduced buffers back.
+//! Only the worker↔worker `Data` frames count as wire bytes: the
+//! coordinator scatter/gather is an artifact of keeping the buffers
+//! host-side, not part of the simulated collective.
+//!
+//! **Lifecycle.** Worker groups are pooled by world size and spawned
+//! lazily on first use (or eagerly via [`ensure_group`]): the current
+//! binary is re-executed with the hidden `tsr _worker` subcommand, the
+//! children rendezvous through the coordinator's listener into a full
+//! TCP mesh, and the group then serves collectives until the process
+//! exits (children watch the control socket and exit on EOF, so a dead
+//! coordinator never leaves orphans). A group whose collective fails is
+//! killed, reaped, and evicted — the next collective at that world size
+//! spawns a fresh group.
+//!
+//! **Determinism.** The children replay the exact sequential chunk
+//! schedule (see [`worker`]); f32 payloads cross the wire as
+//! little-endian bit patterns; the coordinator writes requests and
+//! reads results in rank order. Weights and every ledger column are
+//! bitwise-identical to the `Sequential` backend — `tests/
+//! exec_parity.rs` pins this for all seven optimizers.
+//!
+//! **Metering.** Each worker counts the payload bytes it sent and
+//! received per link class during the rings; the coordinator asserts
+//! the sent and received totals match (every byte metered was actually
+//! written to a socket and read back off it) and returns the measured
+//! volume, which is what `sync_mean` records in the ledger.
+
+pub mod worker;
+
+use crate::comm::collective::HierVolume;
+use crate::linalg::Matrix;
+use crate::net::{
+    accept_deadline, bind_localhost, read_frame_expect, write_frame, Builder, FrameKind, NetError,
+    Reader, WIRE_VERSION,
+};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// One spawned worker group: `world` children plus one control stream
+/// per rank. All collectives on a group are serialized by its mutex.
+struct ProcessGroup {
+    world: usize,
+    children: Vec<Child>,
+    ctrl: Vec<TcpStream>,
+    /// Collectives issued so far; echoed in every request/response pair
+    /// so a desynchronized stream is caught immediately.
+    seq: u64,
+}
+
+fn pool() -> &'static Mutex<HashMap<usize, Arc<Mutex<ProcessGroup>>>> {
+    static POOL: OnceLock<Mutex<HashMap<usize, Arc<Mutex<ProcessGroup>>>>> = OnceLock::new();
+    POOL.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Test-only fault injection: the next collective on a group of the
+/// given world size tells this rank's worker to exit mid-collective
+/// (the robustness tests use it to exercise child-death detection
+/// without OS-level races). Keyed by world size so concurrently running
+/// tests on other group sizes cannot absorb the fault.
+static CHAOS_KILL: Mutex<Option<(usize, usize)>> = Mutex::new(None);
+
+/// Arm fault injection: kill `rank`'s worker during the next collective
+/// that runs on a `world`-sized group (test-only).
+pub fn inject_fault_next_collective(world: usize, rank: usize) {
+    *lock(&CHAOS_KILL) = Some((world, rank));
+}
+
+static WORKER_BIN: OnceLock<PathBuf> = OnceLock::new();
+
+/// Override the binary re-executed as `tsr _worker`. Integration tests
+/// call this with `env!("CARGO_BIN_EXE_tsr")`, whose libtest harness
+/// binary could not serve as a worker itself. First call wins.
+pub fn set_worker_binary(path: PathBuf) {
+    let _ = WORKER_BIN.set(path);
+}
+
+/// Resolve the worker binary: explicit override, then `TSR_WORKER_BIN`,
+/// then the current executable when it is the `tsr` binary itself, then
+/// the sibling `tsr` next to a cargo test binary's `deps/` directory.
+fn worker_binary() -> Result<PathBuf, String> {
+    if let Some(p) = WORKER_BIN.get() {
+        return Ok(p.clone());
+    }
+    if let Ok(p) = std::env::var("TSR_WORKER_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let stem = exe.file_stem().and_then(|s| s.to_str()).unwrap_or("");
+    if stem == "tsr" {
+        return Ok(exe);
+    }
+    // Test binaries live in target/<profile>/deps/<name>-<hash>; the
+    // uplifted tsr binary sits one directory up.
+    if let Some(parent) = exe.parent() {
+        if parent.file_name().and_then(|s| s.to_str()) == Some("deps") {
+            if let Some(target_dir) = parent.parent() {
+                for name in ["tsr", "tsr.exe"] {
+                    let candidate = target_dir.join(name);
+                    if candidate.is_file() {
+                        return Ok(candidate);
+                    }
+                }
+            }
+        }
+    }
+    Err(format!(
+        "cannot resolve the worker binary from {} — set TSR_WORKER_BIN or call \
+         exec::process::set_worker_binary (tests: env!(\"CARGO_BIN_EXE_tsr\"))",
+        exe.display()
+    ))
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    // A collective that panicked poisons its mutex; the group it was
+    // using has already been destroyed and evicted, so recovery is safe.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Pre-spawn (or reuse) the worker group for `world` workers — the
+/// trainer calls this up front so the spawn cost lands before step 0,
+/// and a broken environment fails loudly at startup instead of at the
+/// first collective. Panics on spawn failure.
+pub fn ensure_group(world: usize) {
+    if world > 1 {
+        drop(group_for(world));
+    }
+}
+
+fn group_for(world: usize) -> Arc<Mutex<ProcessGroup>> {
+    let mut map = lock(pool());
+    if let Some(g) = map.get(&world) {
+        return Arc::clone(g);
+    }
+    let g = spawn_group(world)
+        .unwrap_or_else(|e| panic!("process backend: failed to spawn {world}-worker group: {e}"));
+    let arc = Arc::new(Mutex::new(g));
+    map.insert(world, Arc::clone(&arc));
+    arc
+}
+
+/// Tear down every pooled group: send `Shutdown`, reap the children
+/// (killing any that ignore it past the deadline), and clear the pool.
+/// Idle children also exit on their own when this process dies (control
+/// socket EOF), so calling this is hygiene, not a correctness need.
+pub fn shutdown_all() {
+    let groups: Vec<_> = lock(pool()).drain().collect();
+    for (_, g) in groups {
+        let mut g = lock(&g);
+        for rank in 0..g.world {
+            let _ = write_frame(&mut g.ctrl[rank], FrameKind::Shutdown, &[], "shutdown");
+        }
+        let deadline = std::time::Instant::now() + crate::net::io_deadline();
+        for ch in &mut g.children {
+            loop {
+                match ch.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if std::time::Instant::now() >= deadline => {
+                        let _ = ch.kill();
+                        let _ = ch.wait();
+                        break;
+                    }
+                    Ok(None) => std::thread::sleep(std::time::Duration::from_millis(2)),
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+}
+
+/// Two-level hierarchical all-reduce (average) over real worker
+/// processes — same contract as `exec::threaded::allreduce_mean`:
+/// node-major layout, degenerate shapes collapse to a flat ring, and
+/// the returned volume is the aggregate payload bytes that crossed the
+/// worker sockets per link class. Panics (loudly, with a distinct
+/// diagnosis) on child death, frame corruption, or a blown deadline —
+/// after killing and reaping the whole group, so no zombies remain and
+/// the next collective starts from a fresh spawn.
+pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize) -> HierVolume {
+    let n = workers.len();
+    assert!(n > 0);
+    assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
+    let numel = workers[0].numel();
+    for w in workers.iter() {
+        assert_eq!(w.numel(), numel, "ragged all-reduce");
+    }
+    if n == 1 {
+        return HierVolume::default();
+    }
+    let group = group_for(n);
+    let mut g = lock(&group);
+    match collective(&mut g, workers, nodes, gpus_per_node) {
+        Ok(vol) => vol,
+        Err(msg) => {
+            destroy(&mut g);
+            lock(pool()).remove(&n);
+            panic!("process backend: {msg}");
+        }
+    }
+}
+
+fn destroy(g: &mut ProcessGroup) {
+    for ch in &mut g.children {
+        let _ = ch.kill();
+    }
+    for ch in &mut g.children {
+        let _ = ch.wait(); // reap — no zombie children survive a failure
+    }
+    g.ctrl.clear();
+}
+
+/// Run one collective on a live group: scatter, let the rings run,
+/// gather, cross-check the wire accounting.
+fn collective(
+    g: &mut ProcessGroup,
+    workers: &mut [Matrix],
+    nodes: usize,
+    gpus_per_node: usize,
+) -> Result<HierVolume, String> {
+    g.seq += 1;
+    let seq = g.seq;
+    let numel = workers[0].numel();
+    let chaos = {
+        let mut slot = lock(&CHAOS_KILL);
+        match *slot {
+            Some((world, rank)) if world == g.world => {
+                *slot = None;
+                Some(rank)
+            }
+            _ => None,
+        }
+    };
+
+    for rank in 0..g.world {
+        let inject = u8::from(chaos == Some(rank));
+        let payload = Builder::new()
+            .u64(seq)
+            .u32(nodes as u32)
+            .u32(gpus_per_node as u32)
+            .u64(numel as u64)
+            .u8(inject)
+            .f32s(&workers[rank].data)
+            .build();
+        let what = format!("coordinator -> worker {rank}");
+        write_frame(&mut g.ctrl[rank], FrameKind::Collective, &payload, &what)
+            .map_err(|e| classify(&mut g.children, rank, e))?;
+    }
+
+    let (mut sent_intra, mut sent_inter, mut recv_intra, mut recv_inter) = (0u64, 0u64, 0u64, 0u64);
+    for rank in 0..g.world {
+        let what = format!("coordinator <- worker {rank}");
+        let payload = read_frame_expect(&mut g.ctrl[rank], FrameKind::Result, &what)
+            .map_err(|e| classify(&mut g.children, rank, e))?;
+        let mut r = Reader::new(&payload, &what);
+        let decode = (|| -> Result<(), NetError> {
+            let got_seq = r.u64("seq")?;
+            if got_seq != seq {
+                return Err(NetError::Malformed {
+                    what: what.clone(),
+                    detail: format!("result for collective {got_seq}, expected {seq}"),
+                });
+            }
+            sent_intra += r.u64("sent_intra")?;
+            sent_inter += r.u64("sent_inter")?;
+            recv_intra += r.u64("recv_intra")?;
+            recv_inter += r.u64("recv_inter")?;
+            Ok(())
+        })();
+        decode.map_err(|e| classify(&mut g.children, rank, e))?;
+        let mut rest = r;
+        rest.f32s_into(&mut workers[rank].data, "payload")
+            .and_then(|()| rest.finish())
+            .map_err(|e| classify(&mut g.children, rank, e))?;
+    }
+
+    // The wire accounting closes: every payload byte the ledger will
+    // see was written to a socket by one worker AND read back off it by
+    // another. A mismatch means a frame was lost or double-counted.
+    if sent_intra != recv_intra || sent_inter != recv_inter {
+        return Err(format!(
+            "wire accounting mismatch: sent {sent_intra}+{sent_inter} bytes \
+             (intra+inter) but received {recv_intra}+{recv_inter}"
+        ));
+    }
+    Ok(HierVolume {
+        intra_bytes: recv_intra as usize,
+        inter_bytes: recv_inter as usize,
+    })
+}
+
+/// Turn a link failure on `rank` into a distinct, actionable diagnosis:
+/// child death (any dead child is named with its exit status), frame
+/// corruption, blown deadline, or other I/O — the §12 error taxonomy.
+fn classify(children: &mut [Child], rank: usize, e: NetError) -> String {
+    let dead: Vec<String> = children
+        .iter_mut()
+        .enumerate()
+        .filter_map(|(r, ch)| match ch.try_wait() {
+            Ok(Some(status)) => Some(format!("worker {r} ({status})")),
+            _ => None,
+        })
+        .collect();
+    if !dead.is_empty() {
+        return format!(
+            "{} died mid-collective; the worker group was torn down and the next \
+             collective will spawn a fresh one [link error: {e}]",
+            dead.join(", ")
+        );
+    }
+    if e.is_disconnect() {
+        return format!(
+            "worker {rank} died mid-collective (connection closed); the worker group \
+             was torn down [link error: {e}]"
+        );
+    }
+    if e.is_timeout() {
+        return format!(
+            "worker {rank} stalled past the TSR_NET_TIMEOUT_MS deadline mid-collective: {e}"
+        );
+    }
+    match e {
+        NetError::BadKind { .. }
+        | NetError::BadLength { .. }
+        | NetError::BadChecksum { .. }
+        | NetError::Malformed { .. }
+        | NetError::UnexpectedKind { .. } => {
+            format!("corrupt frame from worker {rank}: {e}")
+        }
+        other => format!("worker {rank} link failed: {other}"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spawn + rendezvous
+// ---------------------------------------------------------------------
+
+fn next_token() -> u64 {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    ((std::process::id() as u64) << 32) | COUNTER.fetch_add(1, Ordering::Relaxed)
+}
+
+fn spawn_group(world: usize) -> Result<ProcessGroup, String> {
+    let bin = worker_binary()?;
+    let listener = bind_localhost("coordinator").map_err(|e| e.to_string())?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| format!("coordinator listener addr: {e}"))?;
+    let token = next_token();
+
+    let mut children = Vec::with_capacity(world);
+    for rank in 0..world {
+        let spawned = Command::new(&bin)
+            .arg("_worker")
+            .args(["--rank", &rank.to_string()])
+            .args(["--world", &world.to_string()])
+            .args(["--connect", &addr.to_string()])
+            .args(["--token", &token.to_string()])
+            .stdin(Stdio::null())
+            // stdout stays quiet (the coordinator's own stdout may be a
+            // metrics pipe); worker panics land on our stderr.
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn();
+        match spawned {
+            Ok(ch) => children.push(ch),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(format!("spawn `{} _worker` (rank {rank}): {e}", bin.display()));
+            }
+        }
+    }
+
+    match rendezvous(&listener, world, token) {
+        Ok(ctrl) => Ok(ProcessGroup {
+            world,
+            children,
+            ctrl,
+            seq: 0,
+        }),
+        Err(e) => {
+            kill_all(&mut children);
+            Err(format!("rendezvous failed: {e}"))
+        }
+    }
+}
+
+fn kill_all(children: &mut [Child]) {
+    for ch in children.iter_mut() {
+        let _ = ch.kill();
+    }
+    for ch in children.iter_mut() {
+        let _ = ch.wait();
+    }
+}
+
+/// Collect every worker's `Hello`, broadcast the peer port table, and
+/// wait for all `Ready`s (sent only after a worker's full mesh is up).
+fn rendezvous(
+    listener: &TcpListener,
+    world: usize,
+    token: u64,
+) -> Result<Vec<TcpStream>, NetError> {
+    let mut ctrl: Vec<Option<TcpStream>> = (0..world).map(|_| None).collect();
+    let mut ports = vec![0u16; world];
+    for _ in 0..world {
+        let what = "coordinator hello";
+        let mut s = accept_deadline(listener, what)?;
+        let payload = read_frame_expect(&mut s, FrameKind::Hello, what)?;
+        let mut r = Reader::new(&payload, what);
+        let version = r.u32("version")?;
+        let got_token = r.u64("token")?;
+        let rank = r.u32("rank")? as usize;
+        let got_world = r.u32("world")? as usize;
+        let port = r.u16("peer_port")?;
+        r.finish()?;
+        if version != WIRE_VERSION || got_token != token || got_world != world {
+            return Err(NetError::Malformed {
+                what: what.into(),
+                detail: format!(
+                    "hello mismatch (version {version}/{WIRE_VERSION}, token ok: {}, \
+                     world {got_world}/{world}) — stale worker or foreign connection",
+                    got_token == token
+                ),
+            });
+        }
+        if rank >= world || ctrl[rank].is_some() {
+            return Err(NetError::Malformed {
+                what: what.into(),
+                detail: format!("duplicate or out-of-range hello for rank {rank}"),
+            });
+        }
+        ports[rank] = port;
+        ctrl[rank] = Some(s);
+    }
+    let mut streams: Vec<TcpStream> = ctrl.into_iter().map(|s| s.unwrap()).collect();
+
+    let mut peers = Builder::new().u32(world as u32);
+    for &p in &ports {
+        peers = peers.u16(p);
+    }
+    let peers = peers.build();
+    for (rank, s) in streams.iter_mut().enumerate() {
+        let what = format!("coordinator peers -> worker {rank}");
+        write_frame(s, FrameKind::Peers, &peers, &what)?;
+    }
+    for (rank, s) in streams.iter_mut().enumerate() {
+        let what = format!("coordinator ready <- worker {rank}");
+        let payload = read_frame_expect(s, FrameKind::Ready, &what)?;
+        let mut r = Reader::new(&payload, &what);
+        let got = r.u32("rank")? as usize;
+        r.finish()?;
+        if got != rank {
+            return Err(NetError::Malformed {
+                what,
+                detail: format!("ready from rank {got} on rank {rank}'s control stream"),
+            });
+        }
+    }
+    Ok(streams)
+}

@@ -1,0 +1,467 @@
+//! Child side of the process backend: the hidden `tsr _worker`
+//! subcommand (DESIGN.md §12).
+//!
+//! A worker is one OS process per simulated data-parallel worker. Its
+//! life: connect back to the coordinator, rendezvous into a full TCP
+//! mesh with its peers, then serve collectives until the coordinator
+//! says `Shutdown` — or until the control socket reports EOF, which
+//! means the coordinator process died and the worker must exit rather
+//! than linger as an orphan.
+//!
+//! The ring all-reduce here is the **push form** of the exact schedule
+//! `comm::collective` runs sequentially and `exec::threaded` runs over
+//! shared memory: at reduce-scatter step `s`, group position `i` sends
+//! chunk `(i − s) mod m` to its successor and accumulates the chunk
+//! `(pred − s) mod m` it receives from its predecessor, elementwise in
+//! index order; the all-gather leg circulates chunks `(i + 1 − s) mod
+//! m`. Identical chunk boundaries ([`crate::exec::chunk_starts`]),
+//! identical per-element addition order, identical final `1/n` scale —
+//! so the result is bitwise-identical to the sequential backend, the
+//! same argument that carries the threaded backend's parity contract.
+//!
+//! Deadlock freedom: every peer link gets a dedicated writer thread fed
+//! by an unbounded channel, so the main thread's sends never block on a
+//! full kernel buffer while its peer is itself blocked sending — the
+//! classic ring deadlock. Receives stay on the main thread with the
+//! socket's read deadline, so a dead or wedged peer surfaces as a
+//! distinct error within `TSR_NET_TIMEOUT_MS` instead of a hang.
+
+use crate::comm::BYTES_F32;
+use crate::exec::chunk_starts;
+use crate::net::{
+    accept_deadline, bind_localhost, connect_peer, read_frame, read_frame_expect, write_frame,
+    Builder, Frame, FrameKind, NetError, Reader, WIRE_VERSION,
+};
+use crate::util::cli::Args;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+
+/// Exit code a worker uses when the coordinator's fault-injection flag
+/// tells it to die mid-collective (test-only; DESIGN.md §12).
+pub const FAULT_EXIT_CODE: i32 = 113;
+
+/// One mesh link to a peer worker: reads happen on the main thread via
+/// `rx` (the socket's read deadline applies); writes are queued to a
+/// dedicated writer thread via `tx` so sends never block the ring.
+struct Link {
+    rx: TcpStream,
+    tx: mpsc::Sender<Vec<u8>>,
+}
+
+impl Link {
+    fn new(stream: TcpStream, what: &str) -> Result<Self, NetError> {
+        let mut wr = stream
+            .try_clone()
+            .map_err(|e| NetError::from_io(what, e))?;
+        let (tx, rx_q) = mpsc::channel::<Vec<u8>>();
+        std::thread::spawn(move || {
+            // A failed write means the peer is gone; the main thread
+            // will hit its own loud read error on the next ring step,
+            // so the writer just drains and exits.
+            while let Ok(bytes) = rx_q.recv() {
+                use std::io::Write as _;
+                if wr.write_all(&bytes).is_err() {
+                    break;
+                }
+            }
+        });
+        Ok(Self { rx: stream, tx })
+    }
+
+    fn send_chunk(&self, chunk: &[f32], what: &str) -> Result<(), NetError> {
+        let payload = Builder::new().f32s(chunk).build();
+        self.tx
+            .send(crate::net::encode_frame(FrameKind::Data, &payload))
+            .map_err(|_| NetError::Disconnected {
+                what: what.to_string(),
+                detail: "peer writer thread exited".into(),
+            })
+    }
+
+    fn recv_chunk(&mut self, out: &mut [f32], what: &str) -> Result<(), NetError> {
+        let payload = read_frame_expect(&mut self.rx, FrameKind::Data, what)?;
+        if payload.len() != out.len() * BYTES_F32 {
+            return Err(NetError::Malformed {
+                what: what.to_string(),
+                detail: format!(
+                    "ring chunk carries {} bytes, schedule expects {}",
+                    payload.len(),
+                    out.len() * BYTES_F32
+                ),
+            });
+        }
+        let mut r = Reader::new(&payload, what);
+        r.f32s_into(out, "chunk")?;
+        r.finish()
+    }
+}
+
+/// Wire-byte counters one worker reports back per collective, payload
+/// bytes only (frame headers excluded — the ledger meters the simulated
+/// collective's data movement, exactly like the other backends).
+#[derive(Default)]
+struct Counters {
+    sent_intra: u64,
+    sent_inter: u64,
+    recv_intra: u64,
+    recv_inter: u64,
+}
+
+/// Entry point for `tsr _worker` — never returns.
+pub fn worker_main(args: &Args) -> ! {
+    let need = |key: &str| -> String {
+        args.get(key).map(str::to_string).unwrap_or_else(|| {
+            eprintln!("tsr _worker: missing required --{key} (internal subcommand)");
+            std::process::exit(2);
+        })
+    };
+    let rank: usize = need("rank").parse().unwrap_or_else(|_| {
+        eprintln!("tsr _worker: --rank must be an integer");
+        std::process::exit(2);
+    });
+    let world: usize = need("world").parse().unwrap_or_else(|_| {
+        eprintln!("tsr _worker: --world must be an integer");
+        std::process::exit(2);
+    });
+    let addr: SocketAddr = need("connect").parse().unwrap_or_else(|_| {
+        eprintln!("tsr _worker: --connect must be a socket address");
+        std::process::exit(2);
+    });
+    let token: u64 = need("token").parse().unwrap_or_else(|_| {
+        eprintln!("tsr _worker: --token must be an integer");
+        std::process::exit(2);
+    });
+    match run(rank, world, addr, token) {
+        Ok(()) => std::process::exit(0),
+        Err(e) => {
+            eprintln!("tsr _worker rank {rank}/{world}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(rank: usize, world: usize, addr: SocketAddr, token: u64) -> Result<(), NetError> {
+    let what = format!("worker {rank} control");
+    let mut ctrl = connect_peer(addr, &what)?;
+
+    // Rendezvous: open a peer listener, tell the coordinator its port,
+    // learn everyone else's, and form the full mesh — lower ranks are
+    // dialed, higher ranks dial us and identify themselves by PeerHello.
+    let listener = bind_localhost(&what)?;
+    let my_port = listener
+        .local_addr()
+        .map_err(|e| NetError::from_io(&what, e))?
+        .port();
+    let hello = Builder::new()
+        .u32(WIRE_VERSION)
+        .u64(token)
+        .u32(rank as u32)
+        .u32(world as u32)
+        .u16(my_port)
+        .build();
+    write_frame(&mut ctrl, FrameKind::Hello, &hello, &what)?;
+
+    let peers_payload = read_frame_expect(&mut ctrl, FrameKind::Peers, &what)?;
+    let mut r = Reader::new(&peers_payload, &what);
+    let peer_world = r.u32("world")? as usize;
+    if peer_world != world {
+        return Err(NetError::Malformed {
+            what: what.clone(),
+            detail: format!("coordinator says world={peer_world}, spawned with --world {world}"),
+        });
+    }
+    let mut ports = vec![0u16; world];
+    for p in ports.iter_mut() {
+        *p = r.u16("peer_port")?;
+    }
+    r.finish()?;
+
+    let mut links: Vec<Option<Link>> = (0..world).map(|_| None).collect();
+    for (peer, &port) in ports.iter().enumerate().take(rank) {
+        let link_what = format!("worker {rank} -> peer {peer}");
+        let mut s = connect_peer(SocketAddr::from(([127, 0, 0, 1], port)), &link_what)?;
+        let ph = Builder::new().u64(token).u32(rank as u32).build();
+        write_frame(&mut s, FrameKind::PeerHello, &ph, &link_what)?;
+        links[peer] = Some(Link::new(s, &link_what)?);
+    }
+    for _ in rank + 1..world {
+        let accept_what = format!("worker {rank} peer accept");
+        let mut s = accept_deadline(&listener, &accept_what)?;
+        let ph = read_frame_expect(&mut s, FrameKind::PeerHello, &accept_what)?;
+        let mut r = Reader::new(&ph, &accept_what);
+        let peer_token = r.u64("token")?;
+        let peer = r.u32("rank")? as usize;
+        r.finish()?;
+        if peer_token != token || peer <= rank || peer >= world || links[peer].is_some() {
+            return Err(NetError::Malformed {
+                what: accept_what,
+                detail: format!("bogus peer hello (rank {peer}, token match: {})", peer_token == token),
+            });
+        }
+        links[peer] = Some(Link::new(s, &format!("worker {rank} <- peer {peer}"))?);
+    }
+    drop(listener);
+
+    let ready = Builder::new().u32(rank as u32).build();
+    write_frame(&mut ctrl, FrameKind::Ready, &ready, "worker ready")?;
+
+    // Serve collectives until Shutdown (or coordinator death = EOF).
+    let mut buf: Vec<f32> = Vec::new();
+    let mut scratch: Vec<f32> = Vec::new();
+    loop {
+        let frame = match wait_frame(&mut ctrl, rank)? {
+            None => return Ok(()), // coordinator gone: exit quietly
+            Some(f) => f,
+        };
+        match frame.kind {
+            FrameKind::Shutdown => return Ok(()),
+            FrameKind::Collective => {
+                serve_collective(rank, world, &frame, &mut ctrl, &mut links, &mut buf, &mut scratch)?
+            }
+            other => {
+                return Err(NetError::UnexpectedKind {
+                    what: format!("worker {rank} control"),
+                    expect: FrameKind::Collective,
+                    got: other,
+                })
+            }
+        }
+    }
+}
+
+/// Idle-wait for the next control frame without tripping the read
+/// deadline: `peek` consumes nothing, so looping on its timeout cannot
+/// desynchronize the frame stream the way a timed-out partial
+/// `read_exact` would. EOF here means the coordinator died — the worker
+/// exits cleanly instead of becoming an orphan.
+fn wait_frame(ctrl: &mut TcpStream, rank: usize) -> Result<Option<Frame>, NetError> {
+    let what = format!("worker {rank} control");
+    let mut probe = [0u8; 1];
+    loop {
+        match ctrl.peek(&mut probe) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return read_frame(ctrl, &what).map(Some),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => {
+                let ne = NetError::from_io(&what, e);
+                if ne.is_disconnect() {
+                    return Ok(None);
+                }
+                return Err(ne);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn serve_collective(
+    rank: usize,
+    world: usize,
+    frame: &Frame,
+    ctrl: &mut TcpStream,
+    links: &mut [Option<Link>],
+    buf: &mut Vec<f32>,
+    scratch: &mut Vec<f32>,
+) -> Result<(), NetError> {
+    let what = format!("worker {rank} collective");
+    let mut r = Reader::new(&frame.payload, &what);
+    let seq = r.u64("seq")?;
+    let nodes = r.u32("nodes")? as usize;
+    let g = r.u32("gpus_per_node")? as usize;
+    let numel = r.u64("numel")? as usize;
+    let inject_fault = r.u8("inject_fault")?;
+    if nodes * g != world {
+        return Err(NetError::Malformed {
+            what: what.clone(),
+            detail: format!("collective shape {nodes}x{g} does not tile world {world}"),
+        });
+    }
+    buf.resize(numel, 0.0);
+    scratch.resize(numel, 0.0);
+    r.f32s_into(buf, "payload")?;
+    r.finish()?;
+
+    if inject_fault != 0 {
+        // Test-only chaos: die exactly mid-collective, after accepting
+        // the request — peers are now blocked on our chunks, which is
+        // the failure the coordinator must detect and classify.
+        eprintln!("tsr _worker rank {rank}: fault injection — exiting mid-collective");
+        std::process::exit(FAULT_EXIT_CODE);
+    }
+
+    let c = allreduce(rank, nodes, g, buf, scratch, links)?;
+
+    let result = Builder::new()
+        .u64(seq)
+        .u64(c.sent_intra)
+        .u64(c.sent_inter)
+        .u64(c.recv_intra)
+        .u64(c.recv_inter)
+        .f32s(buf)
+        .build();
+    write_frame(ctrl, FrameKind::Result, &result, &what)
+}
+
+/// The two-level hierarchical all-reduce (average), socket-ring push
+/// form — phase-for-phase the schedule of `exec::threaded::
+/// worker_thread`, with message arrival standing in for the barriers
+/// (a chunk can only be received after its sender finished producing
+/// it, which is exactly the ordering the barriers enforced).
+fn allreduce(
+    rank: usize,
+    nodes: usize,
+    g: usize,
+    buf: &mut [f32],
+    scratch: &mut [f32],
+    links: &mut [Option<Link>],
+) -> Result<Counters, NetError> {
+    let n = nodes * g;
+    let numel = buf.len();
+    let mut c = Counters::default();
+    if n > 1 {
+        if nodes == 1 || g == 1 {
+            // Flat ring over everyone on the single link class.
+            let group: Vec<usize> = (0..n).collect();
+            let (s1, r1) = ring_reduce_scatter(rank, &group, 0, numel, buf, scratch, links)?;
+            let (s2, r2) = ring_all_gather(rank, &group, 0, numel, buf, scratch, links)?;
+            if nodes == 1 {
+                c.sent_intra += (s1 + s2) as u64;
+                c.recv_intra += (r1 + r2) as u64;
+            } else {
+                c.sent_inter += (s1 + s2) as u64;
+                c.recv_inter += (r1 + r2) as u64;
+            }
+        } else {
+            let node = rank / g;
+            let local = rank % g;
+            let intra_group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
+            // Phase 1: intra-node ring reduce-scatter.
+            let (s, r) = ring_reduce_scatter(local, &intra_group, 0, numel, buf, scratch, links)?;
+            c.sent_intra += s as u64;
+            c.recv_intra += r as u64;
+            // Phase 2: local index i owns chunk (i+1) % g after phase 1;
+            // run one cross-node ring over that chunk.
+            let chunk = (local + 1) % g;
+            let starts = chunk_starts(0, numel, g);
+            let inter_group: Vec<usize> = (0..nodes).map(|nd| nd * g + local).collect();
+            let (clo, chi) = (starts[chunk], starts[chunk + 1]);
+            let (s, r) = ring_reduce_scatter(node, &inter_group, clo, chi, buf, scratch, links)?;
+            c.sent_inter += s as u64;
+            c.recv_inter += r as u64;
+            let (s, r) = ring_all_gather(node, &inter_group, clo, chi, buf, scratch, links)?;
+            c.sent_inter += s as u64;
+            c.recv_inter += r as u64;
+            // Phase 3: intra-node all-gather broadcasts the global chunks.
+            let (s, r) = ring_all_gather(local, &intra_group, 0, numel, buf, scratch, links)?;
+            c.sent_intra += s as u64;
+            c.recv_intra += r as u64;
+        }
+    }
+    // Same final scale as the sequential/threaded backends: each worker
+    // multiplies its own buffer by the f32 1/n once, after all rings.
+    let inv = 1.0 / n as f32;
+    for v in buf.iter_mut() {
+        *v *= inv;
+    }
+    Ok(c)
+}
+
+/// Ring reduce-scatter (sum) over `group` from group position `pos`,
+/// push form. Returns `(sent, received)` payload bytes. Zero-length
+/// ragged chunks are skipped symmetrically on both sides (no frame).
+fn ring_reduce_scatter(
+    pos: usize,
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    buf: &mut [f32],
+    scratch: &mut [f32],
+    links: &mut [Option<Link>],
+) -> Result<(usize, usize), NetError> {
+    let m = group.len();
+    if m <= 1 {
+        return Ok((0, 0));
+    }
+    let starts = chunk_starts(lo, hi, m);
+    let succ = group[(pos + 1) % m];
+    let pred_pos = (pos + m - 1) % m;
+    let pred = group[pred_pos];
+    let (mut sent, mut recvd) = (0usize, 0usize);
+    for step in 0..m - 1 {
+        // Send chunk (pos − step) mod m to the successor…
+        let cs = (pos + m - step) % m;
+        let (slo, shi) = (starts[cs], starts[cs + 1]);
+        if shi > slo {
+            link(links, succ)?.send_chunk(&buf[slo..shi], "ring rs send")?;
+            sent += (shi - slo) * BYTES_F32;
+        }
+        // …and accumulate chunk (pred − step) mod m from the
+        // predecessor, elementwise in index order (the sequential
+        // backend's exact addition order for this element).
+        let cr = (pred_pos + m - step) % m;
+        let (rlo, rhi) = (starts[cr], starts[cr + 1]);
+        if rhi > rlo {
+            let tmp = &mut scratch[..rhi - rlo];
+            link(links, pred)?.recv_chunk(tmp, "ring rs recv")?;
+            for (d, s) in buf[rlo..rhi].iter_mut().zip(tmp.iter()) {
+                *d += *s;
+            }
+            recvd += (rhi - rlo) * BYTES_F32;
+        }
+    }
+    Ok((sent, recvd))
+}
+
+/// Ring all-gather over `group`, push form, assuming the ownership
+/// layout [`ring_reduce_scatter`] produces. Returns `(sent, received)`
+/// payload bytes.
+fn ring_all_gather(
+    pos: usize,
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    buf: &mut [f32],
+    scratch: &mut [f32],
+    links: &mut [Option<Link>],
+) -> Result<(usize, usize), NetError> {
+    let m = group.len();
+    if m <= 1 {
+        return Ok((0, 0));
+    }
+    let starts = chunk_starts(lo, hi, m);
+    let succ = group[(pos + 1) % m];
+    let pred_pos = (pos + m - 1) % m;
+    let pred = group[pred_pos];
+    let (mut sent, mut recvd) = (0usize, 0usize);
+    for step in 0..m - 1 {
+        let cs = (pos + 1 + m - step) % m;
+        let (slo, shi) = (starts[cs], starts[cs + 1]);
+        if shi > slo {
+            link(links, succ)?.send_chunk(&buf[slo..shi], "ring ag send")?;
+            sent += (shi - slo) * BYTES_F32;
+        }
+        let cr = (pred_pos + 1 + m - step) % m;
+        let (rlo, rhi) = (starts[cr], starts[cr + 1]);
+        if rhi > rlo {
+            let tmp = &mut scratch[..rhi - rlo];
+            link(links, pred)?.recv_chunk(tmp, "ring ag recv")?;
+            buf[rlo..rhi].copy_from_slice(tmp);
+            recvd += (rhi - rlo) * BYTES_F32;
+        }
+    }
+    Ok((sent, recvd))
+}
+
+fn link(links: &mut [Option<Link>], peer: usize) -> Result<&mut Link, NetError> {
+    links[peer].as_mut().ok_or_else(|| NetError::Malformed {
+        what: "ring".into(),
+        detail: format!("no mesh link to peer {peer}"),
+    })
+}

@@ -41,14 +41,7 @@ struct SharedBufs {
 // required happens-before edges between steps.
 unsafe impl Sync for SharedBufs {}
 
-/// Chunk boundaries `lo + c·(hi−lo)/m` for `c = 0..=m` — the single
-/// splitting rule every ring in this module uses. Must stay identical
-/// to the boundaries in `comm::collective`'s sequential primitives (the
-/// parity suite pins the two implementations to each other).
-fn chunk_starts(lo: usize, hi: usize, m: usize) -> Vec<usize> {
-    let len = hi - lo;
-    (0..=m).map(|c| lo + c * len / m).collect()
-}
+use crate::exec::chunk_starts;
 
 /// Two-level hierarchical all-reduce (average) run by one OS thread per
 /// worker. Same layout contract as `collective::hier_allreduce_mean`:

@@ -24,6 +24,7 @@ pub mod exp;
 pub mod linalg;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod nn;
 pub mod optim;
 pub mod resilience;

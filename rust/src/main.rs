@@ -17,6 +17,10 @@ use tsr::util::cli::Args;
 fn main() {
     let args = Args::from_env();
     match args.subcommand.as_deref() {
+        // Hidden: child side of the process execution backend — this
+        // binary re-executed as one simulated worker (DESIGN.md §12).
+        // Dispatched first so a worker never touches artifacts/results.
+        Some("_worker") => tsr::exec::process::worker::worker_main(&args),
         Some("table1") => {
             let m = args.get_usize("m", 4096);
             let n = args.get_usize("n", 4096);
@@ -157,8 +161,10 @@ fn main() {
                  [--k-var N] [--keep-frac F]\
                  \n            --workers N       simulated data-parallel workers (default 4)\
                  \n            --backend B       execution backend: sequential | threaded \
-                 (default $TSR_BACKEND or sequential; both are bitwise-identical — \
-                 threaded runs one OS thread per worker, see DESIGN.md §8)\
+                 | process (default $TSR_BACKEND or sequential; all three are \
+                 bitwise-identical — threaded runs one OS thread per worker, \
+                 process one OS process per worker over localhost sockets, see \
+                 DESIGN.md §8, §12)\
                  \n            --source S        gradient source: quad | lm | pjrt \
                  (default pjrt). quad = synthetic low-rank quadratic; lm = native \
                  pure-Rust transformer LM on the synthetic corpus ([--vocab V \
@@ -183,11 +189,15 @@ fn write_results(name: &str, j: &tsr::util::json::Json) {
     println!("\n-> wrote {}", p.display());
 }
 
-/// `--backend sequential|threaded`, falling back to `$TSR_BACKEND`.
+/// `--backend sequential|threaded|process`, falling back to
+/// `$TSR_BACKEND`. Unknown names exit loudly with the valid list —
+/// same strictness as `--source`.
 fn backend_from_args(args: &Args) -> tsr::exec::ExecBackend {
     match args.get("backend") {
-        Some(name) => tsr::exec::ExecBackend::parse(name)
-            .unwrap_or_else(|| panic!("unknown backend {name} (sequential|threaded)")),
+        Some(name) => tsr::exec::ExecBackend::parse(name).unwrap_or_else(|e| {
+            eprintln!("error: --backend: {e}");
+            std::process::exit(2);
+        }),
         None => tsr::exec::ExecBackend::from_env(),
     }
 }
@@ -476,7 +486,8 @@ fn run_train_synth(args: &Args) {
         ),
     };
 
-    let mut trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend);
+    let mut trainer =
+        Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend.sized_for(workers));
     let save_every = args.get_usize("save-every", 0);
     if save_every > 0 {
         // New manifests echo the RESOLVED run shape: a resume that
@@ -587,7 +598,7 @@ fn run_train_pjrt(args: &Args) {
         Topology::multi_node(2, workers.div_ceil(2)),
         LrSchedule::paper(steps),
     )
-    .with_backend(backend_from_args(args));
+    .with_backend(backend_from_args(args).sized_for(workers));
     trainer.verbose = true;
     trainer.log_every = args.get_usize("log-every", 10);
     trainer.sim = Some(tsr::sim::SimCfg {

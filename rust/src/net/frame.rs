@@ -1,0 +1,445 @@
+//! Length-prefixed frame codec for the process-backend wire protocol
+//! (DESIGN.md §12).
+//!
+//! Every message on every socket — coordinator↔worker control links and
+//! worker↔worker ring links alike — is one frame:
+//!
+//! ```text
+//! [ payload_len: u32 LE ][ kind: u8 ][ crc: u32 LE ][ payload bytes ]
+//! ```
+//!
+//! `crc` is FNV-1a over the payload, so a torn or bit-flipped frame is
+//! detected as corruption rather than silently decoded into garbage
+//! f32s. Corruption, truncation, timeout, and disconnection each map to
+//! a **distinct** [`NetError`] variant with its own message — the error
+//! taxonomy the coordinator uses to tell "worker died" from "worker sent
+//! garbage" from "worker hung".
+//!
+//! All multi-byte integers and all f32 payloads are little-endian bit
+//! patterns (`to_le_bytes`/`from_le_bytes`), so a buffer survives the
+//! wire round trip **bitwise** — the process backend's determinism
+//! contract rests on this plus the ring schedule itself.
+
+use std::io::{Read, Write};
+
+/// Wire protocol version, exchanged in every `Hello`; a coordinator and
+/// worker from different builds refuse each other loudly.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Hard upper bound on a frame payload (1 GiB). A length prefix above
+/// this is corruption by definition — no collective in this repo ships
+/// a larger object — and is rejected before any allocation.
+pub const MAX_FRAME_PAYLOAD: usize = 1 << 30;
+
+/// Frame header size: payload_len (4) + kind (1) + crc (4).
+pub const HEADER_BYTES: usize = 9;
+
+/// Every message type in the protocol (DESIGN.md §12 lifecycle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// worker → coordinator: `{version, token, rank, peer_port}`.
+    Hello = 1,
+    /// coordinator → worker: everyone's peer-listener ports.
+    Peers = 2,
+    /// worker → worker on a fresh mesh link: `{token, rank}`.
+    PeerHello = 3,
+    /// worker → coordinator: mesh formed, ready for collectives.
+    Ready = 4,
+    /// coordinator → worker: one collective request + this worker's
+    /// buffer: `{op, nodes, gpus_per_node, numel, f32 payload}`.
+    Collective = 5,
+    /// worker → worker: one ring chunk (raw f32 payload).
+    Data = 6,
+    /// worker → coordinator: wire-byte counters + the reduced buffer.
+    Result = 7,
+    /// coordinator → worker: exit cleanly.
+    Shutdown = 8,
+}
+
+impl FrameKind {
+    pub fn from_u8(b: u8) -> Option<Self> {
+        Some(match b {
+            1 => Self::Hello,
+            2 => Self::Peers,
+            3 => Self::PeerHello,
+            4 => Self::Ready,
+            5 => Self::Collective,
+            6 => Self::Data,
+            7 => Self::Result,
+            8 => Self::Shutdown,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Hello => "hello",
+            Self::Peers => "peers",
+            Self::PeerHello => "peer-hello",
+            Self::Ready => "ready",
+            Self::Collective => "collective",
+            Self::Data => "data",
+            Self::Result => "result",
+            Self::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// The wire-layer error taxonomy. Variants are deliberately distinct so
+/// callers (and humans reading a panic) can tell a dead peer from a
+/// hung peer from a corrupt stream — the §12 robustness contract.
+#[derive(Debug)]
+pub enum NetError {
+    /// The peer closed (or reset) the connection.
+    Disconnected { what: String, detail: String },
+    /// A blocking read/write exceeded its deadline.
+    Timeout { what: String },
+    /// Frame corruption: unknown kind byte.
+    BadKind { what: String, kind: u8 },
+    /// Frame corruption: length prefix beyond [`MAX_FRAME_PAYLOAD`].
+    BadLength { what: String, len: u64 },
+    /// Frame corruption: payload checksum mismatch.
+    BadChecksum { what: String, expect: u32, got: u32 },
+    /// A structurally valid frame whose payload does not decode (short
+    /// fields, trailing bytes, impossible values).
+    Malformed { what: String, detail: String },
+    /// A valid frame of the wrong kind for this point in the protocol.
+    UnexpectedKind {
+        what: String,
+        expect: FrameKind,
+        got: FrameKind,
+    },
+    /// Any other I/O failure.
+    Io { what: String, err: std::io::Error },
+}
+
+impl NetError {
+    /// True when the peer is gone (process death shows up as this).
+    pub fn is_disconnect(&self) -> bool {
+        matches!(self, Self::Disconnected { .. })
+    }
+
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Self::Timeout { .. })
+    }
+
+    /// Classify an `std::io::Error` from a read/write on `what`.
+    pub fn from_io(what: &str, err: std::io::Error) -> Self {
+        use std::io::ErrorKind as K;
+        match err.kind() {
+            K::UnexpectedEof | K::ConnectionReset | K::ConnectionAborted | K::BrokenPipe => {
+                Self::Disconnected {
+                    what: what.to_string(),
+                    detail: err.to_string(),
+                }
+            }
+            K::WouldBlock | K::TimedOut => Self::Timeout {
+                what: what.to_string(),
+            },
+            _ => Self::Io {
+                what: what.to_string(),
+                err,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Disconnected { what, detail } => {
+                write!(f, "{what}: peer disconnected ({detail})")
+            }
+            Self::Timeout { what } => write!(f, "{what}: deadline exceeded"),
+            Self::BadKind { what, kind } => {
+                write!(f, "{what}: corrupt frame (unknown kind byte 0x{kind:02x})")
+            }
+            Self::BadLength { what, len } => write!(
+                f,
+                "{what}: corrupt frame (length prefix {len} exceeds {MAX_FRAME_PAYLOAD})"
+            ),
+            Self::BadChecksum { what, expect, got } => write!(
+                f,
+                "{what}: corrupt frame (checksum {got:08x}, header says {expect:08x})"
+            ),
+            Self::Malformed { what, detail } => write!(f, "{what}: malformed payload ({detail})"),
+            Self::UnexpectedKind { what, expect, got } => write!(
+                f,
+                "{what}: protocol violation (expected {} frame, got {})",
+                expect.name(),
+                got.name()
+            ),
+            Self::Io { what, err } => write!(f, "{what}: io error ({err})"),
+        }
+    }
+}
+
+/// FNV-1a over `bytes` — the per-frame payload checksum.
+pub fn fnv1a32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// One decoded frame.
+#[derive(Debug)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+/// Encode a frame into its full wire byte sequence (header + payload) —
+/// the unit the worker's writer threads queue and `write_all`.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() <= MAX_FRAME_PAYLOAD, "frame payload too large");
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.push(kind as u8);
+    out.extend_from_slice(&fnv1a32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame (blocking, honoring the stream's write timeout).
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, payload: &[u8], what: &str) -> Result<(), NetError> {
+    w.write_all(&encode_frame(kind, payload))
+        .map_err(|e| NetError::from_io(what, e))
+}
+
+/// Read one frame (blocking, honoring the stream's read timeout),
+/// validating kind, length, and checksum.
+pub fn read_frame(r: &mut impl Read, what: &str) -> Result<Frame, NetError> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header).map_err(|e| NetError::from_io(what, e))?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_PAYLOAD {
+        return Err(NetError::BadLength {
+            what: what.to_string(),
+            len: len as u64,
+        });
+    }
+    let kind = FrameKind::from_u8(header[4]).ok_or_else(|| NetError::BadKind {
+        what: what.to_string(),
+        kind: header[4],
+    })?;
+    let expect_crc = u32::from_le_bytes(header[5..9].try_into().unwrap());
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| NetError::from_io(what, e))?;
+    let got_crc = fnv1a32(&payload);
+    if got_crc != expect_crc {
+        return Err(NetError::BadChecksum {
+            what: what.to_string(),
+            expect: expect_crc,
+            got: got_crc,
+        });
+    }
+    Ok(Frame { kind, payload })
+}
+
+/// Read one frame and insist on its kind.
+pub fn read_frame_expect(
+    r: &mut impl Read,
+    expect: FrameKind,
+    what: &str,
+) -> Result<Vec<u8>, NetError> {
+    let fr = read_frame(r, what)?;
+    if fr.kind != expect {
+        return Err(NetError::UnexpectedKind {
+            what: what.to_string(),
+            expect,
+            got: fr.kind,
+        });
+    }
+    Ok(fr.payload)
+}
+
+// ---------------------------------------------------------------------
+// Payload encode/decode helpers. All little-endian; f32s as bit
+// patterns (bitwise round trip).
+// ---------------------------------------------------------------------
+
+/// Payload builder.
+#[derive(Default)]
+pub struct Builder(Vec<u8>);
+
+impl Builder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn u8(mut self, v: u8) -> Self {
+        self.0.push(v);
+        self
+    }
+    pub fn u16(mut self, v: u16) -> Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u32(mut self, v: u32) -> Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn u64(mut self, v: u64) -> Self {
+        self.0.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+    pub fn f32s(mut self, vs: &[f32]) -> Self {
+        self.0.reserve(vs.len() * 4);
+        for v in vs {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        self
+    }
+    pub fn build(self) -> Vec<u8> {
+        self.0
+    }
+}
+
+/// Payload reader over a decoded frame; every `take_*` underflow and any
+/// trailing garbage at `finish()` is a [`NetError::Malformed`].
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    what: &'a str,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8], what: &'a str) -> Self {
+        Self { buf, pos: 0, what }
+    }
+
+    fn take(&mut self, n: usize, field: &str) -> Result<&'a [u8], NetError> {
+        if self.pos + n > self.buf.len() {
+            return Err(NetError::Malformed {
+                what: self.what.to_string(),
+                detail: format!(
+                    "field `{field}` needs {n} bytes at offset {}, payload has {}",
+                    self.pos,
+                    self.buf.len()
+                ),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, field: &str) -> Result<u8, NetError> {
+        Ok(self.take(1, field)?[0])
+    }
+    pub fn u16(&mut self, field: &str) -> Result<u16, NetError> {
+        Ok(u16::from_le_bytes(self.take(2, field)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self, field: &str) -> Result<u32, NetError> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self, field: &str) -> Result<u64, NetError> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().unwrap()))
+    }
+
+    /// Decode exactly `out.len()` f32 bit patterns into `out`.
+    pub fn f32s_into(&mut self, out: &mut [f32], field: &str) -> Result<(), NetError> {
+        let raw = self.take(out.len() * 4, field)?;
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = f32::from_le_bytes(raw[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// The payload must be fully consumed — trailing bytes are
+    /// corruption, not slack.
+    pub fn finish(self) -> Result<(), NetError> {
+        if self.pos != self.buf.len() {
+            return Err(NetError::Malformed {
+                what: self.what.to_string(),
+                detail: format!(
+                    "{} trailing bytes after the last field",
+                    self.buf.len() - self.pos
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_is_bitwise() {
+        let vals = [1.5f32, -0.0, f32::NAN, 3.4e-39 /* subnormal */, 7.25];
+        let payload = Builder::new().u32(9).u64(u64::MAX).f32s(&vals).build();
+        let wire = encode_frame(FrameKind::Collective, &payload);
+        let fr = read_frame(&mut Cursor::new(&wire), "t").unwrap();
+        assert_eq!(fr.kind, FrameKind::Collective);
+        let mut r = Reader::new(&fr.payload, "t");
+        assert_eq!(r.u32("a").unwrap(), 9);
+        assert_eq!(r.u64("b").unwrap(), u64::MAX);
+        let mut back = [0f32; 5];
+        r.f32s_into(&mut back, "c").unwrap();
+        r.finish().unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn corruption_kinds_produce_distinct_errors() {
+        let wire = encode_frame(FrameKind::Data, &[1, 2, 3, 4]);
+
+        // (a) Unknown kind byte.
+        let mut bad = wire.clone();
+        bad[4] = 0xEE;
+        let e_kind = read_frame(&mut Cursor::new(&bad), "t").unwrap_err().to_string();
+        assert!(e_kind.contains("unknown kind byte 0xee"), "{e_kind}");
+
+        // (b) Absurd length prefix.
+        let mut bad = wire.clone();
+        bad[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let e_len = read_frame(&mut Cursor::new(&bad), "t").unwrap_err().to_string();
+        assert!(e_len.contains("length prefix"), "{e_len}");
+
+        // (c) Flipped payload bit -> checksum mismatch.
+        let mut bad = wire.clone();
+        *bad.last_mut().unwrap() ^= 0x40;
+        let e_crc = read_frame(&mut Cursor::new(&bad), "t").unwrap_err().to_string();
+        assert!(e_crc.contains("checksum"), "{e_crc}");
+
+        // (d) Truncated stream -> disconnect, not a decode error.
+        let err = read_frame(&mut Cursor::new(&wire[..wire.len() - 1]), "t").unwrap_err();
+        assert!(err.is_disconnect(), "{err}");
+
+        // All four diagnoses are pairwise distinct.
+        let msgs = [e_kind, e_len, e_crc, err.to_string()];
+        for i in 0..msgs.len() {
+            for j in i + 1..msgs.len() {
+                assert_ne!(msgs[i], msgs[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_kind_at_protocol_point_is_its_own_error() {
+        let wire = encode_frame(FrameKind::Data, &[]);
+        let err = read_frame_expect(&mut Cursor::new(&wire), FrameKind::Result, "t").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("expected result frame, got data"), "{msg}");
+    }
+
+    #[test]
+    fn reader_rejects_short_fields_and_trailing_bytes() {
+        let payload = Builder::new().u32(5).build();
+        let mut r = Reader::new(&payload, "t");
+        assert!(r.u64("too-big").is_err());
+
+        let payload = Builder::new().u32(5).u8(1).build();
+        let mut r = Reader::new(&payload, "t");
+        r.u32("a").unwrap();
+        assert!(r.finish().is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Minimal localhost wire layer for the process execution backend
+//! (DESIGN.md §12).
+//!
+//! Everything here is deliberately small: loopback TCP only, one frame
+//! codec ([`frame`]), and a handful of connection helpers that encode
+//! the robustness contract — **every blocking operation has a
+//! deadline**, bind retries with backoff, and failures classify into
+//! the distinct [`frame::NetError`] taxonomy instead of a generic io
+//! error string.
+
+pub mod frame;
+
+pub use frame::{
+    encode_frame, read_frame, read_frame_expect, write_frame, Builder, Frame, FrameKind, NetError,
+    Reader, HEADER_BYTES, MAX_FRAME_PAYLOAD, WIRE_VERSION,
+};
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Deadline applied to every blocking socket operation (reads, writes,
+/// accepts, connects). Overridable via `TSR_NET_TIMEOUT_MS` so tests
+/// can shrink it; the default is generous because CI machines stall.
+pub fn io_deadline() -> Duration {
+    let ms = std::env::var("TSR_NET_TIMEOUT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(20_000);
+    Duration::from_millis(ms.max(1))
+}
+
+/// Bind a loopback listener on an ephemeral port, retrying with backoff.
+///
+/// Port 0 makes the kernel pick a free port, so collisions are rare —
+/// but address-space exhaustion and transient EADDRINUSE under heavy
+/// parallel test load do happen, hence the retry loop.
+pub fn bind_localhost(what: &str) -> Result<TcpListener, NetError> {
+    let deadline = Instant::now() + io_deadline();
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        match TcpListener::bind(("127.0.0.1", 0)) {
+            Ok(l) => return Ok(l),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(NetError::Io {
+                        what: format!("{what}: bind 127.0.0.1:0"),
+                        err: e,
+                    });
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Accept one connection with a deadline (a plain `accept()` blocks
+/// forever if the expected peer died before connecting).
+pub fn accept_deadline(listener: &TcpListener, what: &str) -> Result<TcpStream, NetError> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| NetError::from_io(what, e))?;
+    let deadline = Instant::now() + io_deadline();
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream
+                    .set_nonblocking(false)
+                    .map_err(|e| NetError::from_io(what, e))?;
+                configure_stream(&stream, what)?;
+                return Ok(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(NetError::Timeout {
+                        what: format!("{what}: accept"),
+                    });
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(NetError::from_io(what, e)),
+        }
+    }
+}
+
+/// Connect to a loopback peer, retrying until the deadline (the peer's
+/// listener may not be up yet during rendezvous).
+pub fn connect_peer(addr: SocketAddr, what: &str) -> Result<TcpStream, NetError> {
+    let deadline = Instant::now() + io_deadline();
+    let mut backoff = Duration::from_millis(5);
+    loop {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            Ok(stream) => {
+                configure_stream(&stream, what)?;
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(NetError::Io {
+                        what: format!("{what}: connect {addr}"),
+                        err: e,
+                    });
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(200));
+            }
+        }
+    }
+}
+
+/// Apply the standard socket configuration: no Nagle batching (ring
+/// chunks are latency-bound) and read/write timeouts so no frame
+/// exchange can hang past the deadline.
+pub fn configure_stream(stream: &TcpStream, what: &str) -> Result<(), NetError> {
+    stream
+        .set_nodelay(true)
+        .map_err(|e| NetError::from_io(what, e))?;
+    stream
+        .set_read_timeout(Some(io_deadline()))
+        .map_err(|e| NetError::from_io(what, e))?;
+    stream
+        .set_write_timeout(Some(io_deadline()))
+        .map_err(|e| NetError::from_io(what, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn frames_cross_a_real_socket_bitwise() {
+        let listener = bind_localhost("test").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32).sin()).collect();
+        let payload = Builder::new().u32(7).f32s(&vals).build();
+        let sent = payload.clone();
+        let child = std::thread::spawn(move || {
+            let mut s = connect_peer(addr, "test-client").unwrap();
+            write_frame(&mut s, FrameKind::Data, &sent, "test-client").unwrap();
+        });
+        let mut conn = accept_deadline(&listener, "test-server").unwrap();
+        let got = read_frame_expect(&mut conn, FrameKind::Data, "test-server").unwrap();
+        child.join().unwrap();
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn accept_times_out_when_no_peer_connects() {
+        let listener = bind_localhost("test").unwrap();
+        // Shrink the deadline locally: accept_deadline reads io_deadline()
+        // once, so drive the wait with a tiny env override via a direct
+        // nonblocking loop instead — here we just assert the mechanism by
+        // using a listener nobody connects to and a short manual deadline.
+        listener.set_nonblocking(true).unwrap();
+        let start = std::time::Instant::now();
+        let deadline = start + Duration::from_millis(50);
+        let mut timed_out = false;
+        loop {
+            match listener.accept() {
+                Ok(_) => break,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if std::time::Instant::now() >= deadline {
+                        timed_out = true;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => break,
+            }
+        }
+        assert!(timed_out);
+    }
+
+    #[test]
+    fn read_deadline_fires_as_timeout_error() {
+        let listener = bind_localhost("test").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let child = std::thread::spawn(move || {
+            // Connect, send half a header, then stall (but keep the
+            // socket open so the reader sees a timeout, not an EOF).
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&[1, 2, 3]).unwrap();
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let conn = accept_deadline(&listener, "test-server").unwrap();
+        conn.set_read_timeout(Some(Duration::from_millis(50))).unwrap();
+        let mut conn = conn;
+        let err = read_frame(&mut conn, "test-server").unwrap_err();
+        assert!(err.is_timeout(), "expected timeout, got: {err}");
+        child.join().unwrap();
+    }
+}

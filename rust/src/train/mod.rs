@@ -58,9 +58,10 @@ pub struct Trainer {
     /// exposed-communication time into the run metrics.
     pub sim: Option<SimCfg>,
     /// Execution backend for collectives and hot-path parallelism
-    /// (DESIGN.md §8). Defaults to `TSR_BACKEND` (else sequential);
-    /// `tsr train --backend threaded` overrides it. Both backends are
-    /// bitwise-identical, so any run is reproducible across them.
+    /// (DESIGN.md §8, §12). Defaults to `TSR_BACKEND` (else
+    /// sequential); `tsr train --backend threaded|process` overrides
+    /// it. All three backends are bitwise-identical, so any run is
+    /// reproducible across them.
     pub exec: ExecBackend,
     /// When set, a checkpoint manifest is written every
     /// `ckpt.every` completed steps (DESIGN.md §9).
@@ -133,6 +134,13 @@ impl Trainer {
         mut ledger: CommLedger,
     ) -> (RunMetrics, CommLedger) {
         let workers = source.workers();
+        if self.exec.is_process() {
+            // Spawn the worker group before step 0: the spawn cost
+            // lands outside the step timings, and a broken environment
+            // (unresolvable worker binary, exhausted ports) fails
+            // loudly at startup instead of at the first collective.
+            crate::exec::process::ensure_group(workers);
+        }
         let mut grads = crate::optim::alloc_worker_grads(source.blocks(), workers);
 
         for t in start_step..steps {

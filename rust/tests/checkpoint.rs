@@ -10,6 +10,7 @@
 
 use tsr::checkpoint::Checkpoint;
 use tsr::comm::{CommLedger, Topology};
+use tsr::exec::ExecBackend;
 use tsr::exp::MethodCfg;
 use tsr::linalg::Matrix;
 use tsr::metrics::RunMetrics;
@@ -46,6 +47,13 @@ fn all_seven(k: usize) -> Vec<MethodCfg> {
 }
 
 const WORKERS: usize = 2;
+
+/// Process backend with the worker binary pinned to the real `tsr`
+/// executable (this test harness binary cannot re-exec as a worker).
+fn process_exec() -> ExecBackend {
+    tsr::exec::process::set_worker_binary(std::path::PathBuf::from(env!("CARGO_BIN_EXE_tsr")));
+    ExecBackend::process()
+}
 
 fn fresh_setup(m: &MethodCfg) -> (QuadraticSim, Box<dyn DistOptimizer>, Vec<Matrix>) {
     let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
@@ -125,6 +133,72 @@ fn resumed_run_is_byte_identical_to_uninterrupted_for_every_method() {
                 m.label()
             );
         }
+    }
+}
+
+/// Backend-crossing resume (DESIGN.md §9, §12): a checkpoint written
+/// by a **Sequential** run, round-tripped through JSON text, then
+/// resumed under the **Process** backend (real child processes, socket
+/// ring collectives) must be byte-identical to the all-sequential
+/// uninterrupted run — manifests are backend-portable, and the socket
+/// rings keep every post-resume step on the same bit trajectory.
+#[test]
+fn seq_written_checkpoint_resumes_bitwise_under_process_backend() {
+    let k = 5;
+    let steps = 17;
+    let cut = 7;
+    for m in all_seven(k) {
+        // Reference: the uninterrupted run, fully sequential.
+        let full = {
+            let (mut sim, mut opt, mut params) = fresh_setup(&m);
+            let (metrics, ledger) = trainer(steps)
+                .with_backend(ExecBackend::Sequential)
+                .run(&mut sim, opt.as_mut(), &mut params, steps);
+            metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+        };
+
+        // [0, cut) sequential, checkpoint through a JSON text round
+        // trip, resume [cut, steps) on the process backend.
+        let (mut sim, mut opt, mut params) = fresh_setup(&m);
+        let (metrics, ledger) = trainer(steps)
+            .with_backend(ExecBackend::Sequential)
+            .run(&mut sim, opt.as_mut(), &mut params, cut);
+        let ck = Checkpoint::capture(
+            cut as u64,
+            WORKERS,
+            &params,
+            opt.as_ref(),
+            &sim,
+            &metrics,
+            &ledger,
+            Json::Null,
+        );
+        let text = ck.to_json().to_string_pretty();
+        drop((sim, opt, params, metrics, ledger));
+
+        let ck = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let (mut sim, mut opt, _) = fresh_setup(&m);
+        opt.load_state(&ck.opt_state, WORKERS).unwrap();
+        sim.load_state(&ck.source_state).unwrap();
+        let mut params = ck.params.clone();
+        let metrics = RunMetrics::state_from_json(&ck.metrics).unwrap();
+        let ledger = CommLedger::from_json(&ck.ledger).unwrap();
+        let (metrics, ledger) = trainer(steps).with_backend(process_exec()).run_from(
+            &mut sim,
+            opt.as_mut(),
+            &mut params,
+            cut,
+            steps,
+            metrics,
+            ledger,
+        );
+        let resumed = metrics.to_json_deterministic(&ledger, &params).to_string_pretty();
+        assert_eq!(
+            full,
+            resumed,
+            "{}: sequential-written checkpoint diverged when resumed under the process backend",
+            m.label()
+        );
     }
 }
 

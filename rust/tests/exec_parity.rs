@@ -1,12 +1,16 @@
-//! Cross-backend parity suite (DESIGN.md §8): for every method and
-//! topology, the `Threaded` execution backend (one OS thread per
-//! simulated worker, rendezvous ring collectives) must produce
-//! **bitwise-identical** final weights and **identical ledger byte
-//! columns** to the `Sequential` reference loop — the keystone
-//! invariant that makes CI's determinism gate and the BENCH_*
-//! trajectory meaningful. Runs cover a full refresh period so both the
-//! steady-state core syncs and the refresh collectives (sketches /
-//! dense SVD payloads) cross the thread boundary at least once.
+//! Cross-backend parity suite (DESIGN.md §8, §12): for every method
+//! and topology, the `Threaded` execution backend (one OS thread per
+//! simulated worker, rendezvous ring collectives) AND the `Process`
+//! backend (one OS process per worker, socket rings over localhost
+//! TCP) must produce **bitwise-identical** final weights and
+//! **identical ledger byte columns** to the `Sequential` reference
+//! loop — the keystone invariant that makes CI's determinism gate and
+//! the BENCH_* trajectory meaningful. Runs cover a full refresh period
+//! so both the steady-state core syncs and the refresh collectives
+//! (sketches / dense SVD payloads) cross the thread and process
+//! boundaries at least once.
+
+use std::path::PathBuf;
 
 use tsr::comm::{CommLedger, LayerClass, Topology};
 use tsr::exec::ExecBackend;
@@ -18,6 +22,19 @@ use tsr::optim::{AdamHyper, LrSchedule, StepCtx, TsrAdam, TsrConfig};
 use tsr::train::gradsim::QuadraticSim;
 use tsr::train::{GradSource, Trainer};
 use tsr::util::rng::Xoshiro256;
+
+/// Process backend with the worker binary pinned to the real `tsr`
+/// executable (this test harness binary cannot re-exec as a worker).
+fn process_exec() -> ExecBackend {
+    tsr::exec::process::set_worker_binary(PathBuf::from(env!("CARGO_BIN_EXE_tsr")));
+    ExecBackend::process()
+}
+
+/// The backends under test: the sequential reference plus both real
+/// execution backends.
+fn all_backends() -> [ExecBackend; 3] {
+    [ExecBackend::Sequential, ExecBackend::threaded(), process_exec()]
+}
 
 /// All seven methods at parity-test scale, refresh period 4.
 fn all_methods() -> Vec<MethodCfg> {
@@ -92,13 +109,16 @@ fn run_once(
 
 fn assert_backend_parity(method: &MethodCfg, topo: Topology, steps: usize, label: &str) {
     let (w_seq, l_seq) = run_once(method, topo.clone(), ExecBackend::Sequential, steps);
-    let (w_thr, l_thr) = run_once(method, topo, ExecBackend::threaded(), steps);
-    assert_eq!(
-        weight_bits(&w_seq),
-        weight_bits(&w_thr),
-        "{label}: weights must be bitwise identical"
-    );
-    assert_ledgers_equal(&l_seq, &l_thr, label);
+    for exec in [ExecBackend::threaded(), process_exec()] {
+        let bname = exec.name();
+        let (w_other, l_other) = run_once(method, topo.clone(), exec, steps);
+        assert_eq!(
+            weight_bits(&w_seq),
+            weight_bits(&w_other),
+            "{label}/{bname}: weights must be bitwise identical"
+        );
+        assert_ledgers_equal(&l_seq, &l_other, &format!("{label}/{bname}"));
+    }
     // Sanity: the run actually communicated.
     assert!(l_seq.step(0).total > 0, "{label}: no bytes metered");
 }
@@ -119,7 +139,7 @@ fn all_methods_bitwise_identical_across_backends() {
 }
 
 /// Worker count that does not tile the topology (3 workers on a 2×2
-/// cluster): `sync_mean` takes its flat-ring fallback on both backends
+/// cluster): `sync_mean` takes its flat-ring fallback on every backend
 /// — parity must hold there too, byte columns included.
 #[test]
 fn shape_mismatch_fallback_parity() {
@@ -136,7 +156,7 @@ fn shape_mismatch_fallback_parity() {
     ] {
         let spec = ModelSpec::proxy(200, 32, 64, 2, 2);
         let mut outs = Vec::new();
-        for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+        for exec in all_backends() {
             // 3 workers under a 4-worker topology shape.
             let mut sim = QuadraticSim::new(&spec, 3, 16, 0.01, 21);
             let blocks = sim.blocks().to_vec();
@@ -147,16 +167,19 @@ fn shape_mismatch_fallback_parity() {
             let (_m, ledger) = trainer.run(&mut sim, opt.as_mut(), &mut params, 4);
             outs.push((params, ledger));
         }
-        let label = format!("{}/fallback", method.label());
-        assert_eq!(weight_bits(&outs[0].0), weight_bits(&outs[1].0), "{label}");
-        assert_ledgers_equal(&outs[0].1, &outs[1].1, &label);
+        for (i, (w, l)) in outs.iter().enumerate().skip(1) {
+            let label = format!("{}/fallback/{}", method.label(), all_backends()[i].name());
+            assert_eq!(weight_bits(&outs[0].0), weight_bits(w), "{label}");
+            assert_ledgers_equal(&outs[0].1, l, &label);
+        }
     }
 }
 
 /// Ragged-shard regression: a 7×11 block (numel 77) over 3 or 4 workers
 /// leaves unequal ring chunks at every level — single-node flat ring,
 /// leader-ring (gpus_per_node = 1), and the true two-level schedule.
-/// The threaded pull schedule must bit-match the sequential one anyway.
+/// Both the threaded pull schedule and the process push schedule must
+/// bit-match the sequential one anyway.
 #[test]
 fn ragged_shard_numel_not_divisible_by_workers() {
     let blocks = vec![BlockSpec {
@@ -180,7 +203,7 @@ fn ragged_shard_numel_not_divisible_by_workers() {
     ] {
         let workers = topo.workers();
         let mut outs = Vec::new();
-        for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+        for exec in all_backends() {
             let mut opt = TsrAdam::new(&blocks, AdamHyper::default(), cfg.clone());
             let mut params = vec![Matrix::from_fn(7, 11, |i, j| ((i * 3 + j) % 5) as f32 * 0.1)];
             let mut ledger = CommLedger::new();
@@ -201,8 +224,15 @@ fn ragged_shard_numel_not_divisible_by_workers() {
             }
             outs.push((params, ledger));
         }
-        let label = format!("ragged {}x{}", topo.nodes, topo.gpus_per_node);
-        assert_eq!(weight_bits(&outs[0].0), weight_bits(&outs[1].0), "{label}");
-        assert_ledgers_equal(&outs[0].1, &outs[1].1, &label);
+        for (i, (w, l)) in outs.iter().enumerate().skip(1) {
+            let label = format!(
+                "ragged {}x{}/{}",
+                topo.nodes,
+                topo.gpus_per_node,
+                all_backends()[i].name()
+            );
+            assert_eq!(weight_bits(&outs[0].0), weight_bits(w), "{label}");
+            assert_ledgers_equal(&outs[0].1, l, &label);
+        }
     }
 }

@@ -1,0 +1,193 @@
+//! Process-backend integration tests (DESIGN.md §12): real child
+//! processes, real localhost-TCP rings.
+//!
+//! Three contracts pinned here, beyond the cross-backend parity matrix
+//! in `exec_parity.rs`:
+//!
+//! 1. **Bitwise schedule replay** — the socket push-ring produces
+//!    bit-identical results to the sequential reference for every
+//!    topology shape, ragged chunking included.
+//! 2. **Honest metering** — the HierVolume a collective returns (and
+//!    hence the ledger's intra/inter columns) equals the closed-form
+//!    wire volume, and is *measured* from `Data` frame payloads that
+//!    actually crossed the sockets: each worker counts what it wrote
+//!    and what it read, and the coordinator hard-errors unless
+//!    sent == received per link class.
+//! 3. **Loud failure** — a worker killed mid-collective is detected
+//!    well inside the deadline with a distinct, actionable diagnosis;
+//!    the whole group is killed AND reaped (no zombies), and the next
+//!    collective at that world size recovers on a fresh group.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use tsr::comm::{
+    hier_allreduce_mean, hier_volume_bytes, sync_mean, CommLedger, LayerClass, Topology,
+};
+use tsr::exec::{process, ExecBackend};
+use tsr::linalg::Matrix;
+use tsr::util::rng::Xoshiro256;
+
+/// Pin the worker binary to the real `tsr` executable (this libtest
+/// harness binary cannot re-exec as a worker).
+fn setup() {
+    process::set_worker_binary(PathBuf::from(env!("CARGO_BIN_EXE_tsr")));
+}
+
+fn gaussian_workers(n: usize, rows: usize, cols: usize, seed: u64) -> Vec<Matrix> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| Matrix::gaussian(rows, cols, 1.0, &mut rng))
+        .collect()
+}
+
+fn bits(ws: &[Matrix]) -> Vec<Vec<u32>> {
+    ws.iter()
+        .map(|w| w.data.iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+/// Contract 1 + 2: every topology shape — flat intra ring, leader ring,
+/// true two-level, and ragged chunking at each level — bit-matches the
+/// sequential schedule, with the measured socket volume equal to both
+/// the sequential backend's metering and the closed form.
+#[test]
+fn socket_rings_are_bitwise_identical_to_sequential() {
+    setup();
+    for (nodes, g, rows, cols) in [
+        (1usize, 2usize, 3usize, 5usize), // smallest ring
+        (1, 4, 7, 11),                    // flat intra, ragged: 77 % 4 != 0
+        (4, 1, 7, 11),                    // leader ring, ragged
+        (2, 2, 8, 8),                     // two-level, even chunks
+        (2, 3, 7, 11),                    // two-level, ragged at both levels
+    ] {
+        let n = nodes * g;
+        let label = format!("{nodes}x{g} {rows}x{cols}");
+        let mut via_sockets = gaussian_workers(n, rows, cols, 42);
+        let mut reference = via_sockets.clone();
+        let measured = process::allreduce_mean(&mut via_sockets, nodes, g);
+        let expected = hier_allreduce_mean(&mut reference, nodes, g);
+        assert_eq!(bits(&via_sockets), bits(&reference), "{label}: bits");
+        assert_eq!(measured, expected, "{label}: volume vs sequential metering");
+        assert_eq!(
+            measured,
+            hier_volume_bytes(rows * cols, nodes, g),
+            "{label}: volume vs closed form"
+        );
+    }
+}
+
+/// Contract 2, ledger edition: `sync_mean` on the process backend
+/// writes intra/inter columns equal to the measured socket traffic —
+/// which the coordinator has already cross-checked against what the
+/// workers wrote. So: ledger column == frame payload bytes on the wire.
+#[test]
+fn ledger_wire_columns_equal_socket_frame_payloads() {
+    setup();
+    for (topo, rows, cols) in [
+        (Topology::single_node(4), 5, 13), // ragged flat ring
+        (Topology::multi_node(3, 1), 5, 13),
+        (Topology::multi_node(2, 2), 6, 8),
+    ] {
+        let n = topo.workers();
+        let label = format!("{}x{}", topo.nodes, topo.gpus_per_node);
+        let mut ws = gaussian_workers(n, rows, cols, 17);
+        let mut ledger = CommLedger::new();
+        sync_mean(
+            &mut ws,
+            LayerClass::Linear,
+            &mut ledger,
+            &topo,
+            &ExecBackend::process(),
+        );
+        ledger.end_step();
+        let wire = hier_volume_bytes(rows * cols, topo.nodes, topo.gpus_per_node);
+        let rec = ledger.step(0);
+        assert_eq!(rec.intra, wire.intra_bytes, "{label}: intra column");
+        assert_eq!(rec.inter, wire.inter_bytes, "{label}: inter column");
+    }
+}
+
+/// Contract 3: kill a worker mid-collective (in-frame fault injection —
+/// the worker exits the moment it receives the request, so it dies with
+/// the rings in flight). The coordinator must panic with the distinct
+/// child-death diagnosis well inside the I/O deadline, leave no zombie
+/// children, and recover on a fresh group at the same world size.
+#[test]
+fn killed_worker_is_detected_loudly_and_leaves_no_zombies() {
+    setup();
+    // World size 5 is used by no other test in this binary, so the
+    // world-keyed fault cannot be absorbed by a concurrent collective.
+    const WORLD: usize = 5;
+
+    // A healthy collective first: the group is up and has served traffic.
+    let mut ws = gaussian_workers(WORLD, 4, 6, 7);
+    process::allreduce_mean(&mut ws, 1, WORLD);
+
+    process::inject_fault_next_collective(WORLD, 2);
+    let t0 = Instant::now();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        let mut ws = gaussian_workers(WORLD, 4, 6, 8);
+        process::allreduce_mean(&mut ws, 1, WORLD)
+    }));
+    let detect = t0.elapsed();
+
+    let msg = match result {
+        Ok(_) => panic!("collective with a killed worker must not succeed"),
+        Err(p) => p
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default(),
+    };
+    assert!(msg.contains("process backend"), "untagged diagnosis: {msg}");
+    assert!(msg.contains("died mid-collective"), "wrong diagnosis: {msg}");
+    // Detection rides the TCP-reset cascade from the dead process, not
+    // the timeout: it must land well under the 20 s default deadline.
+    assert!(detect < Duration::from_secs(15), "detection took {detect:?}");
+
+    // destroy() killed and reaped the whole group before panicking.
+    assert_no_zombie_children();
+
+    // The pool entry was evicted: the same world size works again,
+    // bitwise-correct, on a freshly spawned group.
+    let mut ws = gaussian_workers(WORLD, 4, 6, 9);
+    let mut reference = ws.clone();
+    let vol = process::allreduce_mean(&mut ws, 1, WORLD);
+    hier_allreduce_mean(&mut reference, 1, WORLD);
+    assert_eq!(bits(&ws), bits(&reference), "post-failure group diverged");
+    assert_eq!(vol, hier_volume_bytes(24, 1, WORLD));
+}
+
+/// Scan /proc for zombie children of this test process. `destroy()`
+/// waits on every child before the failure panic unwinds, so any
+/// zombie visible here is a real reaping bug, not a race.
+fn assert_no_zombie_children() {
+    if !cfg!(target_os = "linux") {
+        return;
+    }
+    let me = std::process::id();
+    let mut zombies = Vec::new();
+    for entry in std::fs::read_dir("/proc").into_iter().flatten().flatten() {
+        let name = entry.file_name();
+        let Some(pid) = name.to_str().and_then(|s| s.parse::<u32>().ok()) else {
+            continue;
+        };
+        let Ok(stat) = std::fs::read_to_string(format!("/proc/{pid}/stat")) else {
+            continue;
+        };
+        // Format: pid (comm) state ppid ... — comm may itself contain
+        // spaces or parens, so split after the LAST ')'.
+        let Some(rest) = stat.rfind(')').map(|i| &stat[i + 1..]) else {
+            continue;
+        };
+        let mut fields = rest.split_whitespace();
+        let state = fields.next().unwrap_or("");
+        let ppid: u32 = fields.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+        if state == "Z" && ppid == me {
+            zombies.push(pid);
+        }
+    }
+    assert!(zombies.is_empty(), "zombie children left behind: {zombies:?}");
+}
