@@ -25,7 +25,10 @@
 //! buffers are regathered to their canonical across-worker mean on
 //! save and re-sharded over the new worker count on load
 //! ([`errors_to_json`] / [`errors_from_json`]), ragged
-//! `numel % workers != 0` included.
+//! `numel % workers != 0` included. Per-worker *replicated* state
+//! (local-update methods' parameter replicas and moments) instead
+//! broadcasts its canonical mean to every worker on an elastic load
+//! ([`replicas_to_json`] / [`replicas_from_json`]).
 
 pub mod codec;
 
@@ -199,6 +202,56 @@ pub fn errors_from_json(
     Ok(reshard_mean(&mean, workers))
 }
 
+/// Serialize per-worker REPLICATED state (local-update optimizers'
+/// parameter replicas and per-worker Adam moments — `DesLoc`, `Lordo`):
+/// the exact per-worker list for bitwise same-world resume plus the
+/// canonical across-worker mean for elastic restarts. Same layout as
+/// [`errors_to_json`]; the two differ only in how they *restore* at a
+/// changed world size.
+pub fn replicas_to_json(replicas: &[Matrix]) -> Json {
+    Json::obj(vec![
+        ("mean", codec::matrix_to_json(&errors_mean(replicas))),
+        ("per_worker", codec::matrices_to_json(replicas)),
+    ])
+}
+
+/// Restore per-worker replicated state for a (possibly different) world
+/// size of `workers`:
+/// * saved count == `workers` → bit-exact per-worker restore;
+/// * saved count != `workers` → **broadcast the canonical mean** to
+///   every worker. Replicated state is a full *copy* per worker — so,
+///   unlike error-feedback buffers (whose across-worker mean is the
+///   invariant [`errors_from_json`] re-shards), the faithful elastic
+///   restore starts every worker from the consensus point, exactly as
+///   a fresh sync boundary would.
+///
+/// A manifest whose `per_worker` field is missing or malformed is
+/// rejected — never silently mean-broadcast — so a same-world-size
+/// resume cannot quietly lose the bitwise contract.
+pub fn replicas_from_json(
+    j: &Json,
+    rows: usize,
+    cols: usize,
+    workers: usize,
+    what: &str,
+) -> Result<Vec<Matrix>, String> {
+    let saved = j
+        .get("per_worker")
+        .as_arr()
+        .ok_or_else(|| format!("{what}: missing per_worker list"))?;
+    if saved.len() == workers {
+        return saved
+            .iter()
+            .enumerate()
+            .map(|(w, m)| {
+                codec::matrix_from_json_expect(m, rows, cols, &format!("{what}.per_worker[{w}]"))
+            })
+            .collect();
+    }
+    let mean = codec::matrix_from_json_expect(j.get("mean"), rows, cols, &format!("{what}.mean"))?;
+    Ok((0..workers).map(|_| mean.clone()).collect())
+}
+
 /// The elastic re-shard described on [`errors_from_json`].
 pub fn reshard_mean(mean: &Matrix, workers: usize) -> Vec<Matrix> {
     let bounds = crate::exec::shard_bounds(mean.numel(), workers);
@@ -250,6 +303,45 @@ mod tests {
             }
             assert_eq!(restored_mean.to_bits(), mean.data[i].to_bits(), "element {i}");
         }
+    }
+
+    #[test]
+    fn replicas_roundtrip_exactly_at_same_world_size() {
+        let mut rng = Xoshiro256::new(21);
+        let reps: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(4, 6, 1.0, &mut rng)).collect();
+        let j = replicas_to_json(&reps);
+        let back = replicas_from_json(&j, 4, 6, 3, "r").unwrap();
+        for (a, b) in reps.iter().zip(&back) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_replicas_broadcast_the_mean_not_a_shard() {
+        // 3 saved workers → 5 restored: every worker must hold the FULL
+        // canonical mean (a replica is a copy, not a shard).
+        let mut rng = Xoshiro256::new(22);
+        let reps: Vec<Matrix> = (0..3).map(|_| Matrix::gaussian(4, 6, 1.0, &mut rng)).collect();
+        let j = replicas_to_json(&reps);
+        let back = replicas_from_json(&j, 4, 6, 5, "r").unwrap();
+        assert_eq!(back.len(), 5);
+        let mean = super::errors_mean(&reps);
+        for m in &back {
+            for (x, y) in m.data.iter().zip(&mean.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_without_per_worker_list_are_rejected() {
+        let mut rng = Xoshiro256::new(23);
+        let reps: Vec<Matrix> = (0..2).map(|_| Matrix::gaussian(3, 3, 1.0, &mut rng)).collect();
+        let mut j = replicas_to_json(&reps);
+        j.set("per_worker", Json::Null);
+        assert!(replicas_from_json(&j, 3, 3, 2, "r").is_err());
     }
 
     #[test]

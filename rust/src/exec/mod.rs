@@ -34,7 +34,7 @@
 //! little-endian bit patterns — so no reordering or re-encoding can
 //! creep into the f32 sums. Elementwise shards (dense Adam) and
 //! per-worker fan-outs (sketches, core projections) are trivially
-//! order-free. `tests/exec_parity.rs` enforces this for all seven
+//! order-free. `tests/exec_parity.rs` enforces this for all nine
 //! optimizers; CI diffs full `tsr train` runs byte-for-byte across all
 //! three backends.
 

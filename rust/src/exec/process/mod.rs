@@ -25,7 +25,7 @@
 //! little-endian bit patterns; the coordinator writes requests and
 //! reads results in rank order. Weights and every ledger column are
 //! bitwise-identical to the `Sequential` backend — `tests/
-//! exec_parity.rs` pins this for all seven optimizers.
+//! exec_parity.rs` pins this for all nine optimizers.
 //!
 //! **Metering.** Each worker counts the payload bytes it sent and
 //! received per link class during the rings; the coordinator asserts

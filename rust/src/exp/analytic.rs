@@ -181,6 +181,64 @@ pub fn topk_profile(spec: &ModelSpec, keep_frac: f64) -> CommProfile {
     }
 }
 
+/// DES-LOC: every block (vectors included) holds per-worker replicas
+/// and moments; a step communicates `numel` elements per optimizer
+/// state whose period divides `t` — params every `k_p`, first moment
+/// every `k_m`, second moment every `k_v` — and **exactly zero bytes**
+/// on local steps. Averaging period = lcm(k_p, k_m, k_v), the exact
+/// cycle the ledger sees; peak is step 0, where all three states sync.
+pub fn desloc_profile(spec: &ModelSpec, k_p: u64, k_m: u64, k_v: u64) -> CommProfile {
+    let (kp, km, kv) = (k_p.max(1), k_m.max(1), k_v.max(1));
+    let period = lcm(kp, lcm(km, kv));
+    let syncs_per_period = period / kp + period / km + period / kv;
+    let mut split = (0f64, 0f64, 0f64);
+    let mut period_total = 0u64;
+    let mut peak = 0u64;
+    for b in spec.blocks() {
+        let numel = b.numel() as u64;
+        period_total += numel * syncs_per_period;
+        peak += numel * 3;
+        add_split(
+            &mut split,
+            b.class,
+            (numel * syncs_per_period) as f64 / period as f64,
+        );
+    }
+    let bpe = BYTES_F32 as u64;
+    CommProfile {
+        bytes_per_step: (period_total * bpe) as f64 / period as f64,
+        peak_bytes: (peak * bpe) as f64,
+        split,
+    }
+}
+
+/// LoRDO: `h`−1 of every `h` steps are purely local (**exactly zero
+/// bytes**); the round boundary pays the warm-started rank-r delta
+/// factors P (m×r̂) + Q' (n×r̂) per matrix block and a dense replica
+/// mean per vector block. Peak == the sync step; period = h.
+pub fn lordo_profile(spec: &ModelSpec, rank: usize, h: u64) -> CommProfile {
+    let h = h.max(1);
+    let mut split = (0f64, 0f64, 0f64);
+    let mut sync_total = 0u64;
+    for b in spec.blocks() {
+        let elems = match b.class {
+            LayerClass::Vector => b.numel() as u64,
+            _ => {
+                let r = rank.min(b.rows).min(b.cols);
+                (b.rows * r + b.cols * r) as u64
+            }
+        };
+        add_split(&mut split, b.class, elems as f64 / h as f64);
+        sync_total += elems;
+    }
+    let bpe = BYTES_F32 as u64;
+    CommProfile {
+        bytes_per_step: (sync_total * bpe) as f64 / h as f64,
+        peak_bytes: (sync_total * bpe) as f64,
+        split,
+    }
+}
+
 /// Table 1: synchronized-object sizes for one m×n gradient.
 pub fn table1_row(m: usize, n: usize, r: usize) -> [(String, usize); 4] {
     [
@@ -400,6 +458,41 @@ mod tests {
         assert!(mixed.bytes_per_step < uniform_fast.bytes_per_step);
         assert!(mixed.bytes_per_step > uniform_slow.bytes_per_step);
         assert_eq!(mixed.peak_bytes, uniform_fast.peak_bytes);
+    }
+
+    #[test]
+    fn desloc_profile_amortizes_over_the_three_periods() {
+        let spec = ModelSpec::proxy(100, 16, 32, 2, 1);
+        let dense = adamw_profile(&spec).bytes_per_step;
+        // k_p=k_m=k_v=1 degenerates to syncing all three states densely
+        // every step: exactly 3× the dense-params profile.
+        let every_step = desloc_profile(&spec, 1, 1, 1);
+        assert_eq!(every_step.bytes_per_step, 3.0 * dense);
+        assert_eq!(every_step.peak_bytes, 3.0 * dense);
+        // Desynced periods 2/4/8: per 8-step period params sync 4×,
+        // m 2×, v 1× → 7 dense payloads / 8 steps.
+        let p = desloc_profile(&spec, 2, 4, 8);
+        assert_eq!(p.bytes_per_step, dense * 7.0 / 8.0);
+        assert_eq!(p.peak_bytes, 3.0 * dense);
+        // Longer periods strictly cheaper per step, same peak.
+        let slow = desloc_profile(&spec, 8, 16, 32);
+        assert!(slow.bytes_per_step < p.bytes_per_step);
+        assert_eq!(slow.peak_bytes, p.peak_bytes);
+    }
+
+    #[test]
+    fn lordo_profile_amortizes_the_round_payload_over_h() {
+        let spec = ModelSpec::proxy(100, 16, 32, 2, 1);
+        let p4 = lordo_profile(&spec, 4, 8);
+        let p4_slow = lordo_profile(&spec, 4, 16);
+        // Same sync payload, amortized over twice the local steps.
+        assert_eq!(p4.peak_bytes, p4_slow.peak_bytes);
+        assert_eq!(p4.bytes_per_step, 2.0 * p4_slow.bytes_per_step);
+        // Large H drives bytes/step far below dense.
+        let dense = adamw_profile(&spec).bytes_per_step;
+        assert!(p4_slow.bytes_per_step < 0.1 * dense, "{}", p4_slow.bytes_per_step);
+        // Higher rank → more bytes per round.
+        assert!(lordo_profile(&spec, 8, 8).peak_bytes > p4.peak_bytes);
     }
 
     #[test]

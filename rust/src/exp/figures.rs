@@ -158,8 +158,9 @@ pub fn fig3(steps: usize, workers: usize) -> Json {
 }
 
 /// Fig. 4: loss–communication Pareto frontier across scales, including
-/// the compressed-communication baselines (sign + top-k) so the frontier
-/// spans all four compression families.
+/// the compressed-communication baselines (sign + top-k) and the
+/// local-update family (DES-LOC, LoRDO) so the frontier spans every
+/// compression family in the repo.
 pub fn fig4(steps: usize, workers: usize) -> Json {
     println!("\nFig 4 — Pareto frontier (final loss vs bytes/step, proxy scales)");
     let mut points = Vec::new();
@@ -176,6 +177,8 @@ pub fn fig4(steps: usize, workers: usize) -> Json {
             MethodCfg::PowerSgd { rank: 8 },
             MethodCfg::Sign { k_var: 100 },
             MethodCfg::TopK { keep_frac: 0.01 },
+            MethodCfg::DesLoc { k_p: 8, k_m: 32, k_v: 128 },
+            MethodCfg::Lordo { rank: 8, h: 8 },
         ];
         for m in &methods {
             let out = run_proxy(&spec, m, steps, workers, 0.02, 0.02, 0xFA4);

@@ -24,7 +24,7 @@ use crate::util::json::Json;
 
 /// Run shape for the quality-vs-bytes sweep. The default is the
 /// 64-vocab / 2-layer acceptance configuration (ISSUE 5), sized so the
-/// full 5-method sweep is CPU-feasible.
+/// full 7-method sweep is CPU-feasible.
 #[derive(Clone, Debug)]
 pub struct LmCurvesCfg {
     pub steps: usize,
@@ -82,9 +82,10 @@ pub fn lm_tsr_cfg(hidden: usize) -> TsrConfig {
 }
 
 /// The method roster: dense AdamW, TSR-Adam with the embedding
-/// extension enabled ([`lm_tsr_cfg`]), GaLore-style one-sided, and the
-/// Sign/TopK compressed baselines — every family the paper's headline
-/// claim is measured against, at ranks scaled to the LM's hidden size.
+/// extension enabled ([`lm_tsr_cfg`]), GaLore-style one-sided, the
+/// Sign/TopK compressed baselines, and the local-update family
+/// (DES-LOC, LoRDO) — every family the paper's headline claim is
+/// measured against, at ranks scaled to the LM's hidden size.
 pub fn lm_methods(hidden: usize) -> Vec<MethodCfg> {
     let rank = (3 * hidden / 4).max(4);
     vec![
@@ -97,6 +98,12 @@ pub fn lm_methods(hidden: usize) -> Vec<MethodCfg> {
         },
         MethodCfg::Sign { k_var: 25 },
         MethodCfg::TopK { keep_frac: 0.05 },
+        MethodCfg::DesLoc {
+            k_p: 8,
+            k_m: 32,
+            k_v: 128,
+        },
+        MethodCfg::Lordo { rank, h: 8 },
     ]
 }
 

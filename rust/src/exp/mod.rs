@@ -11,7 +11,7 @@ pub mod tables;
 pub mod theory;
 
 pub use analytic::{
-    adamw_profile, onesided_profile, sign_profile, topk_profile, tsr_profile, CommProfile,
-    TsrParams,
+    adamw_profile, desloc_profile, lordo_profile, onesided_profile, sign_profile, topk_profile,
+    tsr_profile, CommProfile, TsrParams,
 };
 pub use runs::{run_proxy, run_proxy_exec, MethodCfg, RunOutput};

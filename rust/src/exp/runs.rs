@@ -6,8 +6,8 @@ use crate::comm::{CommLedger, Topology};
 use crate::metrics::RunMetrics;
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::{
-    AdamHyper, DenseAdamW, DistOptimizer, LrSchedule, OneSidedAdam, PowerSgd, SignAdam, TopKAdam,
-    TsrAdam, TsrConfig, TsrSgd,
+    AdamHyper, DenseAdamW, DesLoc, DistOptimizer, Lordo, LrSchedule, OneSidedAdam, PowerSgd,
+    SignAdam, TopKAdam, TsrAdam, TsrConfig, TsrSgd,
 };
 use crate::optim::onesided::OneSidedRefresh;
 use crate::train::gradsim::QuadraticSim;
@@ -37,6 +37,19 @@ pub enum MethodCfg {
     TopK {
         keep_frac: f64,
     },
+    /// DES-LOC: local AdamW steps with per-state sync periods — params
+    /// every `k_p`, first moment every `k_m`, second moment every `k_v`.
+    DesLoc {
+        k_p: u64,
+        k_m: u64,
+        k_v: u64,
+    },
+    /// LoRDO: `h` local AdamW steps, then one warm-started rank-`rank`
+    /// low-rank synchronization of the parameter deltas.
+    Lordo {
+        rank: usize,
+        h: u64,
+    },
 }
 
 impl MethodCfg {
@@ -49,6 +62,51 @@ impl MethodCfg {
             MethodCfg::PowerSgd { rank } => format!("powersgd-r{rank}"),
             MethodCfg::Sign { k_var } => format!("signadam-k{k_var}"),
             MethodCfg::TopK { keep_frac } => format!("topk-d{keep_frac:.3}"),
+            MethodCfg::DesLoc { k_p, k_m, k_v } => format!("desloc-p{k_p}m{k_m}v{k_v}"),
+            MethodCfg::Lordo { rank, h } => format!("lordo-r{rank}-h{h}"),
+        }
+    }
+
+    /// The default-knob config for a CLI method name — the single
+    /// method-name parser every front end dispatches through (mirrors
+    /// [`crate::exec::ExecBackend::parse`]'s strictness: unknown names
+    /// are rejected loudly with the full valid list, never defaulted).
+    /// Knob flags (`--rank`, `--k`, `--k-p`, …) are applied on top by
+    /// the caller.
+    pub fn parse(name: &str) -> Result<MethodCfg, String> {
+        match name.trim() {
+            "adamw" => Ok(MethodCfg::Adam),
+            "galore" | "onesided" => Ok(MethodCfg::OneSided {
+                rank: 8,
+                k: 50,
+                refresh: OneSidedRefresh::RandomizedSvd,
+            }),
+            "tsr" => Ok(MethodCfg::Tsr(Self::default_tsr_cfg())),
+            "tsr-sgd" | "tsrsgd" => Ok(MethodCfg::TsrSgd(Self::default_tsr_cfg())),
+            "powersgd" => Ok(MethodCfg::PowerSgd { rank: 8 }),
+            "signadam" => Ok(MethodCfg::Sign { k_var: 100 }),
+            "topk" => Ok(MethodCfg::TopK { keep_frac: 0.01 }),
+            "desloc" | "des-loc" => Ok(MethodCfg::DesLoc {
+                k_p: 8,
+                k_m: 32,
+                k_v: 128,
+            }),
+            "lordo" => Ok(MethodCfg::Lordo { rank: 8, h: 8 }),
+            other => Err(format!(
+                "unknown method `{other}` (valid: adamw | galore | tsr | tsr-sgd | \
+                 powersgd | signadam | topk | desloc | lordo)"
+            )),
+        }
+    }
+
+    fn default_tsr_cfg() -> TsrConfig {
+        TsrConfig {
+            rank: 8,
+            rank_emb: 4,
+            refresh_every: 50,
+            refresh_emb: 50,
+            oversample: 8,
+            ..Default::default()
         }
     }
 
@@ -73,6 +131,12 @@ impl MethodCfg {
             }
             MethodCfg::TopK { keep_frac } => {
                 Box::new(TopKAdam::new(blocks, workers, hyper, *keep_frac))
+            }
+            MethodCfg::DesLoc { k_p, k_m, k_v } => {
+                Box::new(DesLoc::new(blocks, hyper, workers, *k_p, *k_m, *k_v))
+            }
+            MethodCfg::Lordo { rank, h } => {
+                Box::new(Lordo::new(blocks, hyper, workers, *rank, *h))
             }
         }
     }
@@ -217,6 +281,12 @@ mod tests {
             MethodCfg::PowerSgd { rank: 8 },
             MethodCfg::Sign { k_var: 20 },
             MethodCfg::TopK { keep_frac: 0.05 },
+            MethodCfg::DesLoc {
+                k_p: 2,
+                k_m: 4,
+                k_v: 8,
+            },
+            MethodCfg::Lordo { rank: 8, h: 4 },
         ];
         for m in &methods {
             let out = run_proxy(&spec, m, 40, 2, 0.01, 0.05, 7);
@@ -253,5 +323,56 @@ mod tests {
             1,
         );
         assert!(tsr.ledger.bytes_per_step() < 0.35 * adam.ledger.bytes_per_step());
+    }
+
+    #[test]
+    fn parse_accepts_all_nine_methods() {
+        for (name, label_prefix) in [
+            ("adamw", "adamw"),
+            ("galore", "onesided-"),
+            ("onesided", "onesided-"),
+            ("tsr", "tsr-r"),
+            ("tsr-sgd", "tsr-sgd-"),
+            ("powersgd", "powersgd-"),
+            ("signadam", "signadam-"),
+            ("topk", "topk-"),
+            ("desloc", "desloc-"),
+            ("des-loc", "desloc-"),
+            ("lordo", "lordo-"),
+        ] {
+            let m = MethodCfg::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(
+                m.label().starts_with(label_prefix),
+                "{name} -> {}",
+                m.label()
+            );
+        }
+        // Whitespace is tolerated, same as ExecBackend::parse.
+        assert!(MethodCfg::parse(" tsr ").is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names_listing_all_nine() {
+        let err = MethodCfg::parse("adamx").unwrap_err();
+        for name in [
+            "adamw", "galore", "tsr", "tsr-sgd", "powersgd", "signadam", "topk", "desloc",
+            "lordo",
+        ] {
+            assert!(err.contains(name), "error `{err}` must list `{name}`");
+        }
+        assert!(err.contains("adamx"), "error must echo the bad name");
+        assert!(MethodCfg::parse("").is_err());
+    }
+
+    #[test]
+    fn parsed_methods_build_and_train() {
+        // Every parseable name yields a config that instantiates and
+        // takes a step at default knobs (small world, few steps).
+        let spec = ModelSpec::proxy(100, 16, 32, 2, 1);
+        for name in ["adamw", "desloc", "lordo"] {
+            let m = MethodCfg::parse(name).unwrap();
+            let out = run_proxy(&spec, &m, 3, 2, 0.0, 0.05, 5);
+            assert_eq!(out.ledger.num_steps(), 3, "{name}");
+        }
     }
 }

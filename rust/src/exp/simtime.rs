@@ -28,7 +28,7 @@ use crate::sim::{simulate_plans_adv, Adversity, MethodTimeline, SimCfg};
 use crate::util::bench::{fmt_bytes, fmt_time};
 use crate::util::json::Json;
 
-/// The seven methods under test at paper ranks for `scale`.
+/// The nine methods under test at paper ranks for `scale`.
 pub fn method_roster(scale: &str) -> Vec<MethodCfg> {
     let (rank, rank_emb) = match scale {
         "60m" => (256, 64),
@@ -62,6 +62,18 @@ pub fn method_roster(scale: &str) -> Vec<MethodCfg> {
         MethodCfg::PowerSgd { rank: onesided_rank },
         MethodCfg::Sign { k_var: 1000 },
         MethodCfg::TopK { keep_frac: 0.01 },
+        // Local-update family: mostly-zero-byte schedules with periodic
+        // dense (DES-LOC) or low-rank (LoRDO) sync spikes — the engine
+        // sees genuine zero-payload steps between them.
+        MethodCfg::DesLoc {
+            k_p: 16,
+            k_m: 64,
+            k_v: 256,
+        },
+        MethodCfg::Lordo {
+            rank: onesided_rank,
+            h: 30,
+        },
     ]
 }
 
@@ -89,7 +101,7 @@ pub fn timeline_json(label: &str, tl: &MethodTimeline) -> Json {
     ])
 }
 
-/// The full experiment: all seven methods × the three cluster shapes,
+/// The full experiment: all nine methods × the three cluster shapes,
 /// under an [`Adversity`] model (`Adversity::clean` for the nominal
 /// figure — bitwise-identical to the pre-adversity output). The
 /// per-method (plan extraction + three-topology simulation) cells are
@@ -187,8 +199,8 @@ mod tests {
     use crate::sim::simulate_plans;
 
     #[test]
-    fn roster_has_seven_methods() {
-        assert_eq!(method_roster("60m").len(), 7);
+    fn roster_has_nine_methods() {
+        assert_eq!(method_roster("60m").len(), 9);
     }
 
     // The §5 regime assertion (TSR's exposed-comm advantage over dense

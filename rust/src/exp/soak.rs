@@ -1,7 +1,8 @@
 //! `tsr soak` — the resilience sweep (DESIGN.md §11).
 //!
-//! Sweeps worker counts × cluster shapes × adversity scenarios for the
-//! four headline methods (dense AdamW, one-sided low-rank, TSR, TopK):
+//! Sweeps worker counts × cluster shapes × adversity scenarios for six
+//! headline methods (dense AdamW, one-sided low-rank, TSR, TopK, plus
+//! the local-update DES-LOC and LoRDO):
 //!
 //! * **clean / straggler / jitter** — timing cells from the
 //!   discrete-event engine under the seeded `sim::adversity` models:
@@ -103,9 +104,9 @@ fn topo_for(kind: &str, workers: usize) -> Topology {
     }
 }
 
-/// Timing roster: AdamW, one-sided, TSR, TopK at proxy ranks. Index
-/// order is load-bearing — the straggler self-check reads AdamW at 0
-/// and TSR at 2.
+/// Timing roster: AdamW, one-sided, TSR, TopK, DES-LOC, LoRDO at proxy
+/// ranks. Index order is load-bearing — the straggler self-check reads
+/// AdamW at 0 and TSR at 2, so new methods append at the end.
 fn timing_methods(scale: &str) -> Vec<MethodCfg> {
     vec![
         MethodCfg::Adam,
@@ -116,11 +117,21 @@ fn timing_methods(scale: &str) -> Vec<MethodCfg> {
         },
         MethodCfg::Tsr(proxy_tsr_cfg(scale)),
         MethodCfg::TopK { keep_frac: 0.01 },
+        MethodCfg::DesLoc {
+            k_p: 8,
+            k_m: 32,
+            k_v: 128,
+        },
+        MethodCfg::Lordo {
+            rank: proxy_onesided_rank(scale),
+            h: 8,
+        },
     ]
 }
 
-/// Drill roster: the same four families at drill-sized ranks, refresh
-/// period `k` (the default `kill_at = 7` lands mid-period for k = 5).
+/// Drill roster: the same families at drill-sized ranks, refresh
+/// period `k` (the default `kill_at = 7` lands mid-period for k = 5,
+/// and mid-local-phase for the DES-LOC/LoRDO cadences below).
 fn drill_methods(k: usize) -> Vec<MethodCfg> {
     let tsr = TsrConfig {
         rank: 8,
@@ -139,6 +150,8 @@ fn drill_methods(k: usize) -> Vec<MethodCfg> {
         },
         MethodCfg::Tsr(tsr),
         MethodCfg::TopK { keep_frac: 0.05 },
+        MethodCfg::DesLoc { k_p: 2, k_m: 4, k_v: 8 },
+        MethodCfg::Lordo { rank: 6, h: 3 },
     ]
 }
 
@@ -317,13 +330,16 @@ mod tests {
     }
 
     #[test]
-    fn rosters_are_four_methods_with_fixed_indices() {
+    fn rosters_are_six_methods_with_fixed_indices() {
         let t = timing_methods("60m");
-        assert_eq!(t.len(), 4);
+        assert_eq!(t.len(), 6);
         assert!(matches!(t[0], MethodCfg::Adam));
         assert!(matches!(t[2], MethodCfg::Tsr(_)));
+        assert!(matches!(t[4], MethodCfg::DesLoc { .. }));
+        assert!(matches!(t[5], MethodCfg::Lordo { .. }));
         let d = drill_methods(5);
-        assert_eq!(d.len(), 4);
+        assert_eq!(d.len(), 6);
         assert!(matches!(d[0], MethodCfg::Adam));
+        assert!(matches!(d[5], MethodCfg::Lordo { .. }));
     }
 }

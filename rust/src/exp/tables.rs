@@ -5,8 +5,8 @@
 //! substitution); update-time columns are measured on this host.
 
 use super::analytic::{
-    adamw_profile, onesided_profile, sign_profile, table1_row, topk_profile, tsr_profile,
-    TsrParams,
+    adamw_profile, desloc_profile, lordo_profile, onesided_profile, sign_profile, table1_row,
+    topk_profile, tsr_profile, TsrParams,
 };
 use super::runs::{proxy_onesided_rank, proxy_spec, proxy_tsr_cfg, run_proxy, MethodCfg};
 use crate::model::{memory_bytes, memory_bytes_error_feedback, Method, ModelSpec};
@@ -183,6 +183,12 @@ fn measure_update_time(spec: &ModelSpec, method: &MethodCfg, workers: usize) -> 
 /// families, so the columns show our exact byte profiles side by side).
 pub const TABLE3_SIGN_KVAR: usize = 1000;
 pub const TABLE3_TOPK_FRAC: f64 = 0.005;
+/// Local-update baseline settings for the extended Table 3 rows:
+/// DES-LOC per-state periods (params/m/v) and LoRDO's local horizon.
+pub const TABLE3_DESLOC_KP: u64 = 16;
+pub const TABLE3_DESLOC_KM: u64 = 64;
+pub const TABLE3_DESLOC_KV: u64 = 256;
+pub const TABLE3_LORDO_H: u64 = 30;
 
 /// Table 3: byte/memory columns exact; loss from proxy training; update
 /// time measured on this host. `loss_steps = 0` skips the training runs
@@ -292,6 +298,41 @@ pub fn table3(loss_steps: usize, measure_time: bool) -> Json {
                 },
                 proxy: MethodCfg::TopK {
                     keep_frac: TABLE3_TOPK_FRAC,
+                },
+            },
+            // Local-update baselines: per-device state is a full dense
+            // Adam triple (replica + m + v; LoRDO adds only the n×r warm
+            // factor), so the memory column is the dense-Adam figure.
+            Row {
+                name: "desloc",
+                prof: desloc_profile(&spec, TABLE3_DESLOC_KP, TABLE3_DESLOC_KM, TABLE3_DESLOC_KV),
+                mem: memory_bytes(&spec, Method::Adam, 0, 0),
+                rank: "-".to_string(),
+                k: TABLE3_DESLOC_KP as usize,
+                full: MethodCfg::DesLoc {
+                    k_p: TABLE3_DESLOC_KP,
+                    k_m: TABLE3_DESLOC_KM,
+                    k_v: TABLE3_DESLOC_KV,
+                },
+                proxy: MethodCfg::DesLoc {
+                    k_p: TABLE3_DESLOC_KP,
+                    k_m: TABLE3_DESLOC_KM,
+                    k_v: TABLE3_DESLOC_KV,
+                },
+            },
+            Row {
+                name: "lordo",
+                prof: lordo_profile(&spec, cfg.galore_rank, TABLE3_LORDO_H),
+                mem: memory_bytes(&spec, Method::Adam, 0, 0),
+                rank: format!("{}", cfg.galore_rank),
+                k: TABLE3_LORDO_H as usize,
+                full: MethodCfg::Lordo {
+                    rank: cfg.galore_rank,
+                    h: TABLE3_LORDO_H,
+                },
+                proxy: MethodCfg::Lordo {
+                    rank: proxy_onesided_rank(cfg.scale),
+                    h: TABLE3_LORDO_H,
                 },
             },
         ];
@@ -530,20 +571,31 @@ mod tests {
     fn table3_bytes_only_runs_fast() {
         let j = table3(0, false);
         let rows = j.get("rows").as_arr().unwrap();
-        assert_eq!(rows.len(), 20); // 4 scales × 5 methods
-        // Per scale: [adamw, galore, tsr, signadam, topk].
-        for chunk in rows.chunks(5) {
+        assert_eq!(rows.len(), 28); // 4 scales × 7 methods
+        // Per scale: [adamw, galore, tsr, signadam, topk, desloc, lordo].
+        for chunk in rows.chunks(7) {
             let adam = chunk[0].get("bytes_per_step").as_f64().unwrap();
             let tsr = chunk[2].get("bytes_per_step").as_f64().unwrap();
             let sign = chunk[3].get("bytes_per_step").as_f64().unwrap();
             let topk = chunk[4].get("bytes_per_step").as_f64().unwrap();
+            let desloc = chunk[5].get("bytes_per_step").as_f64().unwrap();
+            let lordo = chunk[6].get("bytes_per_step").as_f64().unwrap();
             // TSR must beat AdamW by >5×; both compressed baselines must
             // land between TSR-class compression and dense.
             assert!(adam / tsr > 5.0);
             assert!(sign < 0.1 * adam, "sign {sign} vs adam {adam}");
             assert!(topk < 0.1 * adam, "topk {topk} vs adam {adam}");
-            // The compressed baselines have no paper reference columns.
+            // Local-update rows: amortized traffic well below dense, but
+            // a dense-payload PEAK (the step where everything syncs).
+            assert!(desloc < 0.1 * adam, "desloc {desloc} vs adam {adam}");
+            assert!(lordo < 0.1 * adam, "lordo {lordo} vs adam {adam}");
+            let adam_peak = chunk[0].get("peak_bytes").as_f64().unwrap();
+            let desloc_peak = chunk[5].get("peak_bytes").as_f64().unwrap();
+            assert!(desloc_peak >= adam_peak, "desloc peak syncs all three states");
+            // The paper-less baselines have no paper reference columns.
             assert_eq!(chunk[3].get("paper_bytes_per_step"), &Json::Null);
+            assert_eq!(chunk[5].get("paper_bytes_per_step"), &Json::Null);
+            assert_eq!(chunk[6].get("paper_bytes_per_step"), &Json::Null);
         }
     }
 

@@ -12,7 +12,7 @@ pub mod rsvd;
 pub mod svd;
 
 pub use matmul::{
-    core_project, core_project_gv_first, lift, matmul, matmul_into, matmul_nt, matmul_tn,
+    core_project, core_project_gv_first, gemm, lift, matmul, matmul_into, matmul_nt, matmul_tn,
 };
 pub use matrix::Matrix;
 pub use qr::{orth, ortho_defect, qr_thin};

@@ -157,8 +157,9 @@ fn main() {
                  table on the native transformer LM (AdamW vs TSR vs baselines, \
                  matched seeds; DESIGN.md §10)\
                  \n  train:    train --manifest artifacts/tiny_manifest.json \
-                 [--method tsr|adamw|galore|signadam|topk] [--steps N] [--workers W] \
-                 [--k-var N] [--keep-frac F]\
+                 [--method adamw|galore|tsr|tsr-sgd|powersgd|signadam|topk|desloc|lordo] \
+                 [--steps N] [--workers W] [--k-var N] [--keep-frac F] \
+                 [--k-p N --k-m N --k-v N] [--h N]\
                  \n            --workers N       simulated data-parallel workers (default 4)\
                  \n            --backend B       execution backend: sequential | threaded \
                  | process (default $TSR_BACKEND or sequential; all three are \
@@ -215,6 +216,10 @@ fn method_config_json(args: &Args, hidden: usize) -> tsr::util::json::Json {
         ("k", Json::num(args.get_usize("k", 50) as f64)),
         ("k_var", Json::num(args.get_usize("k-var", 100) as f64)),
         ("keep_frac", Json::num(args.get_f64("keep-frac", 0.01))),
+        ("k_p", Json::num(args.get_usize("k-p", 8) as f64)),
+        ("k_m", Json::num(args.get_usize("k-m", 32) as f64)),
+        ("k_v", Json::num(args.get_usize("k-v", 128) as f64)),
+        ("h", Json::num(args.get_usize("h", 8) as f64)),
     ])
 }
 
@@ -302,38 +307,47 @@ fn synth_run_config(args: &Args) -> tsr::util::json::Json {
 
 /// Build the optimizer selection from the resolved config echo
 /// ([`method_config_json`]); fresh runs, resumes, and the PJRT path
-/// all dispatch through here.
+/// all dispatch through here. The name goes through the one shared
+/// parser (`MethodCfg::parse` — unknown names exit loudly with all
+/// nine valid methods); the echoed knobs are applied on top of its
+/// defaults per variant.
 fn method_cfg_from_config(cfg: &tsr::util::json::Json) -> tsr::exp::MethodCfg {
     use tsr::exp::MethodCfg;
-    use tsr::optim::onesided::OneSidedRefresh;
-    use tsr::optim::TsrConfig;
 
+    let name = cfg.get_str("method", "tsr");
+    let mut m = MethodCfg::parse(name).unwrap_or_else(|e| {
+        eprintln!("error: --method: {e}");
+        std::process::exit(2);
+    });
     let rank = cfg.get_usize("rank", 8);
     let rank_emb = cfg.get_usize("rank_emb", 4);
     let k = cfg.get_usize("k", 50);
-    match cfg.get_str("method", "tsr") {
-        "adamw" => MethodCfg::Adam,
-        "galore" => MethodCfg::OneSided {
-            rank,
-            k,
-            refresh: OneSidedRefresh::RandomizedSvd,
-        },
-        "tsr" => MethodCfg::Tsr(TsrConfig {
-            rank,
-            rank_emb,
-            refresh_every: k,
-            refresh_emb: k,
-            oversample: 8,
-            ..Default::default()
-        }),
-        "signadam" => MethodCfg::Sign {
-            k_var: cfg.get_usize("k_var", 100),
-        },
-        "topk" => MethodCfg::TopK {
-            keep_frac: cfg.get_f64("keep_frac", 0.01),
-        },
-        other => panic!("unknown method {other}"),
+    match &mut m {
+        MethodCfg::Adam => {}
+        MethodCfg::OneSided { rank: r, k: kk, .. } => {
+            *r = rank;
+            *kk = k;
+        }
+        MethodCfg::Tsr(c) | MethodCfg::TsrSgd(c) => {
+            c.rank = rank;
+            c.rank_emb = rank_emb;
+            c.refresh_every = k;
+            c.refresh_emb = k;
+        }
+        MethodCfg::PowerSgd { rank: r } => *r = rank,
+        MethodCfg::Sign { k_var } => *k_var = cfg.get_usize("k_var", 100),
+        MethodCfg::TopK { keep_frac } => *keep_frac = cfg.get_f64("keep_frac", 0.01),
+        MethodCfg::DesLoc { k_p, k_m, k_v } => {
+            *k_p = cfg.get_usize("k_p", 8) as u64;
+            *k_m = cfg.get_usize("k_m", 32) as u64;
+            *k_v = cfg.get_usize("k_v", 128) as u64;
+        }
+        MethodCfg::Lordo { rank: r, h } => {
+            *r = rank;
+            *h = cfg.get_usize("h", 8) as u64;
+        }
     }
+    m
 }
 
 /// Synthetic deterministic training (`--source quad | lm`) — no PJRT
@@ -378,7 +392,8 @@ fn run_train_synth(args: &Args) {
         Some(ck) => {
             const CONFIG_ONLY: &[&str] = &[
                 "lr", "noise", "seed", "method", "k", "k-var", "keep-frac", "rank", "rank-emb",
-                "scale", "topo", "vocab", "hidden", "inter", "heads", "layers", "batch", "seq",
+                "k-p", "k-m", "k-v", "h", "scale", "topo", "vocab", "hidden", "inter", "heads",
+                "layers", "batch", "seq",
             ];
             for flag in CONFIG_ONLY {
                 if args.get(flag).is_some() {

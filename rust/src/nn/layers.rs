@@ -4,7 +4,7 @@
 //! *accumulate* into their output buffers (`+=`), matching how the
 //! transformer sums gradient contributions across branches.
 
-use crate::linalg::{matmul, matmul_tn, Matrix};
+use crate::linalg::{gemm, Matrix};
 
 /// RMSNorm variance floor.
 pub const RMSNORM_EPS: f32 = 1e-6;
@@ -115,7 +115,7 @@ pub fn causal_attention(q: &Matrix, k: &Matrix, v: &Matrix) -> (Matrix, Matrix) 
             pr[j] = row[j] * inv;
         }
     }
-    let ctx = matmul(&probs, v);
+    let ctx = gemm(&probs, false, v, false);
     (ctx, probs)
 }
 
@@ -133,9 +133,9 @@ pub fn causal_attention_bwd(
     let s = q.rows;
     let d = q.cols;
     let scale = 1.0 / (d as f32).sqrt();
-    // dv = Pᵀ·dctx: matmul_tn skips P's zero upper triangle on its own
-    // (per-element zero check), so the dense call does no masked work.
-    let dv = matmul_tn(probs, dctx);
+    // dv = Pᵀ·dctx: the TN kernel skips P's zero upper triangle on its
+    // own (per-element zero check), so the dense call does no masked work.
+    let dv = gemm(probs, true, dctx, false);
     // dP row i is only read at j ≤ i — compute the causal triangle only.
     let mut dp = Matrix::zeros(s, s);
     for i in 0..s {
@@ -163,9 +163,9 @@ pub fn causal_attention_bwd(
             dsr[j] = pr[j] * (dpr[j] - rowsum);
         }
     }
-    let mut dq = matmul(&ds, k);
+    let mut dq = gemm(&ds, false, k, false);
     dq.scale(scale);
-    let mut dk = matmul_tn(&ds, q);
+    let mut dk = gemm(&ds, true, q, false);
     dk.scale(scale);
     (dq, dk, dv)
 }

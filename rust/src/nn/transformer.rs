@@ -23,7 +23,7 @@
 use super::layers::{
     causal_attention, causal_attention_bwd, rmsnorm, rmsnorm_bwd, silu, silu_grad, softmax_xent,
 };
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Matrix};
+use crate::linalg::{gemm, Matrix};
 use crate::model::{BlockSpec, ModelSpec};
 use crate::train::pjrt_source::init_block;
 use crate::util::rng::Xoshiro256;
@@ -176,9 +176,9 @@ impl TransformerLm {
         for li in &self.layers {
             let x_in = x;
             let xn1 = rmsnorm(&x_in, &params[li.attn_norm]);
-            let q = matmul(&xn1, &params[li.q]);
-            let k = matmul(&xn1, &params[li.k]);
-            let v = matmul(&xn1, &params[li.v]);
+            let q = gemm(&xn1, false, &params[li.q], false);
+            let k = gemm(&xn1, false, &params[li.k], false);
+            let v = gemm(&xn1, false, &params[li.v], false);
             let mut ctx = Matrix::zeros(n, h);
             let mut probs = Vec::with_capacity(batch * self.heads);
             for b in 0..batch {
@@ -191,17 +191,17 @@ impl TransformerLm {
                     probs.push(p);
                 }
             }
-            let attn_out = matmul(&ctx, &params[li.o]);
+            let attn_out = gemm(&ctx, false, &params[li.o], false);
             let mut h1 = x_in.clone();
             h1.add_assign(&attn_out);
             let xn2 = rmsnorm(&h1, &params[li.mlp_norm]);
-            let g_pre = matmul(&xn2, &params[li.gate]);
-            let u_pre = matmul(&xn2, &params[li.up]);
+            let g_pre = gemm(&xn2, false, &params[li.gate], false);
+            let u_pre = gemm(&xn2, false, &params[li.up], false);
             let mut act = Matrix::zeros(n, self.inter);
             for i in 0..act.data.len() {
                 act.data[i] = silu(g_pre.data[i]) * u_pre.data[i];
             }
-            let mlp_out = matmul(&act, &params[li.down]);
+            let mlp_out = gemm(&act, false, &params[li.down], false);
             let mut x_out = h1.clone();
             x_out.add_assign(&mlp_out);
             layer_caches.push(LayerCache {
@@ -223,7 +223,7 @@ impl TransformerLm {
 
         let x_last = x;
         let xnf = rmsnorm(&x_last, &params[self.final_norm]);
-        let logits = matmul_nt(&xnf, &params[self.head]);
+        let logits = gemm(&xnf, false, &params[self.head], true);
         let (loss_sum, mut dlogits) = softmax_xent(&logits, &targets);
         dlogits.scale(1.0 / n as f32);
         (
@@ -258,8 +258,8 @@ impl TransformerLm {
         let hd = self.head_dim;
 
         // Untied head + final norm.
-        grads[self.head].add_assign(&matmul_tn(&cache.dlogits, &cache.xnf));
-        let dxnf = matmul(&cache.dlogits, &params[self.head]);
+        grads[self.head].add_assign(&gemm(&cache.dlogits, true, &cache.xnf, false));
+        let dxnf = gemm(&cache.dlogits, false, &params[self.head], false);
         let mut dx = Matrix::zeros(n, self.hidden);
         rmsnorm_bwd(
             &cache.x_last,
@@ -271,8 +271,8 @@ impl TransformerLm {
 
         for (li, lc) in self.layers.iter().zip(&cache.layers).rev() {
             // MLP branch of x_out = h1 + down(silu(gate(xn2)) ⊙ up(xn2)).
-            let da = matmul_nt(&dx, &params[li.down]);
-            grads[li.down].add_assign(&matmul_tn(&lc.act, &dx));
+            let da = gemm(&dx, false, &params[li.down], true);
+            grads[li.down].add_assign(&gemm(&lc.act, true, &dx, false));
             let mut dg = Matrix::zeros(n, self.inter);
             let mut du = Matrix::zeros(n, self.inter);
             for i in 0..dg.data.len() {
@@ -280,17 +280,17 @@ impl TransformerLm {
                 dg.data[i] = da.data[i] * lc.u_pre.data[i] * silu_grad(gp);
                 du.data[i] = da.data[i] * silu(gp);
             }
-            grads[li.gate].add_assign(&matmul_tn(&lc.xn2, &dg));
-            grads[li.up].add_assign(&matmul_tn(&lc.xn2, &du));
-            let mut dxn2 = matmul_nt(&dg, &params[li.gate]);
-            dxn2.add_assign(&matmul_nt(&du, &params[li.up]));
+            grads[li.gate].add_assign(&gemm(&lc.xn2, true, &dg, false));
+            grads[li.up].add_assign(&gemm(&lc.xn2, true, &du, false));
+            let mut dxn2 = gemm(&dg, false, &params[li.gate], true);
+            dxn2.add_assign(&gemm(&du, false, &params[li.up], true));
             // Residual: dh1 = dx (pass-through) + norm₂ backprop.
             let mut dh1 = dx;
             rmsnorm_bwd(&lc.h1, &params[li.mlp_norm], &dxn2, &mut dh1, &mut grads[li.mlp_norm]);
 
             // Attention branch of h1 = x_in + o(attn(xn1)).
-            grads[li.o].add_assign(&matmul_tn(&lc.ctx, &dh1));
-            let dctx = matmul_nt(&dh1, &params[li.o]);
+            grads[li.o].add_assign(&gemm(&lc.ctx, true, &dh1, false));
+            let dctx = gemm(&dh1, false, &params[li.o], true);
             let mut dq_all = Matrix::zeros(n, self.hidden);
             let mut dk_all = Matrix::zeros(n, self.hidden);
             let mut dv_all = Matrix::zeros(n, self.hidden);
@@ -307,12 +307,12 @@ impl TransformerLm {
                     scatter_head(&mut dv_all, &dvs, b, seq, j, hd);
                 }
             }
-            grads[li.q].add_assign(&matmul_tn(&lc.xn1, &dq_all));
-            grads[li.k].add_assign(&matmul_tn(&lc.xn1, &dk_all));
-            grads[li.v].add_assign(&matmul_tn(&lc.xn1, &dv_all));
-            let mut dxn1 = matmul_nt(&dq_all, &params[li.q]);
-            dxn1.add_assign(&matmul_nt(&dk_all, &params[li.k]));
-            dxn1.add_assign(&matmul_nt(&dv_all, &params[li.v]));
+            grads[li.q].add_assign(&gemm(&lc.xn1, true, &dq_all, false));
+            grads[li.k].add_assign(&gemm(&lc.xn1, true, &dk_all, false));
+            grads[li.v].add_assign(&gemm(&lc.xn1, true, &dv_all, false));
+            let mut dxn1 = gemm(&dq_all, false, &params[li.q], true);
+            dxn1.add_assign(&gemm(&dk_all, false, &params[li.k], true));
+            dxn1.add_assign(&gemm(&dv_all, false, &params[li.v], true));
             let mut dx_in = dh1;
             let dw_n1 = &mut grads[li.attn_norm];
             rmsnorm_bwd(&lc.x_in, &params[li.attn_norm], &dxn1, &mut dx_in, dw_n1);

@@ -1,0 +1,372 @@
+//! DES-LOC (Iacob et al., 2025, PAPERS.md) — desynchronized sync
+//! periods *per optimizer state*: parameters all-reduce every `K_p`
+//! steps, Adam's first moment every `K_m`, the second moment every
+//! `K_v` (typically K_p ≤ K_m ≤ K_v, since m decorrelates faster than
+//! v). Between syncs every worker takes purely LOCAL AdamW steps on
+//! its own parameter replica and moments — such steps communicate
+//! **exactly zero bytes**, which is the contract the generalized
+//! `sync_plan(t)` carries: per-block items with `bytes: 0` on local
+//! steps, and per-state payload multiples on partial-sync steps.
+//!
+//! The shared [`super::sync_due`] predicate drives both `step()` and
+//! `sync_plan()`, so plan==ledger stays byte-exact from any `seek`
+//! (the same discipline `refresh_due` enforces for the refresh
+//! schedules — DESIGN.md §13).
+//!
+//! Shapes here: `ctx.params` holds the *synchronized* parameters the
+//! harness evaluates gradients/loss at; they advance only on K_p
+//! boundaries (to the across-worker mean of the local replicas).
+//! Every block — vectors included — keeps per-worker replicas, so
+//! local steps are zero-byte for the whole model, not just matrices.
+
+use super::{sync_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use crate::comm::{collective, LayerClass, BYTES_F32};
+use crate::linalg::Matrix;
+use crate::model::BlockSpec;
+
+struct DlBlock {
+    /// Per-worker parameter replicas (the local-update state).
+    replicas: Vec<Matrix>,
+    /// Per-worker Adam moments, same world-size layout.
+    adam: Vec<DenseAdamState>,
+}
+
+pub struct DesLoc {
+    /// Parameter sync period.
+    pub k_p: u64,
+    /// First-moment sync period.
+    pub k_m: u64,
+    /// Second-moment sync period.
+    pub k_v: u64,
+    hyper: AdamHyper,
+    classes: Vec<LayerClass>,
+    blocks: Vec<DlBlock>,
+    /// Replicas start as copies of `ctx.params` on the first step (the
+    /// optimizer never sees parameters at construction time). Persisted
+    /// so a resumed run never re-seeds mid-flight.
+    init: bool,
+    t: u64,
+}
+
+impl DesLoc {
+    pub fn new(
+        blocks: &[BlockSpec],
+        hyper: AdamHyper,
+        workers: usize,
+        k_p: u64,
+        k_m: u64,
+        k_v: u64,
+    ) -> Self {
+        let states = blocks
+            .iter()
+            .map(|b| DlBlock {
+                replicas: (0..workers).map(|_| Matrix::zeros(b.rows, b.cols)).collect(),
+                adam: (0..workers).map(|_| DenseAdamState::new(b.rows, b.cols)).collect(),
+            })
+            .collect();
+        Self {
+            k_p,
+            k_m,
+            k_v,
+            hyper,
+            classes: blocks.iter().map(|b| b.class).collect(),
+            blocks: states,
+            init: false,
+            t: 0,
+        }
+    }
+}
+
+impl DistOptimizer for DesLoc {
+    fn name(&self) -> &'static str {
+        "des-loc"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        let t = self.t;
+        self.t += 1;
+        let t1 = self.t;
+        if !self.init {
+            for (b, blk) in self.blocks.iter_mut().enumerate() {
+                for r in blk.replicas.iter_mut() {
+                    *r = ctx.params[b].clone();
+                }
+            }
+            self.init = true;
+        }
+        let (p_due, m_due, v_due) = (
+            sync_due(self.k_p, t),
+            sync_due(self.k_m, t),
+            sync_due(self.k_v, t),
+        );
+        for b in 0..ctx.params.len() {
+            let blk = &mut self.blocks[b];
+            // Local AdamW step: each worker updates its OWN replica with
+            // its OWN gradient and moments. No communication.
+            for (w, g) in ctx.grads.iter().enumerate() {
+                blk.adam[w].update_exec(
+                    &mut blk.replicas[w],
+                    &g[b],
+                    &self.hyper,
+                    ctx.lr_mult,
+                    t1,
+                    ctx.exec,
+                );
+            }
+            let class = self.classes[b];
+            if p_due {
+                collective::sync_mean(&mut blk.replicas, class, ctx.ledger, ctx.topo, ctx.exec);
+                ctx.params[b] = blk.replicas[0].clone();
+            }
+            if m_due {
+                let mut ms: Vec<Matrix> = blk.adam.iter().map(|a| a.m.clone()).collect();
+                collective::sync_mean(&mut ms, class, ctx.ledger, ctx.topo, ctx.exec);
+                for (a, m) in blk.adam.iter_mut().zip(ms) {
+                    a.m = m;
+                }
+            }
+            if v_due {
+                let mut vs: Vec<Matrix> = blk.adam.iter().map(|a| a.v.clone()).collect();
+                collective::sync_mean(&mut vs, class, ctx.ledger, ctx.topo, ctx.exec);
+                for (a, v) in blk.adam.iter_mut().zip(vs) {
+                    a.v = v;
+                }
+            }
+        }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        // Same predicate as step(): bytes = numel × (number of optimizer
+        // states due at t) per block — exactly zero on local steps.
+        let states_due = [self.k_p, self.k_m, self.k_v]
+            .iter()
+            .filter(|k| sync_due(**k, t))
+            .count();
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, blk)| SyncItem {
+                block: b,
+                class: self.classes[b],
+                bytes: blk.replicas[0].numel() * BYTES_F32 * states_due,
+                refresh: false,
+            })
+            .collect();
+        SyncPlan { items }
+    }
+
+    fn state_elements(&self) -> usize {
+        // Per worker: replica + m + v.
+        self.blocks
+            .iter()
+            .map(|blk| 3 * blk.replicas.len() * blk.replicas[0].numel())
+            .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::{codec, replicas_to_json};
+        use crate::util::json::Json;
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|blk| {
+                let ms: Vec<Matrix> = blk.adam.iter().map(|a| a.m.clone()).collect();
+                let vs: Vec<Matrix> = blk.adam.iter().map(|a| a.v.clone()).collect();
+                Json::obj(vec![
+                    ("params", replicas_to_json(&blk.replicas)),
+                    ("m", replicas_to_json(&ms)),
+                    ("v", replicas_to_json(&vs)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("init", codec::u64_to_json(self.init as u64)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::{codec, replicas_from_json};
+        let blocks = state.get("blocks").as_arr().ok_or("des-loc: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "des-loc: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("des-loc.blocks[{i}]");
+            let blk = &mut self.blocks[i];
+            let (rows, cols) = (blk.replicas[0].rows, blk.replicas[0].cols);
+            blk.replicas =
+                replicas_from_json(j.get("params"), rows, cols, workers, &format!("{what}.params"))?;
+            let ms = replicas_from_json(j.get("m"), rows, cols, workers, &format!("{what}.m"))?;
+            let vs = replicas_from_json(j.get("v"), rows, cols, workers, &format!("{what}.v"))?;
+            blk.adam = ms
+                .into_iter()
+                .zip(vs)
+                .map(|(m, v)| {
+                    let mut a = DenseAdamState::new(rows, cols);
+                    a.m = m;
+                    a.v = v;
+                    a
+                })
+                .collect();
+        }
+        self.init = codec::u64_from_json(state.get("init"), "des-loc.init")? != 0;
+        self.t = codec::u64_from_json(state.get("t"), "des-loc.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+    use crate::exec::ExecBackend;
+    use crate::util::rng::Xoshiro256;
+
+    fn run_steps(k_p: u64, k_m: u64, k_v: u64, steps: u64) -> (CommLedger, DesLoc, Vec<Matrix>) {
+        let blocks = vec![
+            BlockSpec {
+                name: "w".into(),
+                rows: 6,
+                cols: 5,
+                class: LayerClass::Linear,
+            },
+            BlockSpec {
+                name: "b".into(),
+                rows: 1,
+                cols: 7,
+                class: LayerClass::Vector,
+            },
+        ];
+        let mut opt = DesLoc::new(&blocks, AdamHyper::default(), 2, k_p, k_m, k_v);
+        let mut params = vec![Matrix::zeros(6, 5), Matrix::zeros(1, 7)];
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(11);
+        for _ in 0..steps {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    vec![
+                        Matrix::gaussian(6, 5, 1.0, &mut rng),
+                        Matrix::gaussian(1, 7, 1.0, &mut rng),
+                    ]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        (ledger, opt, params)
+    }
+
+    #[test]
+    fn local_steps_are_exactly_zero_bytes_and_plan_matches_ledger() {
+        let (ledger, opt, _) = run_steps(2, 4, 8, 8);
+        let numel = 6 * 5 + 7;
+        for t in 0..8u64 {
+            let plan = opt.sync_plan(t);
+            assert_eq!(plan.total_bytes(), ledger.step(t as usize).total, "step {t}");
+            let states_due = [2u64, 4, 8].iter().filter(|k| t % **k == 0).count();
+            assert_eq!(plan.total_bytes(), numel * BYTES_F32 * states_due, "step {t}");
+        }
+        // Odd steps are local: exact zero.
+        assert_eq!(ledger.step(1).total, 0);
+        assert_eq!(ledger.step(3).total, 0);
+        // Step 0 syncs all three states; step 4 params+m; step 2 params only.
+        assert_eq!(ledger.step(0).total, numel * BYTES_F32 * 3);
+        assert_eq!(ledger.step(4).total, numel * BYTES_F32 * 2);
+        assert_eq!(ledger.step(2).total, numel * BYTES_F32);
+    }
+
+    #[test]
+    fn params_advance_only_on_param_sync_steps() {
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 4,
+            cols: 4,
+            class: LayerClass::Linear,
+        }];
+        let mut opt = DesLoc::new(&blocks, AdamHyper::default(), 2, 3, 3, 3);
+        let mut params = vec![Matrix::zeros(4, 4)];
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(5);
+        let mut snapshots = Vec::new();
+        for _ in 0..7 {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| vec![Matrix::gaussian(4, 4, 1.0, &mut rng)])
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &ExecBackend::Sequential,
+            });
+            ledger.end_step();
+            snapshots.push(params[0].clone());
+        }
+        // Steps 0, 3, 6 sync params; 1, 2, 4, 5 leave them untouched.
+        for (t, changed) in [(1, false), (2, false), (3, true), (4, false), (5, false), (6, true)] {
+            let same = snapshots[t].data == snapshots[t - 1].data;
+            assert_eq!(same, !changed, "step {t}");
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_phase_and_replicas() {
+        let (_, opt, _) = run_steps(2, 4, 8, 5);
+        let state = opt.save_state();
+        let blocks = vec![
+            BlockSpec {
+                name: "w".into(),
+                rows: 6,
+                cols: 5,
+                class: LayerClass::Linear,
+            },
+            BlockSpec {
+                name: "b".into(),
+                rows: 1,
+                cols: 7,
+                class: LayerClass::Vector,
+            },
+        ];
+        let mut fresh = DesLoc::new(&blocks, AdamHyper::default(), 2, 2, 4, 8);
+        fresh.load_state(&state, 2).unwrap();
+        assert!(fresh.init);
+        for (a, b) in opt.blocks.iter().zip(&fresh.blocks) {
+            for (x, y) in a.replicas.iter().zip(&b.replicas) {
+                assert_eq!(x.data, y.data);
+            }
+            for (x, y) in a.adam.iter().zip(&b.adam) {
+                assert_eq!(x.m.data, y.m.data);
+                assert_eq!(x.v.data, y.v.data);
+            }
+        }
+        // Mid-local-phase counter survives: next plans line up.
+        for t in 5..13 {
+            assert_eq!(opt.sync_plan(t).total_bytes(), fresh.sync_plan(t).total_bytes());
+        }
+    }
+}

@@ -1,0 +1,484 @@
+//! LoRDO (Jovanović et al., PAPERS.md) — distributed low-rank
+//! optimization with INFREQUENT communication: every worker takes `H`
+//! purely local AdamW steps on its own parameter replica, then the
+//! round closes with one low-rank synchronization of the parameter
+//! *delta* Δᵢ = xᵢ − x (local replica minus the shared anchor), using
+//! the same warm-started single power iteration as PowerSGD — but on
+//! deltas once per H steps instead of gradients every step:
+//!
+//! * Pᵢ = Δᵢ Q   (m×r), all-reduced and orthonormalized to P̂,
+//! * Q'ᵢ = Δᵢᵀ P̂ (n×r), all-reduced to Q̄ (the next round's warm start),
+//! * x ← x + P̂ Q̄ᵀ, and every replica restarts from the new anchor.
+//!
+//! Vector blocks sync their replicas densely at the same cadence; Adam
+//! moments stay local forever (never communicated). The H−1 steps in
+//! between are **exactly zero bytes** — the generalized `sync_plan(t)`
+//! contract (DESIGN.md §13): per-block items with `bytes: 0`, driven by
+//! the same [`super::sync_due`] predicate as `step()` so plan==ledger
+//! stays byte-exact from any `seek`. Comm per round is O(r(m+n)),
+//! amortized O(r(m+n)/H) per step — below every per-step compressor
+//! here once H is large.
+
+use super::{sync_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
+use crate::comm::{collective, LayerClass, BYTES_F32};
+use crate::linalg::{gemm, orth, Matrix};
+use crate::model::BlockSpec;
+use crate::util::rng::Xoshiro256;
+
+struct LoCommon {
+    /// Per-worker parameter replicas (the local-update state).
+    replicas: Vec<Matrix>,
+    /// Per-worker Adam moments — local forever, never synchronized.
+    adam: Vec<DenseAdamState>,
+}
+
+struct LoBlock {
+    rank: usize,
+    /// Warm-started right factor Q (n×r), carried across rounds.
+    q: Matrix,
+    st: LoCommon,
+}
+
+enum BlockState {
+    /// Vectors: dense replica mean every H steps.
+    Dense(LoCommon),
+    /// Matrices: low-rank delta sync every H steps.
+    LowRank(LoBlock),
+}
+
+pub struct Lordo {
+    /// Target rank of the delta factorization (clamped per block).
+    pub rank: usize,
+    /// Local steps per round; the sync fires when `t % h == 0`.
+    pub h: u64,
+    hyper: AdamHyper,
+    classes: Vec<LayerClass>,
+    blocks: Vec<BlockState>,
+    /// Replicas start as copies of `ctx.params` on the first step;
+    /// persisted so a resumed run never re-seeds mid-flight.
+    init: bool,
+    t: u64,
+}
+
+impl Lordo {
+    pub fn new(blocks: &[BlockSpec], hyper: AdamHyper, workers: usize, rank: usize, h: u64) -> Self {
+        let mut rng = Xoshiro256::new(0x10D0);
+        let common = |b: &BlockSpec| LoCommon {
+            replicas: (0..workers).map(|_| Matrix::zeros(b.rows, b.cols)).collect(),
+            adam: (0..workers).map(|_| DenseAdamState::new(b.rows, b.cols)).collect(),
+        };
+        let states = blocks
+            .iter()
+            .map(|b| {
+                if b.class == LayerClass::Vector {
+                    BlockState::Dense(common(b))
+                } else {
+                    let r = rank.min(b.rows).min(b.cols);
+                    BlockState::LowRank(LoBlock {
+                        rank: r,
+                        q: orth(&Matrix::gaussian(b.cols, r, 1.0, &mut rng)),
+                        st: common(b),
+                    })
+                }
+            })
+            .collect();
+        Self {
+            rank,
+            h,
+            hyper,
+            classes: blocks.iter().map(|b| b.class).collect(),
+            blocks: states,
+            init: false,
+            t: 0,
+        }
+    }
+}
+
+impl DistOptimizer for Lordo {
+    fn name(&self) -> &'static str {
+        "lordo"
+    }
+
+    fn step(&mut self, ctx: &mut StepCtx) {
+        let t = self.t;
+        self.t += 1;
+        let t1 = self.t;
+        if !self.init {
+            for (b, blk) in self.blocks.iter_mut().enumerate() {
+                let st = match blk {
+                    BlockState::Dense(st) => st,
+                    BlockState::LowRank(lb) => &mut lb.st,
+                };
+                for r in st.replicas.iter_mut() {
+                    *r = ctx.params[b].clone();
+                }
+            }
+            self.init = true;
+        }
+        let due = sync_due(self.h, t);
+        for b in 0..ctx.params.len() {
+            let class = self.classes[b];
+            let st = match &mut self.blocks[b] {
+                BlockState::Dense(st) => st,
+                BlockState::LowRank(lb) => &mut lb.st,
+            };
+            // Local AdamW step: each worker's own replica, gradient,
+            // and moments. No communication.
+            for (w, g) in ctx.grads.iter().enumerate() {
+                st.adam[w].update_exec(
+                    &mut st.replicas[w],
+                    &g[b],
+                    &self.hyper,
+                    ctx.lr_mult,
+                    t1,
+                    ctx.exec,
+                );
+            }
+            if !due {
+                continue;
+            }
+            match &mut self.blocks[b] {
+                BlockState::Dense(st) => {
+                    collective::sync_mean(&mut st.replicas, class, ctx.ledger, ctx.topo, ctx.exec);
+                    ctx.params[b] = st.replicas[0].clone();
+                }
+                BlockState::LowRank(blk) => {
+                    // Δ_i = local replica − shared anchor.
+                    let deltas: Vec<Matrix> = blk
+                        .st
+                        .replicas
+                        .iter()
+                        .map(|r| {
+                            let mut d = r.clone();
+                            d.axpy(-1.0, &ctx.params[b]);
+                            d
+                        })
+                        .collect();
+                    // P_i = Δ_i Q (fanned out per worker); all-reduce; orth.
+                    let mut ps: Vec<Matrix> = ctx
+                        .exec
+                        .map_workers(deltas.len(), |i| gemm(&deltas[i], false, &blk.q, false));
+                    collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo, ctx.exec);
+                    let phat = orth(&ps[0]);
+                    // Q'_i = Δ_iᵀ P̂ ; all-reduce → next round's warm start.
+                    let mut qs: Vec<Matrix> = ctx
+                        .exec
+                        .map_workers(deltas.len(), |i| gemm(&deltas[i], true, &phat, false));
+                    collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo, ctx.exec);
+                    blk.q = qs.swap_remove(0);
+                    // Anchor absorbs the rank-r averaged delta; every
+                    // replica restarts the next round from it.
+                    let update = gemm(&phat, false, &blk.q, true);
+                    ctx.params[b].add_assign(&update);
+                    for r in blk.st.replicas.iter_mut() {
+                        *r = ctx.params[b].clone();
+                    }
+                }
+            }
+        }
+    }
+
+    fn sync_plan(&self, t: u64) -> SyncPlan {
+        // Same predicate as step(): H−1 of every H steps are exact-zero;
+        // the round boundary pays P (m×r) + Q' (n×r) per matrix block
+        // and a dense replica mean per vector block.
+        let due = sync_due(self.h, t);
+        let items = self
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(b, s)| {
+                let elems = if !due {
+                    0
+                } else {
+                    match s {
+                        BlockState::Dense(st) => st.replicas[0].numel(),
+                        BlockState::LowRank(blk) => {
+                            blk.st.replicas[0].rows * blk.rank + blk.q.rows * blk.rank
+                        }
+                    }
+                };
+                SyncItem {
+                    block: b,
+                    class: self.classes[b],
+                    bytes: elems * BYTES_F32,
+                    refresh: false,
+                }
+            })
+            .collect();
+        SyncPlan { items }
+    }
+
+    fn state_elements(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => 3 * st.replicas.len() * st.replicas[0].numel(),
+                BlockState::LowRank(blk) => {
+                    blk.q.numel() + 3 * blk.st.replicas.len() * blk.st.replicas[0].numel()
+                }
+            })
+            .sum()
+    }
+
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::{codec, replicas_to_json};
+        use crate::util::json::Json;
+        let common = |st: &LoCommon| {
+            let ms: Vec<Matrix> = st.adam.iter().map(|a| a.m.clone()).collect();
+            let vs: Vec<Matrix> = st.adam.iter().map(|a| a.v.clone()).collect();
+            vec![
+                ("params", replicas_to_json(&st.replicas)),
+                ("m", replicas_to_json(&ms)),
+                ("v", replicas_to_json(&vs)),
+            ]
+        };
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|s| match s {
+                BlockState::Dense(st) => {
+                    let mut fields = vec![("kind", Json::str("dense"))];
+                    fields.extend(common(st));
+                    Json::obj(fields)
+                }
+                BlockState::LowRank(blk) => {
+                    let mut fields = vec![
+                        ("kind", Json::str("lowrank")),
+                        ("q", codec::matrix_to_json(&blk.q)),
+                    ];
+                    fields.extend(common(&blk.st));
+                    Json::obj(fields)
+                }
+            })
+            .collect();
+        Json::obj(vec![
+            ("t", codec::u64_to_json(self.t)),
+            ("init", codec::u64_to_json(self.init as u64)),
+            ("blocks", Json::arr(blocks)),
+        ])
+    }
+
+    fn load_state(
+        &mut self,
+        state: &crate::util::json::Json,
+        workers: usize,
+    ) -> Result<(), String> {
+        use crate::checkpoint::{codec, replicas_from_json};
+        let blocks = state.get("blocks").as_arr().ok_or("lordo: missing blocks")?;
+        if blocks.len() != self.blocks.len() {
+            return Err(format!(
+                "lordo: checkpoint has {} blocks, run has {}",
+                blocks.len(),
+                self.blocks.len()
+            ));
+        }
+        let load_common =
+            |st: &mut LoCommon, j: &crate::util::json::Json, what: &str| -> Result<(), String> {
+                let (rows, cols) = (st.replicas[0].rows, st.replicas[0].cols);
+                st.replicas =
+                    replicas_from_json(j.get("params"), rows, cols, workers, &format!("{what}.params"))?;
+                let ms = replicas_from_json(j.get("m"), rows, cols, workers, &format!("{what}.m"))?;
+                let vs = replicas_from_json(j.get("v"), rows, cols, workers, &format!("{what}.v"))?;
+                st.adam = ms
+                    .into_iter()
+                    .zip(vs)
+                    .map(|(m, v)| {
+                        let mut a = DenseAdamState::new(rows, cols);
+                        a.m = m;
+                        a.v = v;
+                        a
+                    })
+                    .collect();
+                Ok(())
+            };
+        for (i, j) in blocks.iter().enumerate() {
+            let what = format!("lordo.blocks[{i}]");
+            match (&mut self.blocks[i], j.get("kind").as_str()) {
+                (BlockState::Dense(st), Some("dense")) => load_common(st, j, &what)?,
+                (BlockState::LowRank(blk), Some("lowrank")) => {
+                    blk.q = codec::matrix_from_json_expect(j.get("q"), blk.q.rows, blk.q.cols, &what)?;
+                    load_common(&mut blk.st, j, &what)?;
+                }
+                (_, kind) => {
+                    return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
+                }
+            }
+        }
+        self.init = codec::u64_from_json(state.get("init"), "lordo.init")? != 0;
+        self.t = codec::u64_from_json(state.get("t"), "lordo.t")?;
+        Ok(())
+    }
+
+    fn seek(&mut self, t: u64) {
+        self.t = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CommLedger, Topology};
+    use crate::exec::ExecBackend;
+
+    fn blocks() -> Vec<BlockSpec> {
+        vec![
+            BlockSpec {
+                name: "w".into(),
+                rows: 10,
+                cols: 8,
+                class: LayerClass::Linear,
+            },
+            BlockSpec {
+                name: "b".into(),
+                rows: 1,
+                cols: 6,
+                class: LayerClass::Vector,
+            },
+        ]
+    }
+
+    fn drive(opt: &mut Lordo, steps: u64, seed: u64) -> (CommLedger, Vec<Matrix>) {
+        let mut params = vec![Matrix::zeros(10, 8), Matrix::zeros(1, 6)];
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(seed);
+        for _ in 0..steps {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    vec![
+                        Matrix::gaussian(10, 8, 1.0, &mut rng),
+                        Matrix::gaussian(1, 6, 1.0, &mut rng),
+                    ]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        (ledger, params)
+    }
+
+    #[test]
+    fn h_minus_one_of_every_h_steps_are_zero_bytes() {
+        let mut opt = Lordo::new(&blocks(), AdamHyper::default(), 2, 4, 3);
+        let (ledger, _) = drive(&mut opt, 7, 3);
+        // Rank clamps to 4; sync pays (10·4 + 8·4) for the matrix plus
+        // 6 dense vector elements.
+        let sync_bytes = (10 * 4 + 8 * 4 + 6) * BYTES_F32;
+        for t in 0..7u64 {
+            let expect = if t % 3 == 0 { sync_bytes } else { 0 };
+            assert_eq!(ledger.step(t as usize).total, expect, "step {t}");
+            assert_eq!(opt.sync_plan(t).total_bytes(), expect, "plan step {t}");
+            assert_eq!(opt.sync_plan(t).items.len(), 2);
+        }
+    }
+
+    #[test]
+    fn anchor_moves_toward_local_progress_each_round() {
+        // Constant RANK-1 gradient g = u·vᵀ: Adam's steady direction is
+        // sign(g) = sign(u)·sign(v)ᵀ — still rank 1 — so the per-round
+        // delta fits entirely inside the rank-4 factorization and the
+        // anchor should absorb essentially all synced local progress.
+        let specs = vec![BlockSpec {
+            name: "w".into(),
+            rows: 12,
+            cols: 9,
+            class: LayerClass::Linear,
+        }];
+        let mut rng = Xoshiro256::new(7);
+        let u = Matrix::gaussian(12, 1, 1.0, &mut rng);
+        let v = Matrix::gaussian(9, 1, 1.0, &mut rng);
+        let mut g = Matrix::zeros(12, 9);
+        for i in 0..12 {
+            for j in 0..9 {
+                g.data[i * 9 + j] = u.data[i] * v.data[j];
+            }
+        }
+        let mut opt = Lordo::new(&specs, AdamHyper::default(), 1, 4, 3);
+        let mut params = vec![Matrix::zeros(12, 9)];
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(1);
+        for _ in 0..12 {
+            let mut grads = vec![vec![g.clone()]];
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        // Sign descent at lr 1e-2: the syncs at t=0,3,6,9 absorb 10 of
+        // the 12 local steps' movement, ≈ −lr·10·sign(g); require most
+        // of that magnitude, tightly aligned.
+        let mut ideal = Matrix::zeros(12, 9);
+        for (i, x) in g.data.iter().enumerate() {
+            ideal.data[i] = -0.01 * 10.0 * x.signum();
+        }
+        let cos = {
+            let num: f32 = params[0].data.iter().zip(&ideal.data).map(|(a, b)| a * b).sum();
+            num / (params[0].frob_norm() * ideal.frob_norm())
+        };
+        assert!(cos > 0.95, "cosine {cos}");
+        assert!(params[0].frob_norm() > 0.7 * ideal.frob_norm());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_mid_round_is_exact() {
+        let mut opt = Lordo::new(&blocks(), AdamHyper::default(), 2, 4, 3);
+        // 5 steps: cut lands mid-round (two local steps past the t=3 sync).
+        let (_, params_a) = drive(&mut opt, 5, 9);
+        let state = opt.save_state();
+        let mut fresh = Lordo::new(&blocks(), AdamHyper::default(), 2, 4, 3);
+        fresh.load_state(&state, 2).unwrap();
+        assert!(fresh.init);
+        // Continuing both for 4 more steps stays bitwise identical.
+        let (_, pa) = drive_from(&mut opt, params_a.clone(), 4, 77);
+        let (_, pb) = drive_from(&mut fresh, params_a, 4, 77);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    fn drive_from(
+        opt: &mut Lordo,
+        mut params: Vec<Matrix>,
+        steps: u64,
+        seed: u64,
+    ) -> (CommLedger, Vec<Matrix>) {
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(seed);
+        for _ in 0..steps {
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| {
+                    vec![
+                        Matrix::gaussian(10, 8, 1.0, &mut rng),
+                        Matrix::gaussian(1, 6, 1.0, &mut rng),
+                    ]
+                })
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &ExecBackend::Sequential,
+            });
+            ledger.end_step();
+        }
+        (ledger, params)
+    }
+
+    use crate::util::rng::Xoshiro256;
+}

@@ -11,13 +11,22 @@
 //! * [`sign_adam::SignAdam`] — 1-bit sign compression with error feedback
 //!   and 0/1-Adam-style variance freezing (Lu et al., 2022),
 //! * [`topk_adam::TopKAdam`] — per-block top-k sparse synchronization
-//!   with error feedback (SCAPE-style extreme sparsity).
+//!   with error feedback (SCAPE-style extreme sparsity),
+//! * [`des_loc::DesLoc`] — desynchronized per-state sync periods with
+//!   purely local steps in between (Iacob et al., 2025),
+//! * [`lordo::Lordo`] — H local steps, then one low-rank delta sync
+//!   (Jovanović et al.).
 //!
 //! All optimizers operate on a replicated parameter set plus per-worker
 //! gradients, synchronize through the simulated collectives, and meter
-//! every communicated tensor through the [`CommLedger`].
+//! every communicated tensor through the [`CommLedger`]. The last two
+//! are *local-update* methods: most of their steps communicate exactly
+//! zero bytes, which `sync_plan(t)` expresses as per-block items with
+//! `bytes: 0` (DESIGN.md §13).
 
 pub mod adamw;
+pub mod des_loc;
+pub mod lordo;
 pub mod onesided;
 pub mod powersgd;
 pub mod schedule;
@@ -33,6 +42,8 @@ use crate::model::BlockSpec;
 use crate::util::json::Json;
 
 pub use adamw::DenseAdamW;
+pub use des_loc::DesLoc;
+pub use lordo::Lordo;
 pub use onesided::OneSidedAdam;
 pub use powersgd::PowerSgd;
 pub use schedule::LrSchedule;
@@ -131,6 +142,18 @@ pub fn refresh_due(init_step: Option<u64>, next_step: u64, every: u64, t: u64) -
     t % every.max(1) == 0
         || init_step == Some(t)
         || (init_step.is_none() && t == next_step)
+}
+
+/// THE sync-cadence predicate for local-update methods ([`DesLoc`],
+/// [`Lordo`]), shared by `step()` and `sync_plan()` for the same reason
+/// [`refresh_due`] is shared by the refresh-based methods: one
+/// predicate, two call sites, zero room for the executed and predicted
+/// schedules to diverge. Pure in `t` (no initialization bookkeeping —
+/// local-update state needs no mid-period first-step special case, the
+/// cadence itself fires at `t == 0`), so any `seek` lands on the exact
+/// same schedule the uninterrupted run followed.
+pub fn sync_due(every: u64, t: u64) -> bool {
+    t % every.max(1) == 0
 }
 
 pub trait DistOptimizer {
@@ -395,6 +418,25 @@ mod tests {
         assert!(refresh_due(Some(7), 9, 5, 10));
         // Degenerate every=0 must not divide by zero.
         assert!(refresh_due(None, 0, 0, 3));
+    }
+
+    #[test]
+    fn sync_due_is_pure_cadence_from_any_seek() {
+        // Fires at t=0 (every run's first step syncs) and on multiples.
+        assert!(sync_due(4, 0));
+        assert!(!sync_due(4, 1));
+        assert!(!sync_due(4, 3));
+        assert!(sync_due(4, 4));
+        assert!(sync_due(4, 8));
+        // every=1 → every step communicates (dense-cadence degenerate).
+        assert!(sync_due(1, 5));
+        // every=0 must not divide by zero.
+        assert!(sync_due(0, 3));
+        // Purity in t: seeking to any step gives the same answer the
+        // uninterrupted schedule had — no init_step/next_step state.
+        for t in 0..20 {
+            assert_eq!(sync_due(6, t), t % 6 == 0);
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
-use crate::linalg::{matmul, matmul_nt, matmul_tn, rsvd, svd_truncated, Matrix};
+use crate::linalg::{gemm, rsvd, svd_truncated, Matrix};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
 
@@ -145,9 +145,9 @@ impl DistOptimizer for OneSidedAdam {
                     let grads_ref = &*ctx.grads;
                     let mut proj: Vec<Matrix> = ctx.exec.map_workers(grads_ref.len(), |i| {
                         if blk.left {
-                            matmul_tn(&blk.basis, &grads_ref[i][b]) // r×n
+                            gemm(&blk.basis, true, &grads_ref[i][b], false) // r×n
                         } else {
-                            matmul(&grads_ref[i][b], &blk.basis) // m×r
+                            gemm(&grads_ref[i][b], false, &blk.basis, false) // m×r
                         }
                     });
                     collective::sync_mean(&mut proj, class, ctx.ledger, ctx.topo, ctx.exec);
@@ -170,9 +170,9 @@ impl DistOptimizer for OneSidedAdam {
 
                     // Lift back: ΔW = U D (left) or D Vᵀ (right).
                     let dw = if blk.left {
-                        matmul(&blk.basis, &d)
+                        gemm(&blk.basis, false, &d, false)
                     } else {
-                        matmul_nt(&d, &blk.basis)
+                        gemm(&d, false, &blk.basis, true)
                     };
                     let lr = h.lr * ctx.lr_mult;
                     let w = &mut ctx.params[b];

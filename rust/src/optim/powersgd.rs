@@ -7,7 +7,7 @@
 
 use super::{AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
-use crate::linalg::{matmul, matmul_nt, matmul_tn, orth, Matrix};
+use crate::linalg::{gemm, orth, Matrix};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
 
@@ -110,17 +110,17 @@ impl DistOptimizer for PowerSgd {
                     // P_i = X_i Q (per-worker, fanned out); all-reduce;
                     // orthonormalize.
                     let mut ps: Vec<Matrix> =
-                        ctx.exec.map_workers(comp.len(), |i| matmul(&comp[i], &blk.q));
+                        ctx.exec.map_workers(comp.len(), |i| gemm(&comp[i], false, &blk.q, false));
                     collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo, ctx.exec);
                     let phat = orth(&ps[0]);
                     // Q'_i = X_iᵀ P̂ ; all-reduce.
                     let mut qs: Vec<Matrix> =
-                        ctx.exec.map_workers(comp.len(), |i| matmul_tn(&comp[i], &phat));
+                        ctx.exec.map_workers(comp.len(), |i| gemm(&comp[i], true, &phat, false));
                     collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo, ctx.exec);
                     blk.q = qs.swap_remove(0);
 
                     // Decompressed averaged gradient Ĝ = P̂ Qᵀ.
-                    let ghat = matmul_nt(&phat, &blk.q);
+                    let ghat = gemm(&phat, false, &blk.q, true);
                     // Error feedback: e_i ← X_i − Ĝ.
                     for (e, x) in blk.errors.iter_mut().zip(comp.into_iter()) {
                         *e = x;

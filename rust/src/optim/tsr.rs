@@ -10,7 +10,7 @@
 
 use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
-use crate::linalg::{matmul, matmul_tn, matrix::Matrix, orth, svd_gram};
+use crate::linalg::{gemm, matrix::Matrix, orth, svd_gram};
 use crate::linalg::matmul::{core_project, lift};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
@@ -159,13 +159,13 @@ impl TsrAdam {
         // worker's sketch reads only its own gradient — backend-exact).
         let pairs: Vec<(Matrix, Matrix)> = exec.map_workers(grads.len(), |i| {
             let g = grads[i];
-            let mut q = orth(&matmul(g, &omega)); // m×k
+            let mut q = orth(&gemm(g, false, &omega, false)); // m×k
             for _ in 0..power_q {
-                let q_row = orth(&matmul_tn(g, &q)); // n×k
-                q = orth(&matmul(g, &q_row)); // m×k
+                let q_row = orth(&gemm(g, true, &q, false)); // n×k
+                q = orth(&gemm(g, false, &q_row, false)); // m×k
             }
             // Worker-local reduced matrix B_i = Q_iᵀ G_i (k×n).
-            let b = matmul_tn(&q, g);
+            let b = gemm(&q, true, g, false);
             (q, b)
         });
         let (mut qs, mut bs): (Vec<Matrix>, Vec<Matrix>) = pairs.into_iter().unzip();
@@ -184,7 +184,7 @@ impl TsrAdam {
         // Small SVD of B̄ (k×n) and base refresh:
         //   U ← Q̄ Ũ[:, :r],  V ← Ṽ[:, :r].
         let (ut, _sigma, vt) = svd_gram(bbar);
-        blk.u = matmul(&qbar, &ut.take_cols(blk.rank));
+        blk.u = gemm(&qbar, false, &ut.take_cols(blk.rank), false);
         blk.v = vt.take_cols(blk.rank);
     }
 

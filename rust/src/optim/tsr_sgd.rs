@@ -10,7 +10,7 @@ use super::tsr::TsrConfig;
 use super::{refresh_due, DistOptimizer, StepCtx, SyncItem, SyncPlan};
 use crate::comm::{collective, LayerClass};
 use crate::linalg::matmul::{core_project, lift};
-use crate::linalg::{matmul, matmul_tn, orth, svd_gram, Matrix};
+use crate::linalg::{gemm, orth, svd_gram, Matrix};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
 
@@ -133,12 +133,12 @@ impl DistOptimizer for TsrSgd {
                         let pairs: Vec<(Matrix, Matrix)> =
                             ctx.exec.map_workers(grads_b.len(), |i| {
                                 let g = grads_b[i];
-                                let mut q = orth(&matmul(g, &omega));
+                                let mut q = orth(&gemm(g, false, &omega, false));
                                 for _ in 0..power_q {
-                                    let q_row = orth(&matmul_tn(g, &q));
-                                    q = orth(&matmul(g, &q_row));
+                                    let q_row = orth(&gemm(g, true, &q, false));
+                                    q = orth(&gemm(g, false, &q_row, false));
                                 }
-                                let bmat = matmul_tn(&q, g);
+                                let bmat = gemm(&q, true, g, false);
                                 (q, bmat)
                             });
                         let (mut qs, mut bs): (Vec<Matrix>, Vec<Matrix>) =
@@ -151,7 +151,7 @@ impl DistOptimizer for TsrSgd {
                             qbar = orth(&qbar);
                         }
                         let (ut, _s, vt) = svd_gram(&bs[0]);
-                        let u_new = matmul(&qbar, &ut.take_cols(blk.rank));
+                        let u_new = gemm(&qbar, false, &ut.take_cols(blk.rank), false);
                         let v_new = vt.take_cols(blk.rank);
 
                         // Re-express the momentum in the new bases via the
@@ -369,7 +369,7 @@ mod tests {
         // the first refresh re-expression.
         let a = Matrix::gaussian(24, 4, 1.0, &mut rng);
         let bmat = Matrix::gaussian(4, 24, 1.0, &mut rng);
-        let gfix = matmul(&a, &bmat);
+        let gfix = gemm(&a, false, &bmat, false);
         let mut params = vec![Matrix::zeros(24, 24)];
         let cfg = TsrConfig {
             rank: 6,

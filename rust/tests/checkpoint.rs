@@ -22,7 +22,7 @@ use tsr::train::lm_source::LmSource;
 use tsr::train::{GradSource, Trainer};
 use tsr::util::json::Json;
 
-fn all_seven(k: usize) -> Vec<MethodCfg> {
+fn all_nine(k: usize) -> Vec<MethodCfg> {
     let tsr = TsrConfig {
         rank: 8,
         rank_emb: 4,
@@ -43,6 +43,11 @@ fn all_seven(k: usize) -> Vec<MethodCfg> {
         MethodCfg::PowerSgd { rank: 5 },
         MethodCfg::Sign { k_var: k },
         MethodCfg::TopK { keep_frac: 0.03 },
+        // Local-update methods: the cuts below (7, 10) land mid-local-
+        // phase for these cadences, exercising the phase counters in
+        // their checkpoints.
+        MethodCfg::DesLoc { k_p: 2, k_m: 4, k_v: 8 },
+        MethodCfg::Lordo { rank: 6, h: 5 },
     ]
 }
 
@@ -117,12 +122,12 @@ fn run_interrupted(m: &MethodCfg, cut: usize, steps: usize) -> String {
 
 /// Tentpole: interrupt at a MID-PERIOD step (cut=7, refresh k=5) and
 /// at a refresh boundary (cut=10); both resumes must be byte-identical
-/// to the uninterrupted run for all seven methods.
+/// to the uninterrupted run for all nine methods.
 #[test]
 fn resumed_run_is_byte_identical_to_uninterrupted_for_every_method() {
     let k = 5;
     let steps = 17;
-    for m in all_seven(k) {
+    for m in all_nine(k) {
         let full = run_uninterrupted(&m, steps);
         for cut in [7usize, 10] {
             let resumed = run_interrupted(&m, cut, steps);
@@ -147,7 +152,7 @@ fn seq_written_checkpoint_resumes_bitwise_under_process_backend() {
     let k = 5;
     let steps = 17;
     let cut = 7;
-    for m in all_seven(k) {
+    for m in all_nine(k) {
         // Reference: the uninterrupted run, fully sequential.
         let full = {
             let (mut sim, mut opt, mut params) = fresh_setup(&m);

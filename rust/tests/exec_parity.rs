@@ -36,7 +36,7 @@ fn all_backends() -> [ExecBackend; 3] {
     [ExecBackend::Sequential, ExecBackend::threaded(), process_exec()]
 }
 
-/// All seven methods at parity-test scale, refresh period 4.
+/// All nine methods at parity-test scale, refresh period 4.
 fn all_methods() -> Vec<MethodCfg> {
     let tsr_cfg = TsrConfig {
         rank: 8,
@@ -58,6 +58,10 @@ fn all_methods() -> Vec<MethodCfg> {
         MethodCfg::PowerSgd { rank: 8 },
         MethodCfg::Sign { k_var: 4 },
         MethodCfg::TopK { keep_frac: 0.05 },
+        // Local-update methods: the 6-step runs cover zero-byte local
+        // steps, partial-state syncs (m at t=4) and the full t=0 sync.
+        MethodCfg::DesLoc { k_p: 2, k_m: 4, k_v: 4 },
+        MethodCfg::Lordo { rank: 8, h: 3 },
     ]
 }
 
@@ -123,7 +127,7 @@ fn assert_backend_parity(method: &MethodCfg, topo: Topology, steps: usize, label
     assert!(l_seq.step(0).total > 0, "{label}: no bytes metered");
 }
 
-/// The full matrix: all 7 methods × {single_node, multi_node}, one
+/// The full matrix: all 9 methods × {single_node, multi_node}, one
 /// refresh period (K = 4) plus two steady steps each.
 #[test]
 fn all_methods_bitwise_identical_across_backends() {

@@ -8,8 +8,8 @@
 
 use tsr::comm::{CommLedger, LayerClass, Topology};
 use tsr::exp::{
-    adamw_profile, onesided_profile, sign_profile, topk_profile, tsr_profile, MethodCfg,
-    TsrParams,
+    adamw_profile, desloc_profile, lordo_profile, onesided_profile, sign_profile, topk_profile,
+    tsr_profile, MethodCfg, TsrParams,
 };
 use tsr::linalg::Matrix;
 use tsr::model::ModelSpec;
@@ -141,6 +141,41 @@ fn tsr_embedding_rank_path_bytes_exact() {
     assert!(ledger.step(4).linear > ledger.step(1).linear);
 }
 
+/// Tentpole acceptance: the local-update methods' metered bytes equal
+/// their closed-form profiles with exact f64 equality, over a window
+/// that contains purely-local (zero-byte) steps, partial-state syncs
+/// (DES-LOC params-only and params+m steps) and the full t=0 sync.
+/// Both sides sum the same integers and divide once, so `==` on f64 is
+/// the right comparison — any drift is a real schedule bug.
+#[test]
+fn local_update_bytes_match_analytic_profiles_over_one_period() {
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+
+    // DES-LOC cadences 2/4/8: lcm period = 8 steps. Syncs land at
+    // t=0 (p+m+v), t=2 (p), t=4 (p+m), t=6 (p); t odd is zero-byte.
+    let (k_p, k_m, k_v) = (2u64, 4u64, 8u64);
+    let m = MethodCfg::DesLoc { k_p, k_m, k_v };
+    let ledger = run_ledger(&spec, &m, 8, 2);
+    let expect = desloc_profile(&spec, k_p, k_m, k_v);
+    assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
+    assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+    for t in [1usize, 3, 5, 7] {
+        assert_eq!(ledger.step(t).total, 0, "desloc local step {t} must meter zero");
+    }
+    assert!(ledger.step(2).total > 0 && ledger.step(2).total < ledger.step(0).total);
+    assert!(ledger.step(4).total > ledger.step(2).total, "p+m > p-only sync");
+
+    // LoRDO h=4: one sync step (t=0) then three exactly-zero steps.
+    let (rank, h) = (6usize, 4u64);
+    let ledger = run_ledger(&spec, &MethodCfg::Lordo { rank, h }, h as usize, 2);
+    let expect = lordo_profile(&spec, rank, h);
+    assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
+    assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+    for t in 1..h as usize {
+        assert_eq!(ledger.step(t).total, 0, "lordo local step {t} must meter zero");
+    }
+}
+
 /// The compressed-communication baselines keep their qualitative byte
 /// signatures end to end: sign ≈ dense/32 steady with dense peaks; top-k
 /// perfectly flat.
@@ -200,6 +235,15 @@ fn prop_plan_ledger_parity_on_ragged_shards_and_random_seek() {
             MethodCfg::PowerSgd { rank: 5 },
             MethodCfg::Sign { k_var: k },
             MethodCfg::TopK { keep_frac: 0.03 },
+            MethodCfg::DesLoc {
+                k_p: k as u64,
+                k_m: 2 * k as u64,
+                k_v: 2 * k as u64,
+            },
+            MethodCfg::Lordo {
+                rank: 6,
+                h: k as u64,
+            },
         ];
         for m in methods {
             let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
@@ -241,6 +285,99 @@ fn prop_plan_ledger_parity_on_ragged_shards_and_random_seek() {
                     "{} V={vocab} H={hidden} W={workers} k={k} t0={t0} step {} refresh",
                     m.label(),
                     t0 + i
+                );
+            }
+        }
+    });
+}
+
+/// Satellite (property): the generalized step/sync contract for the
+/// local-update family. Under randomized cadences, ragged shards and
+/// mid-period `seek()` points, (a) `sync_plan(t).total_bytes()` is
+/// **exactly zero** precisely on the steps where no state's cadence
+/// fires (`sync_due` is the single source of truth for both sides),
+/// and (b) the executed ledger column equals the planned column
+/// byte-for-byte from the seek point onward.
+#[test]
+fn prop_local_update_zero_byte_steps_and_plan_ledger_parity() {
+    use tsr::optim::sync_due;
+    use tsr::util::prop::{check, dim};
+    check("local-update zero-byte+parity", 8, |rng| {
+        let vocab = 2 * dim(rng, 80, 140) + 1;
+        let hidden = 2 * dim(rng, 8, 14) + 1;
+        let spec = ModelSpec::proxy(vocab, hidden, 2 * hidden, 1, 2);
+        let workers = if dim(rng, 0, 1) == 0 { 2 } else { 4 };
+        let k_p = dim(rng, 2, 5) as u64;
+        let k_m = k_p * dim(rng, 2, 3) as u64;
+        let k_v = k_m * dim(rng, 2, 3) as u64;
+        let h = dim(rng, 2, 6) as u64;
+        let t0 = dim(rng, 0, 2 * k_v as usize) as u64;
+        let window = (k_v + 2).max(h + 2);
+        let desloc = MethodCfg::DesLoc { k_p, k_m, k_v };
+        let lordo = MethodCfg::Lordo {
+            rank: dim(rng, 3, 8),
+            h,
+        };
+        for m in [desloc, lordo] {
+            let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
+            let blocks = sim.blocks().to_vec();
+            assert!(
+                blocks.iter().any(|b| b.numel() % workers != 0),
+                "generator must produce ragged shards"
+            );
+            let mut opt = m.build(&blocks, AdamHyper::default(), workers);
+            opt.seek(t0);
+            let due = |t: u64| match m {
+                MethodCfg::DesLoc { k_p, k_m, k_v } => {
+                    sync_due(k_p, t) || sync_due(k_m, t) || sync_due(k_v, t)
+                }
+                MethodCfg::Lordo { h, .. } => sync_due(h, t),
+                _ => unreachable!(),
+            };
+            let plans: Vec<_> = (t0..t0 + window).map(|t| opt.sync_plan(t)).collect();
+            for (i, plan) in plans.iter().enumerate() {
+                let t = t0 + i as u64;
+                if due(t) {
+                    assert!(
+                        plan.total_bytes() > 0,
+                        "{} k=({k_p},{k_m},{k_v}) h={h} t={t}: sync step plans 0 bytes",
+                        m.label()
+                    );
+                } else {
+                    assert_eq!(
+                        plan.total_bytes(),
+                        0,
+                        "{} k=({k_p},{k_m},{k_v}) h={h} t={t}: local step must plan EXACTLY 0",
+                        m.label()
+                    );
+                }
+                // Local steps still enumerate every block (the timing
+                // engine buckets per block even at zero payload).
+                assert_eq!(plan.items.len(), blocks.len());
+            }
+            let mut params = sim.init_params(1);
+            let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+            let topo = Topology::multi_node(2, workers.div_ceil(2));
+            let mut ledger = CommLedger::new();
+            for t in t0..t0 + window {
+                sim.compute(&params, t as usize, &mut grads);
+                opt.step(&mut StepCtx {
+                    params: &mut params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &topo,
+                    lr_mult: 1.0,
+                    exec: &tsr::exec::ExecBackend::Sequential,
+                });
+                ledger.end_step();
+            }
+            for (i, plan) in plans.iter().enumerate() {
+                assert_eq!(
+                    plan.total_bytes(),
+                    ledger.step(i).total,
+                    "{} V={vocab} H={hidden} W={workers} t0={t0} step {}",
+                    m.label(),
+                    t0 + i as u64
                 );
             }
         }

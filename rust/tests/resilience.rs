@@ -19,7 +19,7 @@ use tsr::optim::TsrConfig;
 use tsr::resilience::{elastic_partner, Drill, DrillCfg};
 use tsr::sim::{simulate_plans_adv, Adversity, JitterModel, SimCfg, StragglerModel};
 
-fn all_seven(k: usize) -> Vec<MethodCfg> {
+fn all_nine(k: usize) -> Vec<MethodCfg> {
     let tsr = TsrConfig {
         rank: 8,
         rank_emb: 4,
@@ -40,6 +40,10 @@ fn all_seven(k: usize) -> Vec<MethodCfg> {
         MethodCfg::PowerSgd { rank: 5 },
         MethodCfg::Sign { k_var: k },
         MethodCfg::TopK { keep_frac: 0.03 },
+        // Local-update methods: the kill step (4) lands mid-local-phase
+        // for both cadences.
+        MethodCfg::DesLoc { k_p: 3, k_m: 6, k_v: 6 },
+        MethodCfg::Lordo { rank: 6, h: 3 },
     ]
 }
 
@@ -114,12 +118,12 @@ fn jitter_is_deterministic_monotone_and_bitwise_clean_at_amp_zero() {
 }
 
 /// Tentpole contract, tier 1: kill at a mid-period step and resume at
-/// the SAME world size — byte-identical metrics JSON for all seven
+/// the SAME world size — byte-identical metrics JSON for all nine
 /// methods, on both execution backends.
 #[test]
 fn kill_and_same_world_resume_is_bitwise_for_all_methods_on_both_backends() {
     for exec in [ExecBackend::Sequential, ExecBackend::Threaded { threads: 2 }] {
-        for m in all_seven(5) {
+        for m in all_nine(5) {
             let mut dc = DrillCfg::quick(m, 2, 9, 4);
             dc.exec = exec;
             let drill = Drill::prepare(dc);
@@ -139,7 +143,8 @@ fn kill_and_same_world_resume_is_bitwise_for_all_methods_on_both_backends() {
 
 /// Tentpole contract, tier 2: elastic resumes (shrink 4->3, grow 2->3)
 /// stay within the loss-trajectory tolerance on the quad source for
-/// the four headline families.
+/// the headline families, the replica-carrying local-update methods
+/// included (their elastic restore broadcasts the canonical mean).
 #[test]
 fn elastic_resume_tracks_the_full_run_within_tolerance() {
     let methods = || {
@@ -155,6 +160,8 @@ fn elastic_resume_tracks_the_full_run_within_tolerance() {
             }),
             MethodCfg::TopK { keep_frac: 0.05 },
             MethodCfg::Sign { k_var: 5 },
+            MethodCfg::DesLoc { k_p: 3, k_m: 6, k_v: 6 },
+            MethodCfg::Lordo { rank: 6, h: 4 },
         ]
     };
     for (from, to) in [(4usize, 3usize), (2, 3)] {
@@ -199,10 +206,10 @@ fn soak_json_is_byte_identical_across_runs_and_backends() {
         "threaded backend must reproduce sequential bytes"
     );
 
-    // 1 worker count x 3 topologies x 3 scenarios x 4 methods.
-    assert_eq!(a.get("cells").as_arr().unwrap().len(), 36);
-    // 1 worker count x 3 topologies x 4 methods x {same, elastic}.
-    assert_eq!(a.get("drills").as_arr().unwrap().len(), 24);
+    // 1 worker count x 3 topologies x 3 scenarios x 6 methods.
+    assert_eq!(a.get("cells").as_arr().unwrap().len(), 54);
+    // 1 worker count x 3 topologies x 6 methods x {same, elastic}.
+    assert_eq!(a.get("drills").as_arr().unwrap().len(), 36);
     for d in a.get("drills").as_arr().unwrap() {
         assert_eq!(d.get("scenario").as_str().unwrap(), "kill_resume");
         if d.get("elastic").as_bool() == Some(false) {

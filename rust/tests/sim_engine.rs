@@ -21,7 +21,7 @@ use tsr::sim::{simulate_method, simulate_step, SimCfg};
 use tsr::train::gradsim::QuadraticSim;
 use tsr::train::GradSource;
 
-fn all_seven(k: usize) -> Vec<MethodCfg> {
+fn all_nine(k: usize) -> Vec<MethodCfg> {
     let tsr = TsrConfig {
         rank: 8,
         rank_emb: 4,
@@ -42,6 +42,8 @@ fn all_seven(k: usize) -> Vec<MethodCfg> {
         MethodCfg::PowerSgd { rank: 5 },
         MethodCfg::Sign { k_var: k },
         MethodCfg::TopK { keep_frac: 0.03 },
+        MethodCfg::DesLoc { k_p: 2, k_m: 4, k_v: 8 },
+        MethodCfg::Lordo { rank: 6, h: 3 },
     ]
 }
 
@@ -58,7 +60,7 @@ fn engine_reproduces_closed_form_oracle_exactly() {
         ..Default::default()
     };
     for topo in [Topology::single_node(8), Topology::multi_node(4, 8)] {
-        for m in all_seven(5) {
+        for m in all_nine(5) {
             let opt = m.build(&blocks, AdamHyper::default(), 1);
             for t in [0u64, 1, 3] {
                 let plan = opt.sync_plan(t);
@@ -85,7 +87,7 @@ fn sync_plan_matches_metered_ledger_for_every_method() {
     let k = 5usize;
     let steps = 2 * k + 3;
     let workers = 2;
-    for m in all_seven(k) {
+    for m in all_nine(k) {
         let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
         let blocks = sim.blocks().to_vec();
         let mut opt = m.build(&blocks, AdamHyper::default(), workers);
@@ -138,7 +140,7 @@ fn sync_plan_matches_metered_ledger_from_mid_period_start() {
     let t0 = 7usize; // 7 % 5 != 0 — off the refresh cadence
     let steps = t0 + 2 * k + 3;
     let workers = 2;
-    for m in all_seven(k) {
+    for m in all_nine(k) {
         let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
         let blocks = sim.blocks().to_vec();
         let mut opt = m.build(&blocks, AdamHyper::default(), workers);
@@ -149,7 +151,11 @@ fn sync_plan_matches_metered_ledger_from_mid_period_start() {
         let plans: Vec<_> = (t0..steps).map(|t| opt.sync_plan(t as u64)).collect();
         let flat = matches!(
             m,
-            MethodCfg::Adam | MethodCfg::PowerSgd { .. } | MethodCfg::TopK { .. }
+            MethodCfg::Adam
+                | MethodCfg::PowerSgd { .. }
+                | MethodCfg::TopK { .. }
+                | MethodCfg::DesLoc { .. }
+                | MethodCfg::Lordo { .. }
         );
         assert!(
             flat || plans[0].has_refresh(),
@@ -221,7 +227,7 @@ fn prop_refresh_due_algebra() {
 
 /// Satellite (property): schedule == ledger parity from RANDOM
 /// mid-period starts — generalizes the fixed `t0 = 7, k = 5` case
-/// above over random refresh periods and seek points, for all seven
+/// above over random refresh periods and seek points, for all nine
 /// methods.
 #[test]
 fn prop_sync_plan_matches_ledger_at_random_seek() {
@@ -232,7 +238,7 @@ fn prop_sync_plan_matches_ledger_at_random_seek() {
         let k = dim(rng, 2, 7);
         let t0 = dim(rng, 0, 3 * k + 2);
         let steps = t0 + k + dim(rng, 1, k + 2);
-        for m in all_seven(k) {
+        for m in all_nine(k) {
             let mut sim = QuadraticSim::new(&spec, workers, 6, 0.01, 11);
             let blocks = sim.blocks().to_vec();
             let mut opt = m.build(&blocks, AdamHyper::default(), workers);
