@@ -20,7 +20,7 @@
 //! volume into the [`CommLedger`]'s intra/inter columns, and meters the
 //! synchronized-object payload per layer class exactly as before.
 
-use crate::comm::{CommLedger, LayerClass, Topology, BYTES_F32};
+use crate::comm::{CommLedger, ElemFmt, LayerClass, Topology, BYTES_F32};
 use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 
@@ -47,6 +47,15 @@ impl HierVolume {
 /// summed over all workers (what the ledger's intra/inter columns
 /// meter); do not mix the two.
 pub fn ring_allreduce_mean(workers: &mut [Matrix]) -> usize {
+    ring_allreduce_mean_fmt(workers, ElemFmt::F32)
+}
+
+/// [`ring_allreduce_mean`] in a typed element format: every reduce hop
+/// re-rounds its sum onto the format's grid (so the values crossing the
+/// "wire" are always representable), the gather hops are lossless, and
+/// the final 1/n mean scale is the dequantize step. For
+/// [`ElemFmt::F32`] this is the byte-identical historical path.
+pub fn ring_allreduce_mean_fmt(workers: &mut [Matrix], fmt: ElemFmt) -> usize {
     let n = workers.len();
     assert!(n > 0);
     let numel = workers[0].numel();
@@ -57,8 +66,8 @@ pub fn ring_allreduce_mean(workers: &mut [Matrix]) -> usize {
         return 0;
     }
     let group: Vec<usize> = (0..n).collect();
-    ring_reduce_scatter(workers, &group, 0, numel);
-    ring_all_gather(workers, &group, 0, numel);
+    ring_reduce_scatter(workers, &group, 0, numel, fmt);
+    ring_all_gather(workers, &group, 0, numel, fmt);
     scale_to_mean(workers, n as f32);
     ring_volume_bytes(numel, n)
 }
@@ -89,6 +98,22 @@ pub fn hier_allreduce_mean(
     nodes: usize,
     gpus_per_node: usize,
 ) -> HierVolume {
+    hier_allreduce_mean_fmt(workers, nodes, gpus_per_node, ElemFmt::F32)
+}
+
+/// [`hier_allreduce_mean`] in a typed element format — the sequential
+/// reference for the narrow-format reduction contract (DESIGN.md §14):
+/// reduce hops re-round after their addition, gather hops are lossless
+/// copies of already-representable values, and the final mean scale
+/// dequantizes. The threaded and process backends replay the identical
+/// schedule with the identical rounding points, so narrow-format runs
+/// stay bitwise backend-invariant.
+pub fn hier_allreduce_mean_fmt(
+    workers: &mut [Matrix],
+    nodes: usize,
+    gpus_per_node: usize,
+    fmt: ElemFmt,
+) -> HierVolume {
     let n = workers.len();
     assert!(n > 0);
     assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
@@ -103,8 +128,8 @@ pub fn hier_allreduce_mean(
     // Degenerate shapes collapse to a single flat ring on one link class.
     if nodes == 1 || g == 1 {
         let group: Vec<usize> = (0..n).collect();
-        let mut wire = ring_reduce_scatter(workers, &group, 0, numel);
-        wire += ring_all_gather(workers, &group, 0, numel);
+        let mut wire = ring_reduce_scatter(workers, &group, 0, numel, fmt);
+        wire += ring_all_gather(workers, &group, 0, numel, fmt);
         scale_to_mean(workers, n as f32);
         return if nodes == 1 {
             HierVolume {
@@ -126,20 +151,20 @@ pub fn hier_allreduce_mean(
     // Phase 1: intra-node ring reduce-scatter.
     for node in 0..nodes {
         let group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
-        intra += ring_reduce_scatter(workers, &group, 0, numel);
+        intra += ring_reduce_scatter(workers, &group, 0, numel, fmt);
     }
     // Phase 2: one cross-node ring per chunk, run by the local workers
     // that own it after phase 1 (local index i owns chunk (i+1) % g).
     for chunk in 0..g {
         let owner = (chunk + g - 1) % g;
         let group: Vec<usize> = (0..nodes).map(|node| node * g + owner).collect();
-        inter += ring_reduce_scatter(workers, &group, starts[chunk], starts[chunk + 1]);
-        inter += ring_all_gather(workers, &group, starts[chunk], starts[chunk + 1]);
+        inter += ring_reduce_scatter(workers, &group, starts[chunk], starts[chunk + 1], fmt);
+        inter += ring_all_gather(workers, &group, starts[chunk], starts[chunk + 1], fmt);
     }
     // Phase 3: intra-node all-gather (broadcast of the global chunks).
     for node in 0..nodes {
         let group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
-        intra += ring_all_gather(workers, &group, 0, numel);
+        intra += ring_all_gather(workers, &group, 0, numel, fmt);
     }
     scale_to_mean(workers, n as f32);
     HierVolume {
@@ -213,21 +238,60 @@ pub fn sync_mean(
     topo: &Topology,
     exec: &ExecBackend,
 ) -> usize {
+    sync_mean_fmt(workers, class, ElemFmt::F32, ledger, topo, exec)
+}
+
+/// [`sync_mean`] in a typed element format (DESIGN.md §14).
+///
+/// The quantize→reduce→dequantize order is fixed here, identically on
+/// every backend:
+///
+/// 1. **quantize** — each worker's contribution is projected onto the
+///    format's grid on entry (idempotent when the optimizer already
+///    quantized through its error-feedback residuals, which is where the
+///    residual update belongs);
+/// 2. **reduce** — the ring schedule re-rounds each receiving chunk
+///    after its addition, so every value that crosses a thread or socket
+///    boundary is representable and serializes losslessly at
+///    `fmt.width()` bytes/element;
+/// 3. **dequantize** — the final 1/n mean scale runs in f32.
+///
+/// The metered payload is `numel × fmt.width()` and the wire columns are
+/// the same `2(w−1)/w` split of it, so a bf16 core run's ledger is
+/// exactly half its f32 twin's core payload — and on the process backend
+/// the frames crossing the sockets really are that narrow.
+pub fn sync_mean_fmt(
+    workers: &mut [Matrix],
+    class: LayerClass,
+    fmt: ElemFmt,
+    ledger: &mut CommLedger,
+    topo: &Topology,
+    exec: &ExecBackend,
+) -> usize {
     let n = workers.len();
     assert!(n > 0);
     let numel = workers[0].numel();
-    let payload = numel * BYTES_F32;
+    let payload = numel * fmt.width();
+    for w in workers.iter_mut() {
+        fmt.round_slice(&mut w.data);
+    }
     if n > 1 {
         if n == topo.workers() {
             let vol = match exec {
-                ExecBackend::Threaded { .. } => {
-                    crate::exec::threaded::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
-                }
-                ExecBackend::Process { .. } => {
-                    crate::exec::process::allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
-                }
+                ExecBackend::Threaded { .. } => crate::exec::threaded::allreduce_mean_fmt(
+                    workers,
+                    topo.nodes,
+                    topo.gpus_per_node,
+                    fmt,
+                ),
+                ExecBackend::Process { .. } => crate::exec::process::allreduce_mean_fmt(
+                    workers,
+                    topo.nodes,
+                    topo.gpus_per_node,
+                    fmt,
+                ),
                 ExecBackend::Sequential => {
-                    hier_allreduce_mean(workers, topo.nodes, topo.gpus_per_node)
+                    hier_allreduce_mean_fmt(workers, topo.nodes, topo.gpus_per_node, fmt)
                 }
             };
             ledger.record_link(vol.intra_bytes, vol.inter_bytes);
@@ -242,15 +306,15 @@ pub fn sync_mean(
             // identically.)
             match exec {
                 ExecBackend::Threaded { .. } => {
-                    let measured = crate::exec::threaded::allreduce_mean(workers, 1, n);
+                    let measured = crate::exec::threaded::allreduce_mean_fmt(workers, 1, n, fmt);
                     debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
                 }
                 ExecBackend::Process { .. } => {
-                    let measured = crate::exec::process::allreduce_mean(workers, 1, n);
+                    let measured = crate::exec::process::allreduce_mean_fmt(workers, 1, n, fmt);
                     debug_assert_eq!(measured.total(), 2 * (n - 1) * payload);
                 }
                 ExecBackend::Sequential => {
-                    ring_allreduce_mean(workers);
+                    ring_allreduce_mean_fmt(workers, fmt);
                 }
             }
             let vol = if topo.nodes > 1 {
@@ -346,7 +410,18 @@ pub fn ring_volume_bytes(numel: usize, n: usize) -> usize {
 
 /// Ring reduce-scatter (sum) over `group`: after `m−1` steps the worker
 /// at group position `i` holds the full group-sum of chunk `(i+1) % m`.
-fn ring_reduce_scatter(workers: &mut [Matrix], group: &[usize], lo: usize, hi: usize) -> usize {
+///
+/// Narrow formats re-round the receiving chunk after each addition —
+/// the sent values are always representable, so the process backend can
+/// serialize them at `fmt.width()` bytes/element losslessly. Bytes are
+/// counted at that width.
+fn ring_reduce_scatter(
+    workers: &mut [Matrix],
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    fmt: ElemFmt,
+) -> usize {
     let m = group.len();
     if m <= 1 {
         return 0;
@@ -364,16 +439,24 @@ fn ring_reduce_scatter(workers: &mut [Matrix], group: &[usize], lo: usize, hi: u
             for (d, s) in dst_chunk.iter_mut().zip(src_chunk.iter()) {
                 *d += *s;
             }
+            fmt.round_slice(dst_chunk);
             sent += chi - clo;
         }
     }
-    sent * BYTES_F32
+    sent * fmt.width()
 }
 
 /// Ring all-gather over `group`, assuming the ownership layout produced
 /// by [`ring_reduce_scatter`]: circulates the reduced chunks until every
-/// group member holds all of [lo, hi).
-fn ring_all_gather(workers: &mut [Matrix], group: &[usize], lo: usize, hi: usize) -> usize {
+/// group member holds all of [lo, hi). The circulated values are already
+/// representable in `fmt`, so the copies are lossless at any width.
+fn ring_all_gather(
+    workers: &mut [Matrix],
+    group: &[usize],
+    lo: usize,
+    hi: usize,
+    fmt: ElemFmt,
+) -> usize {
     let m = group.len();
     if m <= 1 {
         return 0;
@@ -391,7 +474,7 @@ fn ring_all_gather(workers: &mut [Matrix], group: &[usize], lo: usize, hi: usize
             sent += chi - clo;
         }
     }
-    sent * BYTES_F32
+    sent * fmt.width()
 }
 
 fn scale_to_mean(workers: &mut [Matrix], n: f32) {
@@ -563,6 +646,72 @@ mod tests {
         assert_eq!(ledger.step(0).inter, 2 * 2 * 16 * 4);
         for (a, b) in ws.iter().zip(&oracle) {
             assert!(a.dist(b) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sync_mean_fmt_meters_width_true_payload_and_stays_backend_invariant() {
+        // bf16 halves the metered payload and wire columns exactly; the
+        // reduced values are bitwise-identical across backends because
+        // every backend rounds at the same ring hops. i8 quarters it.
+        for (fmt, width) in [(ElemFmt::Bf16, 2usize), (ElemFmt::I8, 1)] {
+            let topo = Topology::multi_node(2, 2);
+            let mut rng = Xoshiro256::new(23);
+            let ws0: Vec<Matrix> = (0..4)
+                .map(|_| Matrix::gaussian(5, 8, 0.5, &mut rng))
+                .collect();
+            let mut runs = Vec::new();
+            for exec in [ExecBackend::Sequential, ExecBackend::threaded()] {
+                let mut ws = ws0.clone();
+                let mut ledger = CommLedger::new();
+                let payload =
+                    sync_mean_fmt(&mut ws, LayerClass::Linear, fmt, &mut ledger, &topo, &exec);
+                ledger.end_step();
+                assert_eq!(payload, 40 * width, "{}", fmt.name());
+                assert_eq!(ledger.step(0).total, 40 * width);
+                let expect = hier_wire_split(40 * width, 2, 2);
+                assert_eq!(ledger.step(0).intra, expect.intra_bytes);
+                assert_eq!(ledger.step(0).inter, expect.inter_bytes);
+                let bits: Vec<Vec<u32>> = ws
+                    .iter()
+                    .map(|w| w.data.iter().map(|v| v.to_bits()).collect())
+                    .collect();
+                runs.push(bits);
+            }
+            assert_eq!(runs[0], runs[1], "{} backend drift", fmt.name());
+            // All workers agree on the reduced value.
+            let first = runs[0][0].clone();
+            for w in &runs[0][1..] {
+                assert_eq!(*w, first, "{} workers disagree", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sync_mean_f32_fmt_is_byte_identical_to_plain_sync_mean() {
+        // The refactor must not perturb the full-precision path: same
+        // buffers, same ledger columns.
+        let topo = Topology::multi_node(2, 2);
+        let mut rng = Xoshiro256::new(29);
+        let ws0: Vec<Matrix> = (0..4).map(|_| Matrix::gaussian(3, 9, 1.0, &mut rng)).collect();
+        let (mut wa, mut wb) = (ws0.clone(), ws0.clone());
+        let (mut la, mut lb) = (CommLedger::new(), CommLedger::new());
+        sync_mean(&mut wa, LayerClass::Linear, &mut la, &topo, &ExecBackend::Sequential);
+        sync_mean_fmt(
+            &mut wb,
+            LayerClass::Linear,
+            ElemFmt::F32,
+            &mut lb,
+            &topo,
+            &ExecBackend::Sequential,
+        );
+        la.end_step();
+        lb.end_step();
+        assert_eq!(la.step(0), lb.step(0));
+        for (a, b) in wa.iter().zip(&wb) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

@@ -1,0 +1,398 @@
+//! Typed payload element formats (DESIGN.md §14).
+//!
+//! Every byte the ledger meters is `numel × width` of some element
+//! format. Historically that format was implicitly f32 (×4 everywhere);
+//! this module makes it a first-class type so quantized core payloads
+//! (bf16/int8 with error feedback, per 0/1-Adam — PAPERS.md) can be
+//! priced exactly by the same machinery.
+//!
+//! Encode/decode are **deterministic bit-pattern transforms** — no
+//! table lookups, no rounding-mode dependence on the host:
+//!
+//! * [`ElemFmt::F32`] — identity; 4-byte little-endian bit patterns.
+//! * [`ElemFmt::Bf16`] — the top 16 bits of the f32 pattern, rounded to
+//!   nearest-even; NaNs keep their sign and a nonzero mantissa (never
+//!   silently become infinities). Decode shifts back: every bf16 value
+//!   is exactly representable as f32, so decode∘encode is the
+//!   *representable projection* (idempotent) and encode∘decode is the
+//!   identity on bf16 values.
+//! * [`ElemFmt::I8`] — symmetric fixed point `q = clamp(round(32·x),
+//!   −127, 127)`, i.e. step 1/32 over ±127/32. Inside the range the
+//!   quantization error is ≤ 1/64 per element; outside it saturates
+//!   (the error-feedback residual carries what saturation drops).
+//!
+//! The reduction contract for narrow formats lives in
+//! [`crate::comm::collective::sync_mean_fmt`]: contributions are
+//! quantized *before* the collective (error feedback at the optimizer),
+//! every ring hop re-rounds after its addition so the wire only ever
+//! carries representable values, and the final 1/n mean scale is the
+//! dequantize step, in f32. All three execution backends implement the
+//! identical order, so narrow-format runs stay bitwise backend-invariant.
+
+/// The I8 fixed-point scale: values are stored as multiples of 1/32.
+pub const I8_SCALE: f32 = 32.0;
+
+/// Element format of a synchronized payload.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ElemFmt {
+    /// Full-precision f32 — the historical default; encode is identity.
+    #[default]
+    F32,
+    /// bfloat16: top 16 bits of the f32 pattern, round-to-nearest-even.
+    Bf16,
+    /// Symmetric fixed-point int8 (step 1/32, saturating at ±127/32).
+    I8,
+}
+
+impl ElemFmt {
+    /// Wire bytes per element.
+    pub fn width(&self) -> usize {
+        match self {
+            ElemFmt::F32 => 4,
+            ElemFmt::Bf16 => 2,
+            ElemFmt::I8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElemFmt::F32 => "f32",
+            ElemFmt::Bf16 => "bf16",
+            ElemFmt::I8 => "i8",
+        }
+    }
+
+    /// Parse a CLI/config format name. Unknown names are a loud error
+    /// listing the valid set (same contract as `ExecBackend::parse`).
+    pub fn parse(name: &str) -> Result<Self, String> {
+        match name.trim() {
+            "f32" | "fp32" => Ok(ElemFmt::F32),
+            "bf16" | "bfloat16" => Ok(ElemFmt::Bf16),
+            "i8" | "int8" => Ok(ElemFmt::I8),
+            other => Err(format!(
+                "unknown element format `{other}` (valid: f32 | bf16 | i8)"
+            )),
+        }
+    }
+
+    /// Protocol tag for the process-backend collective spec frame.
+    pub fn wire_tag(&self) -> u8 {
+        match self {
+            ElemFmt::F32 => 0,
+            ElemFmt::Bf16 => 1,
+            ElemFmt::I8 => 2,
+        }
+    }
+
+    /// Inverse of [`Self::wire_tag`] — a corrupt tag is a loud protocol
+    /// error, never a silent f32 fallback.
+    pub fn from_wire_tag(tag: u8) -> Result<Self, String> {
+        match tag {
+            0 => Ok(ElemFmt::F32),
+            1 => Ok(ElemFmt::Bf16),
+            2 => Ok(ElemFmt::I8),
+            other => Err(format!("bad element-format wire tag {other}")),
+        }
+    }
+
+    /// The representable projection `decode(encode(x))` — idempotent,
+    /// and the identity for [`ElemFmt::F32`].
+    #[inline]
+    pub fn round(&self, x: f32) -> f32 {
+        match self {
+            ElemFmt::F32 => x,
+            ElemFmt::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+            ElemFmt::I8 => i8_to_f32(f32_to_i8(x)),
+        }
+    }
+
+    /// Project a whole slice onto the representable grid (no-op for f32,
+    /// so the full-precision path stays byte-identical to pre-refactor).
+    pub fn round_slice(&self, xs: &mut [f32]) {
+        if *self == ElemFmt::F32 {
+            return;
+        }
+        for x in xs.iter_mut() {
+            *x = self.round(*x);
+        }
+    }
+
+    /// Serialize `xs` (which must already be representable in `self` —
+    /// the collective contract guarantees it) as `numel × width` wire
+    /// bytes, appended to `out`.
+    pub fn write_elems(&self, out: &mut Vec<u8>, xs: &[f32]) {
+        match self {
+            ElemFmt::F32 => {
+                out.reserve(xs.len() * 4);
+                for x in xs {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            ElemFmt::Bf16 => {
+                out.reserve(xs.len() * 2);
+                for x in xs {
+                    out.extend_from_slice(&f32_to_bf16(*x).to_le_bytes());
+                }
+            }
+            ElemFmt::I8 => {
+                out.reserve(xs.len());
+                for x in xs {
+                    out.push(f32_to_i8(*x) as u8);
+                }
+            }
+        }
+    }
+
+    /// Decode exactly `out.len()` elements from `bytes` (length must be
+    /// `out.len() × width` — anything else is a corrupt frame).
+    pub fn read_elems(&self, bytes: &[u8], out: &mut [f32]) -> Result<(), String> {
+        if bytes.len() != out.len() * self.width() {
+            return Err(format!(
+                "payload is {} bytes for {} {} elements (want {})",
+                bytes.len(),
+                out.len(),
+                self.name(),
+                out.len() * self.width()
+            ));
+        }
+        match self {
+            ElemFmt::F32 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            ElemFmt::Bf16 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *o = bf16_to_f32(u16::from_le_bytes([c[0], c[1]]));
+                }
+            }
+            ElemFmt::I8 => {
+                for (o, b) in out.iter_mut().zip(bytes.iter()) {
+                    *o = i8_to_f32(*b as i8);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// f32 → bf16 bit pattern, round-to-nearest-even. NaNs are truncated
+/// with their mantissa forced nonzero (a NaN must never round or
+/// truncate into an infinity); for bf16-representable values (low 16
+/// bits zero) this is exactly the identity on the high half.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        let h = (bits >> 16) as u16;
+        return if h & 0x007F == 0 { h | 0x0040 } else { h };
+    }
+    // Round to nearest, ties to even on bit 16.
+    let rounded = (bits as u64 + 0x7FFF + ((bits >> 16) & 1) as u64) >> 16;
+    rounded as u16
+}
+
+/// bf16 bit pattern → f32 (exact: shift back into the high half).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → fixed-point int8: `clamp(round(32·x), −127, 127)`. `round`
+/// here is half-away-from-zero (`f32::round`), symmetric in sign; −128
+/// is never produced so negation round-trips. NaN maps to 0 (the only
+/// sane saturation for a sum that went undefined).
+#[inline]
+pub fn f32_to_i8(x: f32) -> i8 {
+    if x.is_nan() {
+        return 0;
+    }
+    (x * I8_SCALE).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Fixed-point int8 → f32 (exact: small integers divided by 32).
+#[inline]
+pub fn i8_to_f32(q: i8) -> f32 {
+    q as f32 / I8_SCALE
+}
+
+/// Error-feedback quantization of one worker contribution, in place:
+/// `x ← round(x + e)`, `e ← (x + e) − round(x + e)` (0/1-Adam's
+/// compensated compressor). For [`ElemFmt::F32`] this is the identity
+/// and `err` stays untouched — callers skip allocating residuals there.
+pub fn quantize_ef(fmt: ElemFmt, xs: &mut [f32], err: &mut [f32]) {
+    if fmt == ElemFmt::F32 {
+        return;
+    }
+    debug_assert_eq!(xs.len(), err.len());
+    for (x, e) in xs.iter_mut().zip(err.iter_mut()) {
+        let want = *x + *e;
+        let q = fmt.round(want);
+        *e = want - q;
+        *x = q;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn widths_names_tags_roundtrip() {
+        for fmt in [ElemFmt::F32, ElemFmt::Bf16, ElemFmt::I8] {
+            assert_eq!(ElemFmt::parse(fmt.name()), Ok(fmt));
+            assert_eq!(ElemFmt::from_wire_tag(fmt.wire_tag()), Ok(fmt));
+        }
+        assert_eq!(ElemFmt::F32.width(), 4);
+        assert_eq!(ElemFmt::Bf16.width(), 2);
+        assert_eq!(ElemFmt::I8.width(), 1);
+        assert_eq!(ElemFmt::default(), ElemFmt::F32);
+        assert!(ElemFmt::from_wire_tag(9).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_unknown_names_loudly() {
+        for bogus in ["f16", "fp8", "", "bf-16"] {
+            let err = ElemFmt::parse(bogus).unwrap_err();
+            assert!(err.contains("f32 | bf16 | i8"), "`{bogus}` -> {err}");
+        }
+        assert_eq!(ElemFmt::parse(" int8 "), Ok(ElemFmt::I8));
+        assert_eq!(ElemFmt::parse("bfloat16"), Ok(ElemFmt::Bf16));
+    }
+
+    #[test]
+    fn bf16_preserves_sign_nan_and_subnormal_patterns() {
+        // Every bf16-representable value (low 16 bits zero) must survive
+        // encode∘decode bit-for-bit: signed zeros, subnormals, infinities,
+        // and NaN payloads included.
+        let specials: Vec<u32> = vec![
+            0x0000_0000, // +0
+            0x8000_0000, // −0
+            0x3F80_0000, // 1.0
+            0xBF80_0000, // −1.0
+            0x0001_0000, // bf16 subnormal (f32 subnormal too)
+            0x8001_0000, // negative subnormal
+            0x7F80_0000, // +inf
+            0xFF80_0000, // −inf
+            0x7FC0_0000, // quiet NaN
+            0xFFC1_0000, // NaN with sign + payload
+        ];
+        for bits in specials {
+            let x = f32::from_bits(bits);
+            let h = f32_to_bf16(x);
+            assert_eq!(h, (bits >> 16) as u16, "encode {bits:#010x}");
+            assert_eq!(bf16_to_f32(h).to_bits(), bits, "decode {bits:#010x}");
+        }
+        prop::check("bf16 representable roundtrip", 64, |rng| {
+            // Random bf16 patterns (skip the NaN-payload-zero ambiguity:
+            // any pattern is fine because decode is a pure shift).
+            let h = (rng.next_u64() & 0xFFFF) as u16;
+            let x = bf16_to_f32(h);
+            if x.is_nan() {
+                let back = f32_to_bf16(x);
+                assert!(bf16_to_f32(back).is_nan());
+                assert_eq!(back & 0x8000, h & 0x8000, "NaN keeps its sign");
+            } else {
+                assert_eq!(f32_to_bf16(x), h, "pattern {h:#06x}");
+            }
+        });
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + ulp/2 exactly: ties to even (stays 1.0).
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(f32_to_bf16(tie), 0x3F80);
+        // Just above the tie rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(f32_to_bf16(above), 0x3F81);
+        // Odd low bit ties away (to the even neighbor above).
+        let tie_odd = f32::from_bits(0x3F81_8000);
+        assert_eq!(f32_to_bf16(tie_odd), 0x3F82);
+        // Huge finite rounds up to infinity (standard carry behavior)…
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::MAX)), f32::INFINITY);
+        // …but a NaN never becomes one.
+        assert!(bf16_to_f32(f32_to_bf16(f32::from_bits(0x7F80_0001))).is_nan());
+    }
+
+    #[test]
+    fn i8_error_bound_and_saturation() {
+        prop::check("i8 quantizer error ≤ 1/64 in range", 128, |rng| {
+            let x = (rng.next_f32() - 0.5) * 2.0 * (127.0 / I8_SCALE);
+            let err = (x - ElemFmt::I8.round(x)).abs();
+            assert!(err <= 0.5 / I8_SCALE + 1e-7, "x={x} err={err}");
+        });
+        assert_eq!(f32_to_i8(100.0), 127);
+        assert_eq!(f32_to_i8(-100.0), -127);
+        assert_eq!(f32_to_i8(f32::NAN), 0);
+        // Negation symmetry: −128 never appears.
+        for q in -127i8..=127 {
+            assert_eq!(f32_to_i8(-i8_to_f32(q)), -q);
+        }
+    }
+
+    #[test]
+    fn ef_residual_telescopes_over_a_window() {
+        // Feeding the SAME value x for T steps through the compensated
+        // quantizer, the emitted sum telescopes: Σ q_t = T·x − e_T, so
+        // the average emitted value is within |e_T|/T of x — the error
+        // does not accumulate (0/1-Adam Lemma 1's shape).
+        for fmt in [ElemFmt::Bf16, ElemFmt::I8] {
+            prop::check(&format!("{} EF telescopes", fmt.name()), 32, |rng| {
+                let x = (rng.next_f32() - 0.5) * 3.0;
+                let mut e = 0.0f32;
+                let mut emitted = 0.0f64;
+                let steps = 64;
+                for _ in 0..steps {
+                    let mut xs = [x];
+                    let mut es = [e];
+                    quantize_ef(fmt, &mut xs, &mut es);
+                    e = es[0];
+                    emitted += xs[0] as f64;
+                }
+                let avg = emitted / steps as f64;
+                let bound = match fmt {
+                    // One residual's worth of error spread over the window.
+                    ElemFmt::I8 => (0.5 / I8_SCALE) as f64 / steps as f64 + 1e-6,
+                    _ => (x.abs() as f64 / 128.0) / steps as f64 + 1e-6,
+                };
+                assert!(
+                    (avg - x as f64).abs() <= bound,
+                    "{} x={x} avg={avg} bound={bound}",
+                    fmt.name()
+                );
+            });
+        }
+    }
+
+    #[test]
+    fn quantize_ef_is_identity_for_f32() {
+        let mut xs = [1.0f32, -0.25, 3.0e-8];
+        let mut es = [0.5f32, 0.5, 0.5];
+        let orig = xs;
+        quantize_ef(ElemFmt::F32, &mut xs, &mut es);
+        assert_eq!(xs, orig);
+        assert_eq!(es, [0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn wire_codec_roundtrips_representable_values() {
+        let mut rng = crate::util::rng::Xoshiro256::new(31);
+        for fmt in [ElemFmt::F32, ElemFmt::Bf16, ElemFmt::I8] {
+            let vals: Vec<f32> = (0..37)
+                .map(|_| fmt.round((rng.next_f32() - 0.5) * 4.0))
+                .collect();
+            let mut wire = Vec::new();
+            fmt.write_elems(&mut wire, &vals);
+            assert_eq!(wire.len(), vals.len() * fmt.width());
+            let mut back = vec![0.0f32; vals.len()];
+            fmt.read_elems(&wire, &mut back).unwrap();
+            for (a, b) in vals.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", fmt.name());
+            }
+            // Length mismatch is a loud error.
+            assert!(fmt.read_elems(&wire[1..], &mut back).is_err());
+        }
+    }
+}

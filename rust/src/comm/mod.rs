@@ -5,11 +5,14 @@
 
 pub mod accounting;
 pub mod collective;
+pub mod fmt;
 pub mod topology;
 
 pub use accounting::{CommLedger, LayerClass, StepRecord, BYTES_BF16, BYTES_F32};
 pub use collective::{
-    direct_allreduce_mean, hier_allreduce_mean, hier_volume_bytes, hier_wire_split,
-    record_virtual_sync, ring_allreduce_mean, ring_volume_bytes, sync_mean, HierVolume,
+    direct_allreduce_mean, hier_allreduce_mean, hier_allreduce_mean_fmt, hier_volume_bytes,
+    hier_wire_split, record_virtual_sync, ring_allreduce_mean, ring_allreduce_mean_fmt,
+    ring_volume_bytes, sync_mean, sync_mean_fmt, HierVolume,
 };
+pub use fmt::ElemFmt;
 pub use topology::Topology;

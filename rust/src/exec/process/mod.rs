@@ -21,10 +21,13 @@
 //! spawns a fresh group.
 //!
 //! **Determinism.** The children replay the exact sequential chunk
-//! schedule (see [`worker`]); f32 payloads cross the wire as
-//! little-endian bit patterns; the coordinator writes requests and
-//! reads results in rank order. Weights and every ledger column are
-//! bitwise-identical to the `Sequential` backend — `tests/
+//! schedule (see [`worker`]); payloads cross the wire as little-endian
+//! bit patterns at the element format's width (f32 words, bf16
+//! halfwords, or int8 bytes — DESIGN.md §14), re-rounded at the same
+//! schedule points as the sequential backend so the narrow encoding is
+//! lossless for the values it carries; the coordinator writes requests
+//! and reads results in rank order. Weights and every ledger column
+//! are bitwise-identical to the `Sequential` backend — `tests/
 //! exec_parity.rs` pins this for all nine optimizers.
 //!
 //! **Metering.** Each worker counts the payload bytes it sent and
@@ -36,6 +39,7 @@
 pub mod worker;
 
 use crate::comm::collective::HierVolume;
+use crate::comm::ElemFmt;
 use crate::linalg::Matrix;
 use crate::net::{
     accept_deadline, bind_localhost, read_frame_expect, write_frame, Builder, FrameKind, NetError,
@@ -188,6 +192,21 @@ pub fn shutdown_all() {
 /// after killing and reaping the whole group, so no zombies remain and
 /// the next collective starts from a fresh spawn.
 pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize) -> HierVolume {
+    allreduce_mean_fmt(workers, nodes, gpus_per_node, ElemFmt::F32)
+}
+
+/// Format-aware variant: ring chunks cross the sockets encoded at
+/// `fmt.width()` bytes per element (the children re-round each
+/// reduce-scatter partial sum at the same schedule points as the
+/// sequential backend, so narrow frames are lossless for the values
+/// they carry and the result stays bitwise backend-invariant). The
+/// returned volume counts the narrow bytes actually sent.
+pub fn allreduce_mean_fmt(
+    workers: &mut [Matrix],
+    nodes: usize,
+    gpus_per_node: usize,
+    fmt: ElemFmt,
+) -> HierVolume {
     let n = workers.len();
     assert!(n > 0);
     assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
@@ -200,7 +219,7 @@ pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize
     }
     let group = group_for(n);
     let mut g = lock(&group);
-    match collective(&mut g, workers, nodes, gpus_per_node) {
+    match collective(&mut g, workers, nodes, gpus_per_node, fmt) {
         Ok(vol) => vol,
         Err(msg) => {
             destroy(&mut g);
@@ -227,6 +246,7 @@ fn collective(
     workers: &mut [Matrix],
     nodes: usize,
     gpus_per_node: usize,
+    fmt: ElemFmt,
 ) -> Result<HierVolume, String> {
     g.seq += 1;
     let seq = g.seq;
@@ -250,6 +270,7 @@ fn collective(
             .u32(gpus_per_node as u32)
             .u64(numel as u64)
             .u8(inject)
+            .u8(fmt.wire_tag())
             .f32s(&workers[rank].data)
             .build();
         let what = format!("coordinator -> worker {rank}");

@@ -26,7 +26,7 @@
 //! socket's read deadline, so a dead or wedged peer surfaces as a
 //! distinct error within `TSR_NET_TIMEOUT_MS` instead of a hang.
 
-use crate::comm::BYTES_F32;
+use crate::comm::ElemFmt;
 use crate::exec::chunk_starts;
 use crate::net::{
     accept_deadline, bind_localhost, connect_peer, read_frame, read_frame_expect, write_frame,
@@ -68,8 +68,12 @@ impl Link {
         Ok(Self { rx: stream, tx })
     }
 
-    fn send_chunk(&self, chunk: &[f32], what: &str) -> Result<(), NetError> {
-        let payload = Builder::new().f32s(chunk).build();
+    /// Ship one ring chunk at the element format's wire width: every
+    /// value here is already fmt-representable (the schedule re-rounds
+    /// after each accumulation), so the narrow encoding is lossless.
+    fn send_chunk(&self, chunk: &[f32], fmt: ElemFmt, what: &str) -> Result<(), NetError> {
+        let mut payload = Vec::with_capacity(chunk.len() * fmt.width());
+        fmt.write_elems(&mut payload, chunk);
         self.tx
             .send(crate::net::encode_frame(FrameKind::Data, &payload))
             .map_err(|_| NetError::Disconnected {
@@ -78,21 +82,22 @@ impl Link {
             })
     }
 
-    fn recv_chunk(&mut self, out: &mut [f32], what: &str) -> Result<(), NetError> {
+    fn recv_chunk(&mut self, out: &mut [f32], fmt: ElemFmt, what: &str) -> Result<(), NetError> {
         let payload = read_frame_expect(&mut self.rx, FrameKind::Data, what)?;
-        if payload.len() != out.len() * BYTES_F32 {
+        if payload.len() != out.len() * fmt.width() {
             return Err(NetError::Malformed {
                 what: what.to_string(),
                 detail: format!(
                     "ring chunk carries {} bytes, schedule expects {}",
                     payload.len(),
-                    out.len() * BYTES_F32
+                    out.len() * fmt.width()
                 ),
             });
         }
-        let mut r = Reader::new(&payload, what);
-        r.f32s_into(out, "chunk")?;
-        r.finish()
+        fmt.read_elems(&payload, out).map_err(|detail| NetError::Malformed {
+            what: what.to_string(),
+            detail,
+        })
     }
 }
 
@@ -277,6 +282,10 @@ fn serve_collective(
     let g = r.u32("gpus_per_node")? as usize;
     let numel = r.u64("numel")? as usize;
     let inject_fault = r.u8("inject_fault")?;
+    let fmt = ElemFmt::from_wire_tag(r.u8("elem_fmt")?).map_err(|detail| NetError::Malformed {
+        what: what.clone(),
+        detail,
+    })?;
     if nodes * g != world {
         return Err(NetError::Malformed {
             what: what.clone(),
@@ -296,7 +305,7 @@ fn serve_collective(
         std::process::exit(FAULT_EXIT_CODE);
     }
 
-    let c = allreduce(rank, nodes, g, buf, scratch, links)?;
+    let c = allreduce(rank, nodes, g, fmt, buf, scratch, links)?;
 
     let result = Builder::new()
         .u64(seq)
@@ -318,6 +327,7 @@ fn allreduce(
     rank: usize,
     nodes: usize,
     g: usize,
+    fmt: ElemFmt,
     buf: &mut [f32],
     scratch: &mut [f32],
     links: &mut [Option<Link>],
@@ -329,8 +339,8 @@ fn allreduce(
         if nodes == 1 || g == 1 {
             // Flat ring over everyone on the single link class.
             let group: Vec<usize> = (0..n).collect();
-            let (s1, r1) = ring_reduce_scatter(rank, &group, 0, numel, buf, scratch, links)?;
-            let (s2, r2) = ring_all_gather(rank, &group, 0, numel, buf, scratch, links)?;
+            let (s1, r1) = ring_reduce_scatter(rank, &group, 0, numel, fmt, buf, scratch, links)?;
+            let (s2, r2) = ring_all_gather(rank, &group, 0, numel, fmt, buf, scratch, links)?;
             if nodes == 1 {
                 c.sent_intra += (s1 + s2) as u64;
                 c.recv_intra += (r1 + r2) as u64;
@@ -343,7 +353,8 @@ fn allreduce(
             let local = rank % g;
             let intra_group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
             // Phase 1: intra-node ring reduce-scatter.
-            let (s, r) = ring_reduce_scatter(local, &intra_group, 0, numel, buf, scratch, links)?;
+            let (s, r) =
+                ring_reduce_scatter(local, &intra_group, 0, numel, fmt, buf, scratch, links)?;
             c.sent_intra += s as u64;
             c.recv_intra += r as u64;
             // Phase 2: local index i owns chunk (i+1) % g after phase 1;
@@ -352,14 +363,15 @@ fn allreduce(
             let starts = chunk_starts(0, numel, g);
             let inter_group: Vec<usize> = (0..nodes).map(|nd| nd * g + local).collect();
             let (clo, chi) = (starts[chunk], starts[chunk + 1]);
-            let (s, r) = ring_reduce_scatter(node, &inter_group, clo, chi, buf, scratch, links)?;
+            let (s, r) =
+                ring_reduce_scatter(node, &inter_group, clo, chi, fmt, buf, scratch, links)?;
             c.sent_inter += s as u64;
             c.recv_inter += r as u64;
-            let (s, r) = ring_all_gather(node, &inter_group, clo, chi, buf, scratch, links)?;
+            let (s, r) = ring_all_gather(node, &inter_group, clo, chi, fmt, buf, scratch, links)?;
             c.sent_inter += s as u64;
             c.recv_inter += r as u64;
             // Phase 3: intra-node all-gather broadcasts the global chunks.
-            let (s, r) = ring_all_gather(local, &intra_group, 0, numel, buf, scratch, links)?;
+            let (s, r) = ring_all_gather(local, &intra_group, 0, numel, fmt, buf, scratch, links)?;
             c.sent_intra += s as u64;
             c.recv_intra += r as u64;
         }
@@ -374,13 +386,17 @@ fn allreduce(
 }
 
 /// Ring reduce-scatter (sum) over `group` from group position `pos`,
-/// push form. Returns `(sent, received)` payload bytes. Zero-length
-/// ragged chunks are skipped symmetrically on both sides (no frame).
+/// push form. Returns `(sent, received)` payload bytes at the element
+/// format's wire width. Each received chunk is accumulated then
+/// re-rounded to `fmt` — the same schedule point as the sequential
+/// backend — so every value a later hop ships is fmt-representable.
+/// Zero-length ragged chunks are skipped symmetrically (no frame).
 fn ring_reduce_scatter(
     pos: usize,
     group: &[usize],
     lo: usize,
     hi: usize,
+    fmt: ElemFmt,
     buf: &mut [f32],
     scratch: &mut [f32],
     links: &mut [Option<Link>],
@@ -399,8 +415,8 @@ fn ring_reduce_scatter(
         let cs = (pos + m - step) % m;
         let (slo, shi) = (starts[cs], starts[cs + 1]);
         if shi > slo {
-            link(links, succ)?.send_chunk(&buf[slo..shi], "ring rs send")?;
-            sent += (shi - slo) * BYTES_F32;
+            link(links, succ)?.send_chunk(&buf[slo..shi], fmt, "ring rs send")?;
+            sent += (shi - slo) * fmt.width();
         }
         // …and accumulate chunk (pred − step) mod m from the
         // predecessor, elementwise in index order (the sequential
@@ -409,24 +425,27 @@ fn ring_reduce_scatter(
         let (rlo, rhi) = (starts[cr], starts[cr + 1]);
         if rhi > rlo {
             let tmp = &mut scratch[..rhi - rlo];
-            link(links, pred)?.recv_chunk(tmp, "ring rs recv")?;
+            link(links, pred)?.recv_chunk(tmp, fmt, "ring rs recv")?;
             for (d, s) in buf[rlo..rhi].iter_mut().zip(tmp.iter()) {
                 *d += *s;
             }
-            recvd += (rhi - rlo) * BYTES_F32;
+            fmt.round_slice(&mut buf[rlo..rhi]);
+            recvd += (rhi - rlo) * fmt.width();
         }
     }
     Ok((sent, recvd))
 }
 
 /// Ring all-gather over `group`, push form, assuming the ownership
-/// layout [`ring_reduce_scatter`] produces. Returns `(sent, received)`
-/// payload bytes.
+/// layout [`ring_reduce_scatter`] produces. Chunks here are already
+/// fmt-representable, so circulation is a lossless copy. Returns
+/// `(sent, received)` payload bytes at the wire width.
 fn ring_all_gather(
     pos: usize,
     group: &[usize],
     lo: usize,
     hi: usize,
+    fmt: ElemFmt,
     buf: &mut [f32],
     scratch: &mut [f32],
     links: &mut [Option<Link>],
@@ -444,16 +463,16 @@ fn ring_all_gather(
         let cs = (pos + 1 + m - step) % m;
         let (slo, shi) = (starts[cs], starts[cs + 1]);
         if shi > slo {
-            link(links, succ)?.send_chunk(&buf[slo..shi], "ring ag send")?;
-            sent += (shi - slo) * BYTES_F32;
+            link(links, succ)?.send_chunk(&buf[slo..shi], fmt, "ring ag send")?;
+            sent += (shi - slo) * fmt.width();
         }
         let cr = (pred_pos + 1 + m - step) % m;
         let (rlo, rhi) = (starts[cr], starts[cr + 1]);
         if rhi > rlo {
             let tmp = &mut scratch[..rhi - rlo];
-            link(links, pred)?.recv_chunk(tmp, "ring ag recv")?;
+            link(links, pred)?.recv_chunk(tmp, fmt, "ring ag recv")?;
             buf[rlo..rhi].copy_from_slice(tmp);
-            recvd += (rhi - rlo) * BYTES_F32;
+            recvd += (rhi - rlo) * fmt.width();
         }
     }
     Ok((sent, recvd))

@@ -26,7 +26,7 @@
 //! `2(w−1)/w` decomposition.
 
 use crate::comm::collective::HierVolume;
-use crate::comm::BYTES_F32;
+use crate::comm::ElemFmt;
 use crate::linalg::Matrix;
 use std::sync::Barrier;
 
@@ -52,6 +52,20 @@ use crate::exec::chunk_starts;
 /// Returns the aggregate wire bytes per link class, measured from the
 /// chunks each thread pulled from its ring predecessor.
 pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize) -> HierVolume {
+    allreduce_mean_fmt(workers, nodes, gpus_per_node, ElemFmt::F32)
+}
+
+/// [`allreduce_mean`] in a typed element format: the rendezvous rings
+/// re-round each pulled-and-reduced chunk exactly where the sequential
+/// reference does (DESIGN.md §14), and the measured wire counters are
+/// `fmt.width()` bytes/element — the thread-boundary analogue of the
+/// process backend's narrow socket frames.
+pub fn allreduce_mean_fmt(
+    workers: &mut [Matrix],
+    nodes: usize,
+    gpus_per_node: usize,
+    fmt: ElemFmt,
+) -> HierVolume {
     let n = workers.len();
     assert!(n > 0);
     assert_eq!(n, nodes * gpus_per_node, "topology shape mismatch");
@@ -73,7 +87,7 @@ pub fn allreduce_mean(workers: &mut [Matrix], nodes: usize, gpus_per_node: usize
             .map(|me| {
                 let bufs = &bufs;
                 let barrier = &barrier;
-                scope.spawn(move || worker_thread(me, bufs, barrier, nodes, gpus_per_node))
+                scope.spawn(move || worker_thread(me, bufs, barrier, nodes, gpus_per_node, fmt))
             })
             .collect();
         volumes = handles
@@ -100,6 +114,7 @@ fn worker_thread(
     barrier: &Barrier,
     nodes: usize,
     g: usize,
+    fmt: ElemFmt,
 ) -> (usize, usize) {
     let n = nodes * g;
     let numel = bufs.numel;
@@ -109,8 +124,8 @@ fn worker_thread(
     if nodes == 1 || g == 1 {
         // Flat ring over everyone, attributed to the single link class.
         let group: Vec<usize> = (0..n).collect();
-        let wire = ring_reduce_scatter(me, &group, 0, numel, bufs, barrier)
-            + ring_all_gather(me, &group, 0, numel, bufs, barrier);
+        let wire = ring_reduce_scatter(me, &group, 0, numel, bufs, barrier, fmt)
+            + ring_all_gather(me, &group, 0, numel, bufs, barrier, fmt);
         if nodes == 1 {
             intra = wire;
         } else {
@@ -122,17 +137,17 @@ fn worker_thread(
         let intra_group: Vec<usize> = (0..g).map(|j| node * g + j).collect();
         // Phase 1: intra-node ring reduce-scatter (all nodes' rings run
         // concurrently on disjoint buffers).
-        intra += ring_reduce_scatter(local, &intra_group, 0, numel, bufs, barrier);
+        intra += ring_reduce_scatter(local, &intra_group, 0, numel, bufs, barrier, fmt);
         // Phase 2: after phase 1 local index i owns chunk (i+1) % g, so
         // each thread runs exactly one cross-node ring over its chunk.
         let chunk = (local + 1) % g;
         let starts = chunk_starts(0, numel, g);
         let inter_group: Vec<usize> = (0..nodes).map(|nd| nd * g + local).collect();
         let (clo, chi) = (starts[chunk], starts[chunk + 1]);
-        inter += ring_reduce_scatter(node, &inter_group, clo, chi, bufs, barrier);
-        inter += ring_all_gather(node, &inter_group, clo, chi, bufs, barrier);
+        inter += ring_reduce_scatter(node, &inter_group, clo, chi, bufs, barrier, fmt);
+        inter += ring_all_gather(node, &inter_group, clo, chi, bufs, barrier, fmt);
         // Phase 3: intra-node all-gather broadcasts the global chunks.
-        intra += ring_all_gather(local, &intra_group, 0, numel, bufs, barrier);
+        intra += ring_all_gather(local, &intra_group, 0, numel, bufs, barrier, fmt);
     }
 
     // All pulls done everywhere; now each thread owns its buffer alone.
@@ -158,6 +173,7 @@ fn ring_reduce_scatter(
     hi: usize,
     bufs: &SharedBufs,
     barrier: &Barrier,
+    fmt: ElemFmt,
 ) -> usize {
     let m = group.len();
     if m <= 1 {
@@ -182,11 +198,15 @@ fn ring_reduce_scatter(
             for (d, s) in dst.iter_mut().zip(src.iter()) {
                 *d += *s;
             }
+            // Narrow formats re-round after the addition — the same hop
+            // point where the sequential reference rounds, so sums stay
+            // bitwise backend-invariant.
+            fmt.round_slice(dst);
         }
         pulled += chi - clo;
         barrier.wait();
     }
-    pulled * BYTES_F32
+    pulled * fmt.width()
 }
 
 /// Ring all-gather over `group`, pull form, assuming the ownership
@@ -198,6 +218,7 @@ fn ring_all_gather(
     hi: usize,
     bufs: &SharedBufs,
     barrier: &Barrier,
+    fmt: ElemFmt,
 ) -> usize {
     let m = group.len();
     if m <= 1 {
@@ -219,7 +240,7 @@ fn ring_all_gather(
         pulled += chi - clo;
         barrier.wait();
     }
-    pulled * BYTES_F32
+    pulled * fmt.width()
 }
 
 #[cfg(test)]
@@ -300,6 +321,37 @@ mod tests {
             let seq_vol = hier_allreduce_mean(&mut seq, 2, 2);
             assert_eq!(bits(&ws), bits(&seq), "numel={numel}");
             assert_eq!(vol, seq_vol, "numel={numel}");
+        }
+    }
+
+    #[test]
+    fn narrow_formats_are_bitwise_identical_to_sequential() {
+        use crate::comm::collective::hier_allreduce_mean_fmt;
+        for fmt in [ElemFmt::Bf16, ElemFmt::I8] {
+            prop::check(&format!("threaded {} == sequential", fmt.name()), 12, |rng| {
+                let nodes = prop::dim(rng, 1, 3);
+                let g = prop::dim(rng, 1, 3);
+                if nodes * g < 2 {
+                    return;
+                }
+                let r = prop::dim(rng, 1, 9);
+                let c = prop::dim(rng, 1, 9);
+                let mut ws: Vec<Matrix> = (0..nodes * g)
+                    .map(|_| {
+                        let mut m = Matrix::gaussian(r, c, 0.5, rng);
+                        fmt.round_slice(&mut m.data);
+                        m
+                    })
+                    .collect();
+                let mut seq = ws.clone();
+                let vol = allreduce_mean_fmt(&mut ws, nodes, g, fmt);
+                let seq_vol = hier_allreduce_mean_fmt(&mut seq, nodes, g, fmt);
+                assert_eq!(bits(&ws), bits(&seq), "{nodes}x{g} {r}x{c} {}", fmt.name());
+                assert_eq!(vol, seq_vol, "{nodes}x{g} {}", fmt.name());
+                // Width-true measured wire volume.
+                let f32_vol = hier_volume_bytes(r * c, nodes, g);
+                assert_eq!(vol.total() * 4, f32_vol.total() * fmt.width(), "{nodes}x{g}");
+            });
         }
     }
 

@@ -13,7 +13,7 @@
 //! assert bit-for-bit equality between metered and analytic bytes, for
 //! every method (`simulated_bytes_match_analytic_profiles`).
 
-use crate::comm::{LayerClass, BYTES_F32};
+use crate::comm::{ElemFmt, LayerClass, BYTES_F32};
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::sign_adam::sign_payload_bytes;
 use crate::optim::topk_adam::{topk_elems, topk_payload_bytes};
@@ -58,27 +58,41 @@ pub fn adamw_profile(spec: &ModelSpec) -> CommProfile {
 /// gradient; refresh (every K) adds the FULL dense gradient of each
 /// linear block. Embeddings and vectors stay dense.
 pub fn onesided_profile(spec: &ModelSpec, rank: usize, k_refresh: usize) -> CommProfile {
+    onesided_profile_fmt(spec, rank, k_refresh, ElemFmt::F32)
+}
+
+/// Format-aware one-sided profile (DESIGN.md §14): the steady projected
+/// factor is priced at `core_fmt.width()` bytes/element; the dense
+/// refresh gradient and the always-dense blocks stay f32. The split
+/// reports f32-equivalent element counts (bytes / 4), consistent with
+/// the sign/topk profiles.
+pub fn onesided_profile_fmt(
+    spec: &ModelSpec,
+    rank: usize,
+    k_refresh: usize,
+    core_fmt: ElemFmt,
+) -> CommProfile {
     let mut split = (0f64, 0f64, 0f64);
-    let mut steady = 0u64;
+    let mut steady_bytes = 0u64;
     let mut refresh_extra = 0u64;
     for b in spec.blocks() {
-        let elems = match b.class {
+        let bytes = match b.class {
             LayerClass::Linear => {
                 let r = rank.min(b.rows).min(b.cols);
                 let long = b.rows.max(b.cols);
                 refresh_extra += b.numel() as u64;
-                (r * long) as u64
+                (r * long * core_fmt.width()) as u64
             }
-            _ => b.numel() as u64,
+            _ => (b.numel() * BYTES_F32) as u64,
         };
-        add_split(&mut split, b.class, elems as f64);
-        steady += elems;
+        add_split(&mut split, b.class, bytes as f64 / BYTES_F32 as f64);
+        steady_bytes += bytes;
     }
     let k = k_refresh.max(1) as u64;
     let bpe = BYTES_F32 as u64;
     CommProfile {
-        bytes_per_step: ((steady * k + refresh_extra) * bpe) as f64 / k as f64,
-        peak_bytes: ((steady + refresh_extra) * bpe) as f64,
+        bytes_per_step: ((steady_bytes * k + refresh_extra * bpe) as f64) / k as f64,
+        peak_bytes: (steady_bytes + refresh_extra * bpe) as f64,
         split,
     }
 }
@@ -97,16 +111,25 @@ pub struct TsrParams {
 /// adds the sketches Q̄ (m×k) + B̄ (k×n). Vectors stay dense. Averaging
 /// period = lcm(K, K_emb), the exact cycle the ledger sees.
 pub fn tsr_profile(spec: &ModelSpec, p: TsrParams) -> CommProfile {
+    tsr_profile_fmt(spec, p, ElemFmt::F32)
+}
+
+/// Format-aware TSR profile (DESIGN.md §14): the steady r×r cores are
+/// priced at `core_fmt.width()` bytes/element; refresh sketches and
+/// dense vectors stay f32, exactly as `TsrAdam` quantizes. The period
+/// total stays an integer byte count divided once, preserving the
+/// bit-for-bit metered == analytic contract.
+pub fn tsr_profile_fmt(spec: &ModelSpec, p: TsrParams, core_fmt: ElemFmt) -> CommProfile {
     let mut split = (0f64, 0f64, 0f64);
-    let mut steady = 0u64;
+    let mut steady_bytes = 0u64;
     let mut period_extra = 0u64;
     let mut peak_extra = 0u64;
     let kl = p.k_refresh.max(1) as u64;
     let ke = p.k_refresh_emb.max(1) as u64;
     let period = lcm(kl, ke);
     for b in spec.blocks() {
-        let elems = match b.class {
-            LayerClass::Vector => b.numel() as u64,
+        let bytes = match b.class {
+            LayerClass::Vector => (b.numel() * BYTES_F32) as u64,
             class => {
                 let (r, kk) = if class == LayerClass::Embedding {
                     (p.rank_emb, ke)
@@ -118,17 +141,17 @@ pub fn tsr_profile(spec: &ModelSpec, p: TsrParams) -> CommProfile {
                 let sketches = (b.rows * sk + sk * b.cols) as u64;
                 period_extra += sketches * (period / kk);
                 peak_extra += sketches;
-                (r * r) as u64
+                (r * r * core_fmt.width()) as u64
             }
         };
-        add_split(&mut split, b.class, elems as f64);
-        steady += elems;
+        add_split(&mut split, b.class, bytes as f64 / BYTES_F32 as f64);
+        steady_bytes += bytes;
     }
     let bpe = BYTES_F32 as u64;
     CommProfile {
-        bytes_per_step: ((steady * period + period_extra) * bpe) as f64 / period as f64,
+        bytes_per_step: ((steady_bytes * period + period_extra * bpe) as f64) / period as f64,
         // Worst step: all blocks refresh together (step 0 / lcm of K's).
-        peak_bytes: ((steady + peak_extra) * bpe) as f64,
+        peak_bytes: (steady_bytes + peak_extra * bpe) as f64,
         split,
     }
 }
@@ -217,24 +240,30 @@ pub fn desloc_profile(spec: &ModelSpec, k_p: u64, k_m: u64, k_v: u64) -> CommPro
 /// factors P (m×r̂) + Q' (n×r̂) per matrix block and a dense replica
 /// mean per vector block. Peak == the sync step; period = h.
 pub fn lordo_profile(spec: &ModelSpec, rank: usize, h: u64) -> CommProfile {
+    lordo_profile_fmt(spec, rank, h, ElemFmt::F32)
+}
+
+/// Format-aware LoRDO profile (DESIGN.md §14): the round's delta
+/// factors P + Q' are priced at `core_fmt.width()` bytes/element; the
+/// dense vector replica means stay f32.
+pub fn lordo_profile_fmt(spec: &ModelSpec, rank: usize, h: u64, core_fmt: ElemFmt) -> CommProfile {
     let h = h.max(1);
     let mut split = (0f64, 0f64, 0f64);
-    let mut sync_total = 0u64;
+    let mut sync_bytes = 0u64;
     for b in spec.blocks() {
-        let elems = match b.class {
-            LayerClass::Vector => b.numel() as u64,
+        let bytes = match b.class {
+            LayerClass::Vector => (b.numel() * BYTES_F32) as u64,
             _ => {
                 let r = rank.min(b.rows).min(b.cols);
-                (b.rows * r + b.cols * r) as u64
+                ((b.rows * r + b.cols * r) * core_fmt.width()) as u64
             }
         };
-        add_split(&mut split, b.class, elems as f64 / h as f64);
-        sync_total += elems;
+        add_split(&mut split, b.class, bytes as f64 / (BYTES_F32 as u64 * h) as f64);
+        sync_bytes += bytes;
     }
-    let bpe = BYTES_F32 as u64;
     CommProfile {
-        bytes_per_step: (sync_total * bpe) as f64 / h as f64,
-        peak_bytes: (sync_total * bpe) as f64,
+        bytes_per_step: sync_bytes as f64 / h as f64,
+        peak_bytes: sync_bytes as f64,
         split,
     }
 }
@@ -493,6 +522,73 @@ mod tests {
         assert!(p4_slow.bytes_per_step < 0.1 * dense, "{}", p4_slow.bytes_per_step);
         // Higher rank → more bytes per round.
         assert!(lordo_profile(&spec, 8, 8).peak_bytes > p4.peak_bytes);
+    }
+
+    /// DESIGN.md §14: narrowing the core format shaves exactly
+    /// (4 − width) bytes per steady low-rank element off every profile,
+    /// leaving the f32 sketch/refresh/vector terms untouched. k = 1 and
+    /// h = 1 make the period division exact, so `==` on f64 is sound.
+    #[test]
+    fn narrow_core_formats_shave_exact_steady_bytes() {
+        let spec = ModelSpec::proxy(101, 16, 32, 2, 1);
+        let core_elems: u64 = spec
+            .blocks()
+            .iter()
+            .filter(|b| b.class != LayerClass::Vector)
+            .map(|b| {
+                let r = 4usize.min(b.rows).min(b.cols);
+                (r * r) as u64
+            })
+            .sum();
+        let p = TsrParams {
+            rank: 4,
+            k_refresh: 1,
+            rank_emb: 4,
+            k_refresh_emb: 1,
+            oversample: 2,
+        };
+        let base = tsr_profile(&spec, p);
+        assert_eq!(
+            base.bytes_per_step,
+            tsr_profile_fmt(&spec, p, ElemFmt::F32).bytes_per_step,
+            "f32 delegate must be byte-identical"
+        );
+        for fmt in [ElemFmt::Bf16, ElemFmt::I8] {
+            let saved = (core_elems * (BYTES_F32 - fmt.width()) as u64) as f64;
+            let narrow = tsr_profile_fmt(&spec, p, fmt);
+            assert_eq!(narrow.bytes_per_step, base.bytes_per_step - saved);
+            assert_eq!(narrow.peak_bytes, base.peak_bytes - saved);
+        }
+
+        // One-sided: steady r×long factor narrows, dense refresh + the
+        // always-dense embedding/vector blocks do not.
+        let factor_elems: u64 = spec
+            .blocks()
+            .iter()
+            .filter(|b| b.class == LayerClass::Linear)
+            .map(|b| (4usize.min(b.rows).min(b.cols) * b.rows.max(b.cols)) as u64)
+            .sum();
+        let base = onesided_profile(&spec, 4, 1);
+        let narrow = onesided_profile_fmt(&spec, 4, 1, ElemFmt::Bf16);
+        let saved = (factor_elems * (BYTES_F32 - 2) as u64) as f64;
+        assert_eq!(narrow.bytes_per_step, base.bytes_per_step - saved);
+        assert_eq!(narrow.peak_bytes, base.peak_bytes - saved);
+
+        // LoRDO: P + Q' narrow, vector replica means do not.
+        let pq_elems: u64 = spec
+            .blocks()
+            .iter()
+            .filter(|b| b.class != LayerClass::Vector)
+            .map(|b| {
+                let r = 4usize.min(b.rows).min(b.cols);
+                ((b.rows + b.cols) * r) as u64
+            })
+            .sum();
+        let base = lordo_profile(&spec, 4, 1);
+        let narrow = lordo_profile_fmt(&spec, 4, 1, ElemFmt::I8);
+        let saved = (pq_elems * (BYTES_F32 - 1) as u64) as f64;
+        assert_eq!(narrow.bytes_per_step, base.bytes_per_step - saved);
+        assert_eq!(narrow.peak_bytes, base.peak_bytes - saved);
     }
 
     #[test]

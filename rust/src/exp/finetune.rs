@@ -1,0 +1,229 @@
+//! Table 5: the adaptation regime — communication of a low-rank
+//! fine-tune vs a dense AdamW fine-tune from the *same* pretrained
+//! embedding (the paper's 25× GLUE-era claim, reproduced in shape on
+//! the native stack; DESIGN.md §6, §14).
+//!
+//! Pipeline under measurement: a short dense LM pretrain produces a
+//! token-embedding table; both fine-tunes transfer it bit-for-bit
+//! (`ClassifyTask::init_params_pretrained`) and train the same
+//! classification task with matched seeds. Rows differ only in the
+//! optimizer: dense AdamW, TSR f32, and the adaptation-regime
+//! configuration `tsr finetune` defaults to — lower rank, shorter
+//! refresh, bf16 cores with error feedback.
+//!
+//! **Comparable-loss contract:** the compressed rows must land within
+//! [`LOSS_TOL`]× of AdamW's final loss; the headline column is the
+//! bytes/step reduction at that quality, which must be ≥ 10× for the
+//! bf16 row (`table5_shows_10x_comm_reduction_at_comparable_loss`).
+
+use crate::comm::{ElemFmt, Topology};
+use crate::exp::MethodCfg;
+use crate::linalg::Matrix;
+use crate::model::ModelSpec;
+use crate::optim::{AdamHyper, LrSchedule, TsrConfig};
+use crate::train::finetune::ClassifyTask;
+use crate::train::lm_source::LmSource;
+use crate::train::{GradSource, Trainer};
+use crate::util::json::Json;
+
+/// Comparable-loss tolerance: a compressed fine-tune row is accepted
+/// when its final loss is ≤ `LOSS_TOL` × the dense AdamW final loss.
+/// Matches the spirit of the paper's "within noise of dense" GLUE
+/// deltas; generous enough to be seed-stable, tight enough that a
+/// diverging optimizer fails the table.
+pub const LOSS_TOL: f32 = 1.15;
+
+/// Fine-tune shape shared by the table and the `tsr finetune` CLI
+/// defaults: rank 8 with embedding rank 8, refresh every 25 steps,
+/// bf16 cores.
+pub fn finetune_tsr_cfg(rank: usize, k: usize, core_fmt: ElemFmt) -> TsrConfig {
+    TsrConfig {
+        rank,
+        rank_emb: rank,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 4,
+        core_fmt,
+        ..Default::default()
+    }
+}
+
+/// Short dense pretrain of the native LM; returns the trained
+/// token-embedding table (the block named `embed_tokens`). This is the
+/// in-process equivalent of `tsr train --source lm --save-every N`
+/// followed by `tsr finetune --from <ckpt>` reading the manifest.
+pub fn pretrain_embedding(
+    spec: &ModelSpec,
+    steps: usize,
+    workers: usize,
+    seed: u64,
+) -> Matrix {
+    let mut source = LmSource::new(spec, workers, 4, 16, seed);
+    let blocks = source.blocks().to_vec();
+    let mut opt = MethodCfg::Adam.build(
+        &blocks,
+        AdamHyper {
+            lr: 0.01,
+            weight_decay: 0.0,
+            scale: 1.0,
+            ..Default::default()
+        },
+        workers,
+    );
+    let mut params = source.init_params(seed ^ 0xF00D);
+    let trainer = Trainer::new(Topology::single_node(workers), LrSchedule::constant());
+    trainer.run(&mut source, opt.as_mut(), &mut params, steps);
+    // By name, not by class: the untied LM head is also Embedding-class
+    // (`blocks_untied_lm`), and only `embed_tokens` transfers.
+    let idx = blocks
+        .iter()
+        .position(|b| b.name == "embed_tokens")
+        .expect("LM spec has no embed_tokens block");
+    params.swap_remove(idx)
+}
+
+struct Row {
+    label: String,
+    bytes_per_step: f64,
+    cum_bytes: u64,
+    final_loss: f32,
+    accuracy: f32,
+}
+
+fn run_finetune_row(
+    label: &str,
+    method: &MethodCfg,
+    core_fmt: ElemFmt,
+    emb: &Matrix,
+    steps: usize,
+    workers: usize,
+    seed: u64,
+) -> Row {
+    let (vocab, dim) = (emb.rows, emb.cols);
+    let mut task = ClassifyTask::new(vocab, dim, 32, 4, 16, workers, 16, seed);
+    let blocks = task.blocks().to_vec();
+    let hyper = AdamHyper {
+        lr: 0.02,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = method.build_with_fmt(&blocks, hyper, workers, core_fmt);
+    let mut params = task.init_params_pretrained(seed ^ 0xF00D, emb);
+    let trainer = Trainer::new(Topology::single_node(workers), LrSchedule::constant());
+    let (metrics, ledger) = trainer.run(&mut task, opt.as_mut(), &mut params, steps);
+    Row {
+        label: label.to_string(),
+        bytes_per_step: ledger.bytes_per_step(),
+        cum_bytes: ledger.cumulative().last().copied().unwrap_or(0),
+        final_loss: metrics.final_loss(),
+        accuracy: task.accuracy(&params),
+    }
+}
+
+/// Table 5: adaptation-regime bytes vs dense AdamW at comparable loss.
+pub fn table5(pretrain_steps: usize, steps: usize, workers: usize, seed: u64) -> Json {
+    let spec = ModelSpec::proxy(64, 32, 64, 2, 2);
+    let emb = pretrain_embedding(&spec, pretrain_steps, workers, seed);
+
+    let tsr_f32 = MethodCfg::Tsr(finetune_tsr_cfg(8, 25, ElemFmt::F32));
+    let tsr_bf16 = MethodCfg::Tsr(finetune_tsr_cfg(8, 25, ElemFmt::Bf16));
+    let rows = vec![
+        run_finetune_row("adamw", &MethodCfg::Adam, ElemFmt::F32, &emb, steps, workers, seed),
+        run_finetune_row("tsr-f32", &tsr_f32, ElemFmt::F32, &emb, steps, workers, seed),
+        run_finetune_row("tsr-bf16", &tsr_bf16, ElemFmt::Bf16, &emb, steps, workers, seed),
+    ];
+    let dense = rows[0].bytes_per_step;
+
+    println!(
+        "\nTable 5 — fine-tune from a pretrained embedding ({} pretrain + {} finetune steps)",
+        pretrain_steps, steps
+    );
+    println!(
+        "{:<10} {:>12} {:>8} {:>11} {:>9}  (comparable-loss tol {LOSS_TOL}x)",
+        "METHOD", "BYTES/STEP", "xAdam", "FINAL LOSS", "ACC"
+    );
+    for r in &rows {
+        println!(
+            "{:<10} {:>12.1} {:>7.1}x {:>11.4} {:>9.3}",
+            r.label,
+            r.bytes_per_step,
+            dense / r.bytes_per_step,
+            r.final_loss,
+            r.accuracy
+        );
+    }
+
+    let out = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("method", Json::str(r.label.clone())),
+                ("bytes_per_step", Json::num(r.bytes_per_step)),
+                ("cum_bytes", Json::num(r.cum_bytes as f64)),
+                ("reduction_x", Json::num(dense / r.bytes_per_step)),
+                ("final_loss", Json::num(r.final_loss as f64)),
+                ("accuracy", Json::num(r.accuracy as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("pretrain_steps", Json::num(pretrain_steps as f64)),
+        ("finetune_steps", Json::num(steps as f64)),
+        ("loss_tol", Json::num(LOSS_TOL as f64)),
+        ("rows", Json::Arr(out)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The PR's headline acceptance: ≥ 10× comm reduction for the bf16
+    /// adaptation configuration vs dense AdamW at comparable loss
+    /// (within [`LOSS_TOL`]×), and the bf16 row strictly cheaper than
+    /// the f32 TSR row (the format is doing real work on the wire).
+    #[test]
+    fn table5_shows_10x_comm_reduction_at_comparable_loss() {
+        let j = table5(30, 150, 2, 42);
+        let rows = j.get("rows").as_arr().unwrap();
+        let by = |label: &str| {
+            rows.iter()
+                .find(|r| r.get_str("method", "") == label)
+                .unwrap_or_else(|| panic!("missing row {label}"))
+        };
+        let (adam, f32_row, bf16) = (by("adamw"), by("tsr-f32"), by("tsr-bf16"));
+        let adam_loss = adam.get_f64("final_loss", f64::NAN) as f32;
+        let bf16_loss = bf16.get_f64("final_loss", f64::NAN) as f32;
+        assert!(
+            bf16_loss <= LOSS_TOL * adam_loss,
+            "bf16 loss {bf16_loss} vs adamw {adam_loss} (tol {LOSS_TOL}x)"
+        );
+        let reduction = bf16.get_f64("reduction_x", 0.0);
+        assert!(reduction >= 10.0, "only {reduction:.1}x below dense");
+        assert!(
+            bf16.get_f64("bytes_per_step", 0.0) < f32_row.get_f64("bytes_per_step", 0.0),
+            "bf16 must be strictly cheaper than f32 TSR"
+        );
+        // Quality signal, not just loss: the transferred embedding plus
+        // compressed sync still learns the task well above chance (1/4).
+        assert!(bf16.get_f64("accuracy", 0.0) > 0.5);
+    }
+
+    /// The embedding transfer is real: pretraining moves the table, and
+    /// the pretrained fine-tune starts from exactly that matrix.
+    #[test]
+    fn pretrained_embedding_differs_from_init() {
+        let spec = ModelSpec::proxy(64, 32, 64, 2, 2);
+        let emb = pretrain_embedding(&spec, 5, 2, 7);
+        assert_eq!((emb.rows, emb.cols), (64, 32));
+        let src = LmSource::new(&spec, 2, 4, 16, 7);
+        let init = src.init_params(7 ^ 0xF00D);
+        let idx = src
+            .blocks()
+            .iter()
+            .position(|b| b.name == "embed_tokens")
+            .unwrap();
+        assert_ne!(emb.data, init[idx].data, "pretrain left the embedding untouched");
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod analytic;
 pub mod figures;
+pub mod finetune;
 pub mod lm_curves;
 pub mod runs;
 pub mod simtime;
@@ -11,7 +12,8 @@ pub mod tables;
 pub mod theory;
 
 pub use analytic::{
-    adamw_profile, desloc_profile, lordo_profile, onesided_profile, sign_profile, topk_profile,
-    tsr_profile, CommProfile, TsrParams,
+    adamw_profile, desloc_profile, lordo_profile, lordo_profile_fmt, onesided_profile,
+    onesided_profile_fmt, sign_profile, topk_profile, tsr_profile, tsr_profile_fmt, CommProfile,
+    TsrParams,
 };
 pub use runs::{run_proxy, run_proxy_exec, MethodCfg, RunOutput};

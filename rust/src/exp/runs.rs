@@ -2,7 +2,7 @@
 //! scales (CPU-feasible stand-ins for 60M…1B — DESIGN.md §6), and the
 //! run loop gluing QuadraticSim + optimizer + ledger.
 
-use crate::comm::{CommLedger, Topology};
+use crate::comm::{CommLedger, ElemFmt, Topology};
 use crate::metrics::RunMetrics;
 use crate::model::{BlockSpec, ModelSpec};
 use crate::optim::{
@@ -138,6 +138,36 @@ impl MethodCfg {
             MethodCfg::Lordo { rank, h } => {
                 Box::new(Lordo::new(blocks, hyper, workers, *rank, *h))
             }
+        }
+    }
+
+    /// [`build`] with a payload element format (DESIGN.md §14): a
+    /// non-f32 `core_fmt` narrows the steady low-rank payload of the
+    /// methods that support it — TSR-Adam's r×r cores, the one-sided
+    /// projected factor, LoRDO's delta factors — with per-worker error
+    /// feedback. Other methods (and TSR-SGD, which has no EF path)
+    /// ignore the format and sync f32, so their byte ledgers are
+    /// untouched; at `F32` this is exactly `build`.
+    pub fn build_with_fmt(
+        &self,
+        blocks: &[BlockSpec],
+        hyper: AdamHyper,
+        workers: usize,
+        core_fmt: ElemFmt,
+    ) -> Box<dyn DistOptimizer> {
+        match self {
+            MethodCfg::Tsr(cfg) if core_fmt != ElemFmt::F32 => {
+                let mut cfg = cfg.clone();
+                cfg.core_fmt = core_fmt;
+                Box::new(TsrAdam::new(blocks, hyper, cfg))
+            }
+            MethodCfg::OneSided { rank, k, refresh } if core_fmt != ElemFmt::F32 => Box::new(
+                OneSidedAdam::new(blocks, hyper, *rank, *k, *refresh).with_core_fmt(core_fmt),
+            ),
+            MethodCfg::Lordo { rank, h } if core_fmt != ElemFmt::F32 => {
+                Box::new(Lordo::new(blocks, hyper, workers, *rank, *h).with_core_fmt(core_fmt))
+            }
+            _ => self.build(blocks, hyper, workers),
         }
     }
 }
@@ -362,6 +392,55 @@ mod tests {
         }
         assert!(err.contains("adamx"), "error must echo the bad name");
         assert!(MethodCfg::parse("").is_err());
+    }
+
+    /// DESIGN.md §14: the fmt-aware builder narrows exactly the three
+    /// supported methods' steady plans and leaves everything else —
+    /// including the F32 path — byte-identical to `build`.
+    #[test]
+    fn build_with_fmt_narrows_only_supported_methods() {
+        let spec = ModelSpec::proxy(100, 16, 32, 2, 1);
+        let blocks = spec.blocks();
+        let hyper = AdamHyper::default();
+        let methods = [
+            MethodCfg::Adam,
+            MethodCfg::OneSided {
+                rank: 4,
+                k: 50,
+                refresh: OneSidedRefresh::ExactSvd,
+            },
+            MethodCfg::Tsr(TsrConfig {
+                rank: 4,
+                rank_emb: 4,
+                refresh_every: 50,
+                refresh_emb: 50,
+                oversample: 2,
+                ..Default::default()
+            }),
+            MethodCfg::Lordo { rank: 4, h: 1 },
+            MethodCfg::Sign { k_var: 50 },
+        ];
+        for m in &methods {
+            let base = m.build(&blocks, hyper, 2).sync_plan(1).total_bytes();
+            let same = m
+                .build_with_fmt(&blocks, hyper, 2, ElemFmt::F32)
+                .sync_plan(1)
+                .total_bytes();
+            assert_eq!(base, same, "{}: F32 must delegate to build", m.label());
+            let narrow = m
+                .build_with_fmt(&blocks, hyper, 2, ElemFmt::Bf16)
+                .sync_plan(1)
+                .total_bytes();
+            let supports = matches!(
+                m,
+                MethodCfg::Tsr(_) | MethodCfg::OneSided { .. } | MethodCfg::Lordo { .. }
+            );
+            if supports {
+                assert!(narrow < base, "{}: bf16 must shrink the plan", m.label());
+            } else {
+                assert_eq!(narrow, base, "{}: must ignore the format", m.label());
+            }
+        }
     }
 
     #[test]

@@ -12,6 +12,14 @@ use crate::util::pool;
 /// Threshold (in f32 multiply-adds) above which we parallelize.
 const PAR_FLOPS: usize = 1 << 22;
 
+/// Threshold (in f32 multiply-adds, m·n·k) above which [`mm_nt`]
+/// materializes Bᵀ once and runs the streaming NN kernel instead of
+/// the row-strided dot-product form. The copy is O(nk) against O(mnk)
+/// compute, so it amortizes on large products (~2.7× on the TSR lift
+/// path) but dominates on small ones — see DESIGN.md §15 for the
+/// measurements behind the boundary.
+const NT_TRANSPOSE_COPY_FLOPS: usize = 1 << 20;
+
 /// General transpose-aware product: `op(A) · op(B)` where `op(X)` is
 /// `Xᵀ` when the matching flag is set. This is the single entry point
 /// behind which the orientation-specific kernels live — callers name
@@ -67,8 +75,8 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     let cp = &c_ptr;
     // k-blocking keeps a B panel (KB × n) resident in L2 across all rows
     // of the task's block — without it the kernel is memory-bound
-    // streaming the whole B per A row (§Perf: 1.4 GB → ~10 MB of traffic
-    // on the 512×1376×512 MLP shape).
+    // streaming the whole B per A row (DESIGN.md §15: 1.4 GB → ~10 MB of
+    // traffic on the 512×1376×512 MLP shape).
     const KB: usize = 128;
     pool::parallel_for(nblocks, threads, move |bi| {
         let i0 = bi * block;
@@ -157,14 +165,14 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// The A·Bᵀ kernel.
 ///
-/// Perf note (EXPERIMENTS.md §Perf): the dot-product form below runs at
+/// Perf note (DESIGN.md §15): the dot-product form below runs at
 /// ~5.8 GF/s vs ~15 GF/s for the streaming `matmul` on this host (the
-/// row-strided B access defeats the vectorizer's reuse). Above a size
-/// threshold we therefore materialize Bᵀ once (O(nk) copy) and run the
-/// fast kernel — 2.7× on the TSR lift path.
+/// row-strided B access defeats the vectorizer's reuse). Above
+/// [`NT_TRANSPOSE_COPY_FLOPS`] we therefore materialize Bᵀ once (O(nk)
+/// copy) and run the fast kernel — 2.7× on the TSR lift path.
 fn mm_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols, "matmul_nt dim mismatch");
-    if a.rows * b.rows * a.cols >= 1 << 20 {
+    if a.rows * b.rows * a.cols >= NT_TRANSPOSE_COPY_FLOPS {
         return mm_nn(a, &b.transpose());
     }
     let m = a.rows;
@@ -339,6 +347,30 @@ mod tests {
         assert_eq!(c.data, matmul(&b, &a).transpose().data);
         // Cross-check against the explicit-transpose route numerically.
         assert!(c.dist(&matmul(&a.transpose(), &b.transpose())) < 1e-3);
+    }
+
+    #[test]
+    fn nt_crossover_is_correct_on_both_sides_of_the_boundary() {
+        // 128·128·64 = 2²⁰ lands exactly ON the threshold (transpose-
+        // copy path); dropping k to 63 falls just below (direct
+        // dot-product path). Both must agree with the explicit-
+        // transpose product.
+        assert!(128 * 128 * 64 >= NT_TRANSPOSE_COPY_FLOPS);
+        assert!(128 * 128 * 63 < NT_TRANSPOSE_COPY_FLOPS);
+        let mut rng = Xoshiro256::new(8);
+        for &k in &[63usize, 64] {
+            let a = Matrix::gaussian(128, k, 1.0, &mut rng);
+            let b = Matrix::gaussian(128, k, 1.0, &mut rng);
+            let c = matmul_nt(&a, &b);
+            let expect = matmul(&a, &b.transpose());
+            assert!(c.dist(&expect) < 1e-2, "k={k}");
+            if 128 * 128 * k >= NT_TRANSPOSE_COPY_FLOPS {
+                // At/above the boundary the NT entry point IS the
+                // transpose-copy composition, so equality is bitwise —
+                // pinning that the fast path actually engaged.
+                assert_eq!(c.data, expect.data, "k={k} took the slow path");
+            }
+        }
     }
 
     #[test]

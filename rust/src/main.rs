@@ -1,13 +1,16 @@
 //! `tsr` — CLI for the TSR-Adam reproduction.
 //!
 //! Subcommands (see DESIGN.md §3 for the experiment index):
-//!   table1|table2|table3|table4|table6   regenerate paper tables
+//!   table1|...|table6                    regenerate paper tables (table5 =
+//!                                        pretrain→finetune adaptation regime)
 //!   fig1|fig3|fig4|fig5                  regenerate paper figure data
 //!   simtime                              Fig 6: step-time breakdown (sim/)
 //!   soak                                 resilience sweep: straggler/jitter/kill+resume
 //!   theory                               Theorem 1 validation sweep
 //!   lm-curves                            quality-vs-bytes on the native LM (nn/)
 //!   train                                end-to-end training run (pjrt|quad|lm)
+//!   finetune                             classification fine-tune from a
+//!                                        pretrained LM checkpoint (--from)
 //!   info                                 platform / artifact status
 
 use tsr::exp::{figures, tables, theory};
@@ -44,6 +47,17 @@ fn main() {
         Some("table4") => {
             let steps = args.get_usize("steps", 150);
             write_results("table4.json", &tables::table4(steps));
+        }
+        Some("table5") => {
+            write_results(
+                "table5.json",
+                &tsr::exp::finetune::table5(
+                    args.get_usize("pretrain-steps", 30),
+                    args.get_usize("steps", 150),
+                    args.get_usize("workers", 2),
+                    args.get_u64("seed", 42),
+                ),
+            );
         }
         Some("table6") => {
             write_results("table6.json", &tables::table6());
@@ -135,6 +149,7 @@ fn main() {
             write_results("theory.json", &j);
         }
         Some("train") => run_train(&args),
+        Some("finetune") => run_finetune(&args),
         Some("info") => info(),
         other => {
             if let Some(cmd) = other {
@@ -142,7 +157,8 @@ fn main() {
             }
             eprintln!(
                 "usage: tsr <subcommand> [--options]\n\
-                 \n  tables:   table1 table2 table3 [--loss-steps N] table4 table6\
+                 \n  tables:   table1 table2 table3 [--loss-steps N] table4 \
+                 table5 [--pretrain-steps N --steps N --workers W --seed S] table6\
                  \n  figures:  fig1 fig3 fig4 fig5 [--steps N --workers W]\
                  \n  simtime:  simtime [--scale 60m --nodes 4 --gpus 8 --steps N \
                  --bucket-kb K --tokens T --flops F --no-overlap --flat \
@@ -172,11 +188,24 @@ fn main() {
                  --hidden H --inter F --heads A --layers L --batch B --seq T], \
                  DESIGN.md §10). Both are artifact-free and emit deterministic \
                  metrics JSON for CI's cross-backend gate\
+                 \n            --core-fmt F      payload element format for the steady \
+                 low-rank sync: f32 | bf16 | i8 (default f32; tsr/galore/lordo \
+                 only — narrows the synced cores/factors with per-worker error \
+                 feedback, DESIGN.md §14)\
                  \n            --save-every N    write a checkpoint manifest every N steps \
                  (quad/lm sources; --save-dir DIR, default checkpoints/)\
                  \n            --resume PATH     continue a checkpointed run: byte-identical \
                  to the uninterrupted run at the same world size; elastic \
                  --workers supported for quad only (DESIGN.md §9)\
+                 \n  finetune: finetune --from CKPT — classification fine-tune from a \
+                 `train --source lm` checkpoint: transfers the pretrained \
+                 token embedding, trains the task head with the adaptation-\
+                 regime defaults (--method tsr --rank 8 --k 25 --core-fmt bf16; \
+                 --method adamw for the dense baseline). Also honors \
+                 [--hidden H --classes C --seq T --batch B --workers W --lr F \
+                 --seed S --steps N --save-every N --save-dir D --backend B] \
+                 and --resume PATH to continue a fine-tune checkpoint \
+                 byte-for-byte (DESIGN.md §6, §14)\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -209,8 +238,16 @@ fn backend_from_args(args: &Args) -> tsr::exec::ExecBackend {
 /// by the quad and PJRT train paths, and by fresh runs and resumes.
 fn method_config_json(args: &Args, hidden: usize) -> tsr::util::json::Json {
     use tsr::util::json::Json;
+    // Validate the format name eagerly so a typo exits loudly at launch,
+    // not after the first checkpoint is written.
+    let core_fmt = args.get_or("core-fmt", "f32");
+    if let Err(e) = tsr::comm::ElemFmt::parse(core_fmt) {
+        eprintln!("error: --core-fmt: {e}");
+        std::process::exit(2);
+    }
     Json::obj(vec![
         ("method", Json::str(args.get_or("method", "tsr"))),
+        ("core_fmt", Json::str(core_fmt)),
         ("rank", Json::num(args.get_usize("rank", (hidden / 4).max(4)) as f64)),
         ("rank_emb", Json::num(args.get_usize("rank-emb", (hidden / 8).max(4)) as f64)),
         ("k", Json::num(args.get_usize("k", 50) as f64)),
@@ -311,6 +348,15 @@ fn synth_run_config(args: &Args) -> tsr::util::json::Json {
 /// parser (`MethodCfg::parse` — unknown names exit loudly with all
 /// nine valid methods); the echoed knobs are applied on top of its
 /// defaults per variant.
+/// The payload element format echoed in a run config (absent key — e.g.
+/// a pre-format checkpoint — means f32, DESIGN.md §14).
+fn core_fmt_from_config(cfg: &tsr::util::json::Json) -> tsr::comm::ElemFmt {
+    tsr::comm::ElemFmt::parse(cfg.get_str("core_fmt", "f32")).unwrap_or_else(|e| {
+        eprintln!("error: config core_fmt: {e}");
+        std::process::exit(2);
+    })
+}
+
 fn method_cfg_from_config(cfg: &tsr::util::json::Json) -> tsr::exp::MethodCfg {
     use tsr::exp::MethodCfg;
 
@@ -392,8 +438,8 @@ fn run_train_synth(args: &Args) {
         Some(ck) => {
             const CONFIG_ONLY: &[&str] = &[
                 "lr", "noise", "seed", "method", "k", "k-var", "keep-frac", "rank", "rank-emb",
-                "k-p", "k-m", "k-v", "h", "scale", "topo", "vocab", "hidden", "inter", "heads",
-                "layers", "batch", "seq",
+                "k-p", "k-m", "k-v", "h", "core-fmt", "scale", "topo", "vocab", "hidden", "inter",
+                "heads", "layers", "batch", "seq",
             ];
             for flag in CONFIG_ONLY {
                 if args.get(flag).is_some() {
@@ -471,7 +517,7 @@ fn run_train_synth(args: &Args) {
         scale: 1.0,
         ..Default::default()
     };
-    let mut opt = mcfg.build(&blocks, hyper, workers);
+    let mut opt = mcfg.build_with_fmt(&blocks, hyper, workers, core_fmt_from_config(&config));
 
     let (mut params, metrics0, ledger0) = match &resume {
         Some(ck) => {
@@ -569,6 +615,251 @@ fn run_train_synth(args: &Args) {
     println!("-> wrote {out}");
 }
 
+/// Resolve the `tsr finetune` run shape into the config echo stored in
+/// its checkpoint manifests. Defaults are the adaptation regime
+/// (DESIGN.md §6, §14): TSR rank 8, refresh every 25, bf16 cores —
+/// the configuration Table 5 prices against dense AdamW.
+fn finetune_run_config(args: &Args, vocab: usize, dim: usize) -> tsr::util::json::Json {
+    use tsr::util::json::Json;
+    let core_fmt = args.get_or("core-fmt", "bf16");
+    if let Err(e) = tsr::comm::ElemFmt::parse(core_fmt) {
+        eprintln!("error: --core-fmt: {e}");
+        std::process::exit(2);
+    }
+    Json::obj(vec![
+        ("source", Json::str("classify")),
+        ("method", Json::str(args.get_or("method", "tsr"))),
+        ("core_fmt", Json::str(core_fmt)),
+        ("rank", Json::num(args.get_usize("rank", 8) as f64)),
+        ("rank_emb", Json::num(args.get_usize("rank-emb", 8) as f64)),
+        ("k", Json::num(args.get_usize("k", 25) as f64)),
+        ("vocab", Json::num(vocab as f64)),
+        ("dim", Json::num(dim as f64)),
+        ("hidden", Json::num(args.get_usize("hidden", 32) as f64)),
+        ("classes", Json::num(args.get_usize("classes", 4) as f64)),
+        ("seq", Json::num(args.get_usize("seq", 16) as f64)),
+        ("batch", Json::num(args.get_usize("batch", 16) as f64)),
+        ("workers", Json::num(args.get_usize("workers", 2) as f64)),
+        ("steps", Json::num(args.get_usize("steps", 150) as f64)),
+        ("lr", Json::num(args.get_f64("lr", 0.02))),
+        (
+            "seed",
+            tsr::checkpoint::codec::u64_to_json(args.get_u64("seed", 42)),
+        ),
+    ])
+}
+
+/// `tsr finetune` — the second leg of the pretrain → finetune pipeline
+/// (DESIGN.md §6): load a `train --source lm` checkpoint, transfer its
+/// token-embedding table bit-for-bit into a [`ClassifyTask`]
+/// (`tsr::train::finetune`), and train the task with the adaptation-
+/// regime optimizer. `--resume` continues a fine-tune checkpoint
+/// byte-for-byte at the same world size, exactly like `train --resume`.
+fn run_finetune(args: &Args) {
+    use tsr::checkpoint::Checkpoint;
+    use tsr::comm::{CommLedger, Topology};
+    use tsr::metrics::RunMetrics;
+    use tsr::optim::{AdamHyper, LrSchedule};
+    use tsr::train::finetune::ClassifyTask;
+    use tsr::train::{CkptCfg, GradSource, Trainer};
+
+    let backend = backend_from_args(args);
+    let resume = args.get("resume").map(|p| {
+        let ck = Checkpoint::load(p).unwrap_or_else(|e| panic!("--resume: {e}"));
+        let src = ck.config.get_str("source", "?").to_string();
+        assert_eq!(
+            src, "classify",
+            "--resume: checkpoint source `{src}` is not a finetune run (classify); \
+             pretrain checkpoints go through --from"
+        );
+        ck
+    });
+    // One resolved config drives both paths, same contract as `train`:
+    // a resume trusts the manifest's echo, not re-typed flags.
+    let config = match &resume {
+        Some(ck) => {
+            const CONFIG_ONLY: &[&str] = &[
+                "method", "rank", "rank-emb", "k", "core-fmt", "hidden", "classes", "seq",
+                "batch", "workers", "lr", "seed", "from",
+            ];
+            for flag in CONFIG_ONLY {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "warning: --{flag} is fixed by the checkpoint's config and was ignored \
+                         (--resume honors only --steps/--backend/--out/--save-*)"
+                    );
+                }
+            }
+            ck.config.clone()
+        }
+        None => {
+            let from = args.get("from").unwrap_or_else(|| {
+                eprintln!(
+                    "error: finetune needs --from <pretrain checkpoint> \
+                     (a `train --source lm --save-every N` manifest) or --resume <finetune checkpoint>"
+                );
+                std::process::exit(2);
+            });
+            let ck = Checkpoint::load(from).unwrap_or_else(|e| panic!("--from: {e}"));
+            let src = ck.config.get_str("source", "?");
+            assert_eq!(
+                src, "lm",
+                "--from: checkpoint source `{src}` has no token embedding to transfer \
+                 (need a `train --source lm` checkpoint)"
+            );
+            // Locate the embedding param by the LM trainer's block order
+            // (`blocks_untied_lm` — the untied head is Embedding-class
+            // too, so match `embed_tokens` by name), the same spec
+            // reconstruction `train --resume` performs.
+            let spec = tsr::model::ModelSpec::proxy(
+                ck.config.get_usize("vocab", 64),
+                ck.config.get_usize("hidden", 32),
+                ck.config.get_usize("inter", 64),
+                ck.config.get_usize("heads", 2),
+                ck.config.get_usize("layers", 2),
+            );
+            let idx = spec
+                .blocks_untied_lm()
+                .iter()
+                .position(|b| b.name == "embed_tokens")
+                .expect("--from: LM spec has no embed_tokens block");
+            let emb = &ck.params[idx];
+            println!(
+                "transfer: {} ({}x{} token embedding from `{}`, step {})",
+                spec.name, emb.rows, emb.cols, from, ck.step
+            );
+            let mut cfg = finetune_run_config(args, emb.rows, emb.cols);
+            cfg.set("from", tsr::util::json::Json::str(from));
+            // The embedding rides along only until init below; stash it
+            // where the fresh-run arm can reach it.
+            cfg.set("_emb", tsr::checkpoint::codec::matrix_to_json(emb));
+            cfg
+        }
+    };
+    let start_step = resume.as_ref().map(|ck| ck.step as usize).unwrap_or(0);
+    let steps = args.get_usize("steps", config.get_usize("steps", 150));
+    assert!(
+        steps > start_step,
+        "--steps {steps} must exceed the checkpoint's completed step {start_step}"
+    );
+    // World size is config-fixed: the task's sample stream is a single
+    // RNG shared across workers, so it cannot re-shard elastically.
+    let workers = config.get_usize("workers", 2);
+    let lr = config.get_f64("lr", 0.02) as f32;
+    let seed = tsr::checkpoint::codec::u64_from_json(config.get("seed"), "config.seed")
+        .expect("config.seed");
+    let mut task = ClassifyTask::new(
+        config.get_usize("vocab", 64),
+        config.get_usize("dim", 32),
+        config.get_usize("hidden", 32),
+        config.get_usize("classes", 4),
+        config.get_usize("seq", 16),
+        workers,
+        config.get_usize("batch", 16),
+        seed,
+    );
+    let blocks = task.blocks().to_vec();
+    let mcfg = method_cfg_from_config(&config);
+    let hyper = AdamHyper {
+        lr,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = mcfg.build_with_fmt(&blocks, hyper, workers, core_fmt_from_config(&config));
+
+    let (mut params, metrics0, ledger0) = match &resume {
+        Some(ck) => {
+            assert_eq!(opt.name(), ck.method, "--resume: optimizer method mismatch");
+            assert_eq!(
+                workers, ck.workers,
+                "--resume: finetune world size is fixed by the checkpoint"
+            );
+            opt.load_state(&ck.opt_state, workers)
+                .expect("--resume: restore optimizer state");
+            task.load_state(&ck.source_state)
+                .expect("--resume: restore task state");
+            (
+                ck.params.clone(),
+                RunMetrics::state_from_json(&ck.metrics).expect("--resume: restore metrics"),
+                CommLedger::from_json(&ck.ledger).expect("--resume: restore ledger"),
+            )
+        }
+        None => {
+            let emb = tsr::checkpoint::codec::matrix_from_json(config.get("_emb"), "embedding")
+                .expect("transfer embedding");
+            (
+                task.init_params_pretrained(seed ^ 0xF00D, &emb),
+                RunMetrics::new(opt.name()),
+                CommLedger::new(),
+            )
+        }
+    };
+
+    let mut trainer = Trainer::new(Topology::single_node(workers), LrSchedule::constant())
+        .with_backend(backend.sized_for(workers));
+    let save_every = args.get_usize("save-every", 0);
+    if save_every > 0 {
+        // Manifests echo the resolved run shape minus the transfer-time
+        // embedding (it lives in `params` from here on).
+        let mut save_config = config.clone();
+        save_config.set("steps", tsr::util::json::Json::num(steps as f64));
+        save_config.set("_emb", tsr::util::json::Json::Null);
+        trainer.ckpt = Some(CkptCfg {
+            every: save_every,
+            dir: args.get_or("save-dir", "checkpoints").into(),
+            config: save_config,
+        });
+    }
+    let (mut metrics, ledger) = trainer.run_from(
+        &mut task,
+        opt.as_mut(),
+        &mut params,
+        start_step,
+        steps,
+        metrics0,
+        ledger0,
+    );
+    metrics.name = mcfg.label();
+
+    println!(
+        "== finetune {} on classify:{}x{} ({} workers, {} backend{}) ==",
+        mcfg.label(),
+        task.vocab,
+        task.dim,
+        workers,
+        backend.name(),
+        if start_step > 0 {
+            format!(", resumed at step {start_step}")
+        } else {
+            String::new()
+        }
+    );
+    println!("final loss      : {:.4}", metrics.final_loss());
+    println!("accuracy        : {:.3}", task.accuracy(&params));
+    println!(
+        "bytes/step      : {}",
+        tsr::util::bench::fmt_bytes(ledger.bytes_per_step())
+    );
+    println!(
+        "weights fp      : {:016x}",
+        tsr::metrics::params_fingerprint(&params)
+    );
+
+    let out = args.get_or("out", "results/finetune.json");
+    if let Some(dir) = std::path::Path::new(out).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(
+        out,
+        metrics
+            .to_json_deterministic(&ledger, &params)
+            .to_string_pretty(),
+    )
+    .expect("write run json");
+    println!("-> wrote {out}");
+}
+
 /// End-to-end PJRT training: the real L1+L2+L3 composition.
 fn run_train_pjrt(args: &Args) {
     use tsr::comm::Topology;
@@ -600,14 +891,15 @@ fn run_train_pjrt(args: &Args) {
     let mut source = PjrtSource::new(model, batcher);
     let blocks = source.blocks().to_vec();
 
-    let mcfg = method_cfg_from_config(&method_config_json(args, manifest.hidden));
+    let method_config = method_config_json(args, manifest.hidden);
+    let mcfg = method_cfg_from_config(&method_config);
     let hyper = AdamHyper {
         lr,
         weight_decay: 0.0,
         scale: 1.0,
         ..Default::default()
     };
-    let mut opt = mcfg.build(&blocks, hyper, workers);
+    let mut opt = mcfg.build_with_fmt(&blocks, hyper, workers, core_fmt_from_config(&method_config));
     let mut params = source.init_params(args.get_u64("seed", 42));
     let mut trainer = Trainer::new(
         Topology::multi_node(2, workers.div_ceil(2)),

@@ -23,8 +23,10 @@
 use std::io::{Read, Write};
 
 /// Wire protocol version, exchanged in every `Hello`; a coordinator and
-/// worker from different builds refuse each other loudly.
-pub const WIRE_VERSION: u32 = 1;
+/// worker from different builds refuse each other loudly. v2 added the
+/// element-format tag to `Collective` frames and narrow (bf16/int8)
+/// `Data` ring chunks.
+pub const WIRE_VERSION: u32 = 2;
 
 /// Hard upper bound on a frame payload (1 GiB). A length prefix above
 /// this is corruption by definition — no collective in this repo ships

@@ -64,6 +64,7 @@ impl DistOptimizer for DenseAdamW {
                     block: b,
                     class: self.classes[b],
                     bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 })
                 .collect(),

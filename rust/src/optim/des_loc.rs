@@ -150,6 +150,7 @@ impl DistOptimizer for DesLoc {
                 block: b,
                 class: self.classes[b],
                 bytes: blk.replicas[0].numel() * BYTES_F32 * states_due,
+                fmt: crate::comm::ElemFmt::F32,
                 refresh: false,
             })
             .collect();

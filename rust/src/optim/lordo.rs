@@ -20,7 +20,7 @@
 //! here once H is large.
 
 use super::{sync_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
-use crate::comm::{collective, LayerClass, BYTES_F32};
+use crate::comm::{collective, fmt as elem, ElemFmt, LayerClass, BYTES_F32};
 use crate::linalg::{gemm, orth, Matrix};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
@@ -36,6 +36,11 @@ struct LoBlock {
     rank: usize,
     /// Warm-started right factor Q (n×r), carried across rounds.
     q: Matrix,
+    /// Per-worker error-feedback residuals for narrow `core_fmt`s, one
+    /// pair per worker — the P (m×r) and Q' (n×r) factor syncs quantize
+    /// independently (empty for f32; DESIGN.md §14).
+    errors_p: Vec<Matrix>,
+    errors_q: Vec<Matrix>,
     st: LoCommon,
 }
 
@@ -54,6 +59,9 @@ pub struct Lordo {
     hyper: AdamHyper,
     classes: Vec<LayerClass>,
     blocks: Vec<BlockState>,
+    /// Element format of the low-rank delta-factor syncs (P and Q');
+    /// vector replica means stay f32.
+    core_fmt: ElemFmt,
     /// Replicas start as copies of `ctx.params` on the first step;
     /// persisted so a resumed run never re-seeds mid-flight.
     init: bool,
@@ -77,6 +85,8 @@ impl Lordo {
                     BlockState::LowRank(LoBlock {
                         rank: r,
                         q: orth(&Matrix::gaussian(b.cols, r, 1.0, &mut rng)),
+                        errors_p: Vec::new(),
+                        errors_q: Vec::new(),
                         st: common(b),
                     })
                 }
@@ -88,9 +98,17 @@ impl Lordo {
             hyper,
             classes: blocks.iter().map(|b| b.class).collect(),
             blocks: states,
+            core_fmt: ElemFmt::F32,
             init: false,
             t: 0,
         }
+    }
+
+    /// Quantize the round-boundary delta-factor syncs to `fmt` with
+    /// per-worker error feedback (builder; f32 by default).
+    pub fn with_core_fmt(mut self, fmt: ElemFmt) -> Self {
+        self.core_fmt = fmt;
+        self
     }
 }
 
@@ -154,17 +172,41 @@ impl DistOptimizer for Lordo {
                             d
                         })
                         .collect();
-                    // P_i = Δ_i Q (fanned out per worker); all-reduce; orth.
+                    let fmt = self.core_fmt;
+                    // P_i = Δ_i Q (fanned out per worker); EF-quantize
+                    // when narrow; all-reduce; orth.
                     let mut ps: Vec<Matrix> = ctx
                         .exec
                         .map_workers(deltas.len(), |i| gemm(&deltas[i], false, &blk.q, false));
-                    collective::sync_mean(&mut ps, class, ctx.ledger, ctx.topo, ctx.exec);
+                    if fmt != ElemFmt::F32 {
+                        let (pr, pc) = (ps[0].rows, ps[0].cols);
+                        if blk.errors_p.is_empty() {
+                            blk.errors_p =
+                                (0..ps.len()).map(|_| Matrix::zeros(pr, pc)).collect();
+                        }
+                        debug_assert_eq!(blk.errors_p.len(), ps.len(), "EF world mismatch");
+                        for (p, e) in ps.iter_mut().zip(blk.errors_p.iter_mut()) {
+                            elem::quantize_ef(fmt, &mut p.data, &mut e.data);
+                        }
+                    }
+                    collective::sync_mean_fmt(&mut ps, class, fmt, ctx.ledger, ctx.topo, ctx.exec);
                     let phat = orth(&ps[0]);
                     // Q'_i = Δ_iᵀ P̂ ; all-reduce → next round's warm start.
                     let mut qs: Vec<Matrix> = ctx
                         .exec
                         .map_workers(deltas.len(), |i| gemm(&deltas[i], true, &phat, false));
-                    collective::sync_mean(&mut qs, class, ctx.ledger, ctx.topo, ctx.exec);
+                    if fmt != ElemFmt::F32 {
+                        let (qr, qc) = (qs[0].rows, qs[0].cols);
+                        if blk.errors_q.is_empty() {
+                            blk.errors_q =
+                                (0..qs.len()).map(|_| Matrix::zeros(qr, qc)).collect();
+                        }
+                        debug_assert_eq!(blk.errors_q.len(), qs.len(), "EF world mismatch");
+                        for (q, e) in qs.iter_mut().zip(blk.errors_q.iter_mut()) {
+                            elem::quantize_ef(fmt, &mut q.data, &mut e.data);
+                        }
+                    }
+                    collective::sync_mean_fmt(&mut qs, class, fmt, ctx.ledger, ctx.topo, ctx.exec);
                     blk.q = qs.swap_remove(0);
                     // Anchor absorbs the rank-r averaged delta; every
                     // replica restarts the next round from it.
@@ -188,20 +230,27 @@ impl DistOptimizer for Lordo {
             .iter()
             .enumerate()
             .map(|(b, s)| {
-                let elems = if !due {
-                    0
+                // Matrix factors at the core format's width; dense
+                // vector replica means at f32.
+                let (bytes, fmt) = if !due {
+                    (0, self.core_fmt)
                 } else {
                     match s {
-                        BlockState::Dense(st) => st.replicas[0].numel(),
+                        BlockState::Dense(st) => {
+                            (st.replicas[0].numel() * BYTES_F32, ElemFmt::F32)
+                        }
                         BlockState::LowRank(blk) => {
-                            blk.st.replicas[0].rows * blk.rank + blk.q.rows * blk.rank
+                            let elems =
+                                blk.st.replicas[0].rows * blk.rank + blk.q.rows * blk.rank;
+                            (elems * self.core_fmt.width(), self.core_fmt)
                         }
                     }
                 };
                 SyncItem {
                     block: b,
                     class: self.classes[b],
-                    bytes: elems * BYTES_F32,
+                    bytes,
+                    fmt,
                     refresh: false,
                 }
             })
@@ -215,7 +264,10 @@ impl DistOptimizer for Lordo {
             .map(|s| match s {
                 BlockState::Dense(st) => 3 * st.replicas.len() * st.replicas[0].numel(),
                 BlockState::LowRank(blk) => {
-                    blk.q.numel() + 3 * blk.st.replicas.len() * blk.st.replicas[0].numel()
+                    blk.q.numel()
+                        + 3 * blk.st.replicas.len() * blk.st.replicas[0].numel()
+                        + blk.errors_p.iter().map(|e| e.numel()).sum::<usize>()
+                        + blk.errors_q.iter().map(|e| e.numel()).sum::<usize>()
                 }
             })
             .sum()
@@ -247,6 +299,12 @@ impl DistOptimizer for Lordo {
                         ("kind", Json::str("lowrank")),
                         ("q", codec::matrix_to_json(&blk.q)),
                     ];
+                    if !blk.errors_p.is_empty() {
+                        fields.push(("ef_p", crate::checkpoint::errors_to_json(&blk.errors_p)));
+                    }
+                    if !blk.errors_q.is_empty() {
+                        fields.push(("ef_q", crate::checkpoint::errors_to_json(&blk.errors_q)));
+                    }
                     fields.extend(common(&blk.st));
                     Json::obj(fields)
                 }
@@ -298,6 +356,29 @@ impl DistOptimizer for Lordo {
                 (BlockState::Dense(st), Some("dense")) => load_common(st, j, &what)?,
                 (BlockState::LowRank(blk), Some("lowrank")) => {
                     blk.q = codec::matrix_from_json_expect(j.get("q"), blk.q.rows, blk.q.cols, &what)?;
+                    let null = crate::util::json::Json::Null;
+                    blk.errors_p = if j.get("ef_p") == &null {
+                        Vec::new()
+                    } else {
+                        crate::checkpoint::errors_from_json(
+                            j.get("ef_p"),
+                            blk.st.replicas[0].rows,
+                            blk.q.cols,
+                            workers,
+                            &format!("{what}.ef_p"),
+                        )?
+                    };
+                    blk.errors_q = if j.get("ef_q") == &null {
+                        Vec::new()
+                    } else {
+                        crate::checkpoint::errors_from_json(
+                            j.get("ef_q"),
+                            blk.q.rows,
+                            blk.q.cols,
+                            workers,
+                            &format!("{what}.ef_q"),
+                        )?
+                    };
                     load_common(&mut blk.st, j, &what)?;
                 }
                 (_, kind) => {
@@ -442,6 +523,51 @@ mod tests {
         fresh.load_state(&state, 2).unwrap();
         assert!(fresh.init);
         // Continuing both for 4 more steps stays bitwise identical.
+        let (_, pa) = drive_from(&mut opt, params_a.clone(), 4, 77);
+        let (_, pb) = drive_from(&mut fresh, params_a, 4, 77);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    /// DESIGN.md §14: with bf16 delta factors, a sync round pays
+    /// 2 bytes per P/Q' element (vector replicas stay f32), the analytic
+    /// plan equals the metered ledger every step, and a mid-round
+    /// checkpoint — EF residuals included — resumes bitwise.
+    #[test]
+    fn bf16_delta_factors_halve_round_bytes_and_resume_bitwise() {
+        let mk = || {
+            Lordo::new(&blocks(), AdamHyper::default(), 2, 4, 3).with_core_fmt(ElemFmt::Bf16)
+        };
+        let mut opt = mk();
+        let (ledger, _) = drive(&mut opt, 7, 3);
+        // Rank clamps to 4: P is 10×4, Q' is 8×4 at 2 bytes each; the
+        // 6-element vector block still syncs dense f32.
+        let sync_bytes = (10 * 4 + 8 * 4) * ElemFmt::Bf16.width() + 6 * BYTES_F32;
+        for t in 0..7u64 {
+            let expect = if t % 3 == 0 { sync_bytes } else { 0 };
+            assert_eq!(ledger.step(t as usize).total, expect, "step {t}");
+            assert_eq!(opt.sync_plan(t).total_bytes(), expect, "plan step {t}");
+        }
+
+        // Mid-round cut: 5 steps past two syncs, EF residuals live.
+        let mut opt = mk();
+        let (_, params_a) = drive(&mut opt, 5, 9);
+        let has_live_ef = match &opt.blocks[0] {
+            BlockState::LowRank(blk) => {
+                !blk.errors_p.is_empty()
+                    && blk
+                        .errors_p
+                        .iter()
+                        .chain(blk.errors_q.iter())
+                        .any(|e| e.data.iter().any(|&x| x != 0.0))
+            }
+            BlockState::Dense(_) => false,
+        };
+        assert!(has_live_ef, "quantized syncs left no residual: vacuous test");
+        let state = opt.save_state();
+        let mut fresh = mk();
+        fresh.load_state(&state, 2).unwrap();
         let (_, pa) = drive_from(&mut opt, params_a.clone(), 4, 77);
         let (_, pb) = drive_from(&mut fresh, params_a, 4, 77);
         for (a, b) in pa.iter().zip(&pb) {

@@ -35,7 +35,7 @@ pub mod topk_adam;
 pub mod tsr;
 pub mod tsr_sgd;
 
-use crate::comm::{CommLedger, LayerClass, Topology};
+use crate::comm::{CommLedger, ElemFmt, LayerClass, Topology};
 use crate::exec::ExecBackend;
 use crate::linalg::Matrix;
 use crate::model::BlockSpec;
@@ -98,8 +98,14 @@ pub struct SyncItem {
     /// Block index in forward (model) order.
     pub block: usize,
     pub class: LayerClass,
-    /// Payload bytes the method synchronizes for this block at step t.
+    /// Payload bytes the method synchronizes for this block at step t —
+    /// already format-true (`numel × fmt.width()` for the steady
+    /// payload; refresh extras are priced at their own widths).
     pub bytes: usize,
+    /// Element format of the block's *steady* payload (DESIGN.md §14).
+    /// Refresh-step items still describe their sketch extras in f32;
+    /// `bytes` is authoritative, `fmt` annotates the steady encoding.
+    pub fmt: ElemFmt,
     /// True when this step carries the block's refresh extra (sketches,
     /// dense SVD gradient, variance re-estimate, …).
     pub refresh: bool,

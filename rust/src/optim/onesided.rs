@@ -9,7 +9,7 @@
 //! contrasts against (Fig. 2b). Embeddings stay dense, as in GaLore.
 
 use super::{refresh_due, AdamHyper, DenseAdamState, DistOptimizer, StepCtx, SyncItem, SyncPlan};
-use crate::comm::{collective, LayerClass};
+use crate::comm::{collective, fmt as elem, ElemFmt, LayerClass};
 use crate::linalg::{gemm, rsvd, svd_truncated, Matrix};
 use crate::model::BlockSpec;
 use crate::util::rng::Xoshiro256;
@@ -35,6 +35,9 @@ struct ProjBlock {
     basis: Matrix,
     m: Matrix,
     v: Matrix,
+    /// Per-worker error-feedback residuals for narrow `core_fmt`s on
+    /// the steady projected payload (empty for f32; DESIGN.md §14).
+    errors: Vec<Matrix>,
     /// Step that first built the basis ([`refresh_due`] bookkeeping).
     init_step: Option<u64>,
 }
@@ -44,6 +47,10 @@ pub struct OneSidedAdam {
     refresh: OneSidedRefresh,
     classes: Vec<LayerClass>,
     blocks: Vec<BlockState>,
+    /// Element format of the steady projected-factor sync; the dense
+    /// refresh gradient stays f32 (it feeds the SVD that sets basis
+    /// quality — same rationale as TSR's f32 sketches).
+    core_fmt: ElemFmt,
     seed: u64,
     t: u64,
 }
@@ -73,6 +80,7 @@ impl OneSidedAdam {
                         basis: Matrix::zeros(if left { b.rows } else { b.cols }, r),
                         m: Matrix::zeros(pr, pc),
                         v: Matrix::zeros(pr, pc),
+                        errors: Vec::new(),
                         init_step: None,
                     })
                 }
@@ -83,9 +91,18 @@ impl OneSidedAdam {
             refresh,
             classes: blocks.iter().map(|b| b.class).collect(),
             blocks: states,
+            core_fmt: ElemFmt::F32,
             seed: 0x6A10_4E,
             t: 0,
         }
+    }
+
+    /// Quantize the steady projected sync to `fmt` with per-worker
+    /// error feedback (builder — the constructor signature is shared by
+    /// many call sites and stays f32-default).
+    pub fn with_core_fmt(mut self, fmt: ElemFmt) -> Self {
+        self.core_fmt = fmt;
+        self
     }
 }
 
@@ -141,7 +158,8 @@ impl DistOptimizer for OneSidedAdam {
                     }
 
                     // Project per worker (fanned out over threads), then
-                    // all-reduce the O(rn) object.
+                    // all-reduce the O(rn) object — error-feedback
+                    // quantized when the steady format is narrow.
                     let grads_ref = &*ctx.grads;
                     let mut proj: Vec<Matrix> = ctx.exec.map_workers(grads_ref.len(), |i| {
                         if blk.left {
@@ -150,7 +168,19 @@ impl DistOptimizer for OneSidedAdam {
                             gemm(&grads_ref[i][b], false, &blk.basis, false) // m×r
                         }
                     });
-                    collective::sync_mean(&mut proj, class, ctx.ledger, ctx.topo, ctx.exec);
+                    let fmt = self.core_fmt;
+                    if fmt != ElemFmt::F32 {
+                        let (pr, pc) = (blk.m.rows, blk.m.cols);
+                        if blk.errors.is_empty() {
+                            blk.errors =
+                                (0..proj.len()).map(|_| Matrix::zeros(pr, pc)).collect();
+                        }
+                        debug_assert_eq!(blk.errors.len(), proj.len(), "EF world mismatch");
+                        for (p, e) in proj.iter_mut().zip(blk.errors.iter_mut()) {
+                            elem::quantize_ef(fmt, &mut p.data, &mut e.data);
+                        }
+                    }
+                    collective::sync_mean_fmt(&mut proj, class, fmt, ctx.ledger, ctx.topo, ctx.exec);
                     let cbar = &proj[0];
 
                     // Adam moments in projected space.
@@ -194,22 +224,26 @@ impl DistOptimizer for OneSidedAdam {
                     block: b,
                     class: self.classes[b],
                     bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    fmt: ElemFmt::F32,
                     refresh: false,
                 },
                 BlockState::Projected(blk) => {
                     let refresh = refresh_due(blk.init_step, self.t, blk.refresh_every as u64, t);
-                    // Projected object every step; full dense gradient on
+                    // Projected object every step (at the steady core
+                    // format's width); full dense f32 gradient on
                     // refresh steps (the GaLore peak-byte event).
                     let dense = if blk.left {
                         blk.basis.rows * blk.m.cols
                     } else {
                         blk.m.rows * blk.basis.rows
                     };
-                    let elems = blk.m.numel() + if refresh { dense } else { 0 };
+                    let extra = if refresh { dense } else { 0 };
                     SyncItem {
                         block: b,
                         class: self.classes[b],
-                        bytes: elems * crate::comm::BYTES_F32,
+                        bytes: blk.m.numel() * self.core_fmt.width()
+                            + extra * crate::comm::BYTES_F32,
+                        fmt: self.core_fmt,
                         refresh,
                     }
                 }
@@ -224,7 +258,10 @@ impl DistOptimizer for OneSidedAdam {
             .map(|s| match s {
                 BlockState::Dense(st) => st.elements(),
                 BlockState::Projected(b) => {
-                    b.basis.numel() + b.m.numel() + b.v.numel()
+                    b.basis.numel()
+                        + b.m.numel()
+                        + b.v.numel()
+                        + b.errors.iter().map(|e| e.numel()).sum::<usize>()
                 }
             })
             .sum()
@@ -241,13 +278,19 @@ impl DistOptimizer for OneSidedAdam {
                     ("kind", Json::str("dense")),
                     ("adam", st.state_to_json()),
                 ]),
-                BlockState::Projected(b) => Json::obj(vec![
-                    ("kind", Json::str("projected")),
-                    ("basis", codec::matrix_to_json(&b.basis)),
-                    ("m", codec::matrix_to_json(&b.m)),
-                    ("v", codec::matrix_to_json(&b.v)),
-                    ("init_step", codec::opt_u64_to_json(b.init_step)),
-                ]),
+                BlockState::Projected(b) => {
+                    let mut fields = vec![
+                        ("kind", Json::str("projected")),
+                        ("basis", codec::matrix_to_json(&b.basis)),
+                        ("m", codec::matrix_to_json(&b.m)),
+                        ("v", codec::matrix_to_json(&b.v)),
+                        ("init_step", codec::opt_u64_to_json(b.init_step)),
+                    ];
+                    if !b.errors.is_empty() {
+                        fields.push(("ef", crate::checkpoint::errors_to_json(&b.errors)));
+                    }
+                    Json::obj(fields)
+                }
             })
             .collect();
         Json::obj(vec![
@@ -259,7 +302,7 @@ impl DistOptimizer for OneSidedAdam {
     fn load_state(
         &mut self,
         state: &crate::util::json::Json,
-        _workers: usize,
+        workers: usize,
     ) -> Result<(), String> {
         use crate::checkpoint::codec;
         let blocks = state.get("blocks").as_arr().ok_or("onesided: missing blocks")?;
@@ -289,6 +332,17 @@ impl DistOptimizer for OneSidedAdam {
                         codec::require(j, "init_step", &what)?,
                         &format!("{what}.init_step"),
                     )?;
+                    b.errors = if j.get("ef") == &crate::util::json::Json::Null {
+                        Vec::new()
+                    } else {
+                        crate::checkpoint::errors_from_json(
+                            j.get("ef"),
+                            b.m.rows,
+                            b.m.cols,
+                            workers,
+                            &format!("{what}.ef"),
+                        )?
+                    };
                 }
                 (_, kind) => {
                     return Err(format!("{what}: block kind mismatch (checkpoint: {kind:?})"));
@@ -351,6 +405,57 @@ mod tests {
         assert_eq!(ledger.step(2).total, 8 * 96 * 4);
         // Table 2 one-sided state: mr + 2nr with m the short side.
         assert_eq!(opt.state_elements(), 64 * 8 + 2 * 96 * 8);
+    }
+
+    /// bf16 steady projection: metered bytes halve exactly, the dense
+    /// refresh gradient stays full f32, and `sync_plan` prices both.
+    #[test]
+    fn bf16_steady_projection_halves_metered_bytes() {
+        let blocks = vec![BlockSpec {
+            name: "w".into(),
+            rows: 64,
+            cols: 96,
+            class: LayerClass::Linear,
+        }];
+        let mut params = vec![Matrix::zeros(64, 96)];
+        let mut opt = OneSidedAdam::new(
+            &blocks,
+            AdamHyper::default(),
+            8,
+            100,
+            OneSidedRefresh::ExactSvd,
+        )
+        .with_core_fmt(ElemFmt::Bf16);
+        let mut ledger = CommLedger::new();
+        let topo = Topology::single_node(2);
+        let mut rng = Xoshiro256::new(3);
+        for t in 0..3u64 {
+            let planned = opt.sync_plan(t).total_bytes();
+            let mut grads: Vec<Vec<Matrix>> = (0..2)
+                .map(|_| vec![Matrix::gaussian(64, 96, 1.0, &mut rng)])
+                .collect();
+            opt.step(&mut StepCtx {
+                params: &mut params,
+                grads: &mut grads,
+                ledger: &mut ledger,
+                topo: &topo,
+                lr_mult: 1.0,
+                exec: &crate::exec::ExecBackend::Sequential,
+            });
+            ledger.end_step();
+            assert_eq!(ledger.step(t as usize).total, planned, "plan vs meter");
+        }
+        // step 0: dense f32 refresh (mn·4) + bf16 projected (rn·2).
+        assert_eq!(ledger.step(0).total, 64 * 96 * 4 + 8 * 96 * 2);
+        // steps 1–2: the bf16 projected object only — exactly half f32.
+        assert_eq!(ledger.step(1).total, 8 * 96 * 2);
+        assert_eq!(ledger.step(2).total, 8 * 96 * 2);
+        // EF residuals join the state accounting: 2 workers × r×n.
+        assert_eq!(
+            opt.state_elements(),
+            64 * 8 + 2 * 96 * 8 + 2 * 8 * 96,
+            "EF buffers counted"
+        );
     }
 
     #[test]

@@ -156,6 +156,7 @@ impl DistOptimizer for PowerSgd {
                     block: b,
                     class: self.classes[b],
                     bytes: elems * crate::comm::BYTES_F32,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 }
             })

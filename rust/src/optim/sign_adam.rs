@@ -190,6 +190,7 @@ impl DistOptimizer for SignAdam {
                     block: b,
                     class: self.classes[b],
                     bytes: st.m.numel() * crate::comm::BYTES_F32,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 },
                 BlockState::Sign(blk) => {
@@ -204,6 +205,7 @@ impl DistOptimizer for SignAdam {
                         block: b,
                         class: self.classes[b],
                         bytes: sign_payload_bytes(numel) + dense,
+                        fmt: crate::comm::ElemFmt::F32,
                         refresh,
                     }
                 }

@@ -160,6 +160,7 @@ impl DistOptimizer for TopKAdam {
                     block: b,
                     class: self.classes[b],
                     bytes,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 }
             })

@@ -200,6 +200,7 @@ impl DistOptimizer for TsrSgd {
                     block: b,
                     class: self.classes[b],
                     bytes: m.numel() * crate::comm::BYTES_F32,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 },
                 BlockState::LowRank(blk) => {
@@ -210,6 +211,7 @@ impl DistOptimizer for TsrSgd {
                         block: b,
                         class: self.classes[b],
                         bytes: (blk.rank * blk.rank + extra) * crate::comm::BYTES_F32,
+                        fmt: crate::comm::ElemFmt::F32,
                         refresh,
                     }
                 }

@@ -88,6 +88,7 @@ mod tests {
                     block: b,
                     class: LayerClass::Linear,
                     bytes: n,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 })
                 .collect(),

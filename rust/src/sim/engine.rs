@@ -334,6 +334,7 @@ mod tests {
                     block: b,
                     class: s.class,
                     bytes: s.numel() * 4,
+                    fmt: crate::comm::ElemFmt::F32,
                     refresh: false,
                 })
                 .collect(),

@@ -152,6 +152,25 @@ impl ClassifyTask {
         (loss, probs, h, a)
     }
 
+    /// Fine-tune initialization (DESIGN.md §6): bit-copy a pretrained
+    /// token-embedding table into the `embed` block and start the task
+    /// head (w1, w2) fresh from `seed` — the transfer step of the
+    /// pretrain → finetune pipeline (`tsr finetune --from <ckpt>`).
+    pub fn init_params_pretrained(&self, seed: u64, embedding: &Matrix) -> Vec<Matrix> {
+        assert_eq!(
+            (embedding.rows, embedding.cols),
+            (self.vocab, self.dim),
+            "pretrained embedding is {}x{}, task expects {}x{}",
+            embedding.rows,
+            embedding.cols,
+            self.vocab,
+            self.dim
+        );
+        let mut params = self.init_params(seed);
+        params[0] = embedding.clone();
+        params
+    }
+
     /// Held-out accuracy with current params.
     pub fn accuracy(&self, params: &[Matrix]) -> f32 {
         let mut correct = 0usize;
@@ -255,6 +274,24 @@ impl GradSource for ClassifyTask {
             })
             .collect()
     }
+
+    /// The only mutable state is the sampling RNG: the signal-token map
+    /// and eval set are pure functions of the constructor arguments (the
+    /// eval draws replay from the same seed), so a resumed task only
+    /// needs the RNG position to reproduce every remaining batch
+    /// bit-for-bit (DESIGN.md §9).
+    fn save_state(&self) -> crate::util::json::Json {
+        use crate::checkpoint::codec;
+        let (s, spare) = self.rng.snapshot();
+        codec::rng_to_json(&s, spare)
+    }
+
+    fn load_state(&mut self, state: &crate::util::json::Json) -> Result<(), String> {
+        use crate::checkpoint::codec;
+        let (s, spare) = codec::rng_from_json(state, "classify-task")?;
+        self.rng = Xoshiro256::from_snapshot(s, spare);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -313,6 +350,53 @@ mod tests {
             (fd - an).abs() < 0.05 * (an.abs().max(fd.abs()).max(0.05)),
             "fd {fd} vs analytic {an}"
         );
+    }
+
+    #[test]
+    fn rng_state_resumes_the_sample_stream_exactly() {
+        use crate::util::json::Json;
+        let mk = || ClassifyTask::new(64, 8, 8, 2, 6, 2, 4, 9);
+        let mut task = mk();
+        let blocks = task.blocks().to_vec();
+        let params = task.init_params(1);
+        let mut grads = crate::optim::alloc_worker_grads(&blocks, 2);
+        task.compute(&params, 0, &mut grads);
+        // Round-trip through text, exactly as a checkpoint manifest does.
+        let state = Json::parse(&task.save_state().to_string_pretty()).unwrap();
+        let expect = task.compute(&params, 1, &mut grads);
+
+        let mut resumed = mk();
+        resumed.load_state(&state).unwrap();
+        let mut grads2 = crate::optim::alloc_worker_grads(&blocks, 2);
+        let got = resumed.compute(&params, 1, &mut grads2);
+        assert_eq!(expect.to_bits(), got.to_bits());
+        for w in 0..2 {
+            for (a, b) in grads[w].iter().zip(&grads2[w]) {
+                assert_eq!(a.data, b.data);
+            }
+        }
+    }
+
+    #[test]
+    fn pretrained_embedding_transfers_bitwise_and_head_starts_fresh() {
+        let task = ClassifyTask::new(32, 6, 8, 2, 5, 1, 4, 3);
+        let mut rng = Xoshiro256::new(77);
+        let emb = Matrix::gaussian(32, 6, 1.0, &mut rng);
+        let p = task.init_params_pretrained(7, &emb);
+        let fresh = task.init_params(7);
+        assert_eq!(p[0].data, emb.data, "embedding must be a bit-copy");
+        assert_ne!(p[0].data, fresh[0].data);
+        assert_eq!(p[1].data, fresh[1].data, "head init must match fresh seed");
+        assert_eq!(p[2].data, fresh[2].data);
+    }
+
+    #[test]
+    #[should_panic(expected = "pretrained embedding")]
+    fn pretrained_embedding_shape_mismatch_panics() {
+        let task = ClassifyTask::new(32, 6, 8, 2, 5, 1, 4, 3);
+        let mut rng = Xoshiro256::new(1);
+        let wrong = Matrix::gaussian(32, 7, 1.0, &mut rng);
+        task.init_params_pretrained(7, &wrong);
     }
 
     #[test]

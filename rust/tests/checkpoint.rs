@@ -618,3 +618,76 @@ fn load_state_rejects_structural_mismatch() {
     .build(&blocks, AdamHyper::default(), WORKERS);
     assert!(other_rank.load_state(&tsr_state, WORKERS).is_err());
 }
+
+/// Tentpole pipeline leg (DESIGN.md §6, §9, §14): a bf16-core TSR
+/// fine-tune from a *pretrained* embedding, killed mid-refresh-period
+/// (cut 7, k 5 — live error-feedback residuals in the manifest) and
+/// resumed through a full JSON text round trip, is byte-identical to
+/// the uninterrupted fine-tune: same deterministic metrics JSON, same
+/// final-weight fingerprint, same ledger columns.
+#[test]
+fn bf16_finetune_kill_resume_is_byte_identical() {
+    use tsr::exp::finetune::{finetune_tsr_cfg, pretrain_embedding};
+    use tsr::train::finetune::ClassifyTask;
+
+    let spec = ModelSpec::proxy(64, 32, 64, 2, 2);
+    let emb = pretrain_embedding(&spec, 5, WORKERS, 21);
+    let m = MethodCfg::Tsr(finetune_tsr_cfg(4, 5, tsr::comm::ElemFmt::Bf16));
+    let (cut, steps) = (7, 12);
+    let mk = || ClassifyTask::new(64, 32, 16, 3, 8, WORKERS, 4, 9);
+
+    let full = {
+        let mut task = mk();
+        let blocks = task.blocks().to_vec();
+        let mut opt = m.build(&blocks, AdamHyper::default(), WORKERS);
+        let mut params = task.init_params_pretrained(1, &emb);
+        let (metrics, ledger) = trainer(steps).run(&mut task, opt.as_mut(), &mut params, steps);
+        metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+    };
+
+    let resumed = {
+        let mut task = mk();
+        let blocks = task.blocks().to_vec();
+        let mut opt = m.build(&blocks, AdamHyper::default(), WORKERS);
+        let mut params = task.init_params_pretrained(1, &emb);
+        let (metrics, ledger) = trainer(steps).run(&mut task, opt.as_mut(), &mut params, cut);
+        let ck = Checkpoint::capture(
+            cut as u64,
+            WORKERS,
+            &params,
+            opt.as_ref(),
+            &task,
+            &metrics,
+            &ledger,
+            Json::Null,
+        );
+        let text = ck.to_json().to_string_pretty();
+        // Vacuity guard: the manifest must carry quantization residuals —
+        // a cut that lands with empty EF would not test the bf16 path.
+        assert!(text.contains("\"ef\""), "no error-feedback state at cut {cut}");
+        drop((task, opt, params, metrics, ledger));
+
+        let ck = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let mut task = mk();
+        let blocks = task.blocks().to_vec();
+        let mut opt = m.build(&blocks, AdamHyper::default(), WORKERS);
+        assert_eq!(opt.name(), ck.method);
+        opt.load_state(&ck.opt_state, WORKERS).unwrap();
+        task.load_state(&ck.source_state).unwrap();
+        let mut params = ck.params.clone();
+        let metrics = RunMetrics::state_from_json(&ck.metrics).unwrap();
+        let ledger = CommLedger::from_json(&ck.ledger).unwrap();
+        let (metrics, ledger) = trainer(steps).run_from(
+            &mut task,
+            opt.as_mut(),
+            &mut params,
+            cut,
+            steps,
+            metrics,
+            ledger,
+        );
+        metrics.to_json_deterministic(&ledger, &params).to_string_pretty()
+    };
+
+    assert_eq!(full, resumed, "bf16 finetune kill+resume diverged");
+}

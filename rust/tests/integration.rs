@@ -6,10 +6,11 @@
 //! `make artifacts` hasn't run); methods must preserve the paper's
 //! qualitative orderings end to end.
 
-use tsr::comm::{CommLedger, LayerClass, Topology};
+use tsr::comm::{CommLedger, ElemFmt, LayerClass, Topology};
 use tsr::exp::{
-    adamw_profile, desloc_profile, lordo_profile, onesided_profile, sign_profile, topk_profile,
-    tsr_profile, MethodCfg, TsrParams,
+    adamw_profile, desloc_profile, lordo_profile, lordo_profile_fmt, onesided_profile,
+    onesided_profile_fmt, sign_profile, topk_profile, tsr_profile, tsr_profile_fmt, MethodCfg,
+    TsrParams,
 };
 use tsr::linalg::Matrix;
 use tsr::model::ModelSpec;
@@ -103,6 +104,103 @@ fn simulated_bytes_match_analytic_profiles() {
     let expect = topk_profile(&spec, frac);
     assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
     assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+}
+
+fn run_ledger_fmt(
+    spec: &ModelSpec,
+    method: &MethodCfg,
+    steps: usize,
+    workers: usize,
+    fmt: ElemFmt,
+) -> CommLedger {
+    let mut sim = QuadraticSim::new(spec, workers, 6, 0.01, 11);
+    let blocks = sim.blocks().to_vec();
+    let mut opt = method.build_with_fmt(&blocks, AdamHyper::default(), workers, fmt);
+    let mut params = sim.init_params(1);
+    let mut grads = tsr::optim::alloc_worker_grads(&blocks, workers);
+    let topo = Topology::multi_node(2, workers.div_ceil(2));
+    let mut ledger = CommLedger::new();
+    for t in 0..steps {
+        sim.compute(&params, t, &mut grads);
+        opt.step(&mut StepCtx {
+            params: &mut params,
+            grads: &mut grads,
+            ledger: &mut ledger,
+            topo: &topo,
+            lr_mult: 1.0,
+            exec: &tsr::exec::ExecBackend::Sequential,
+        });
+        ledger.end_step();
+    }
+    ledger
+}
+
+/// Tentpole acceptance (DESIGN.md §14): with narrow core formats the
+/// metered ledger still equals the format-aware analytic profile with
+/// exact f64 equality, for all three fmt-capable methods — and the TSR
+/// steady-state core payload is *exactly* half the f32 run's at bf16.
+#[test]
+fn narrow_format_bytes_match_analytic_profiles() {
+    let spec = ModelSpec::proxy(300, 24, 48, 2, 2);
+    let k = 5usize;
+
+    let cfg = TsrConfig {
+        rank: 8,
+        rank_emb: 6,
+        refresh_every: k,
+        refresh_emb: k,
+        oversample: 4,
+        core_fmt: ElemFmt::Bf16,
+        ..Default::default()
+    };
+    let ledger = run_ledger(&spec, &MethodCfg::Tsr(cfg.clone()), k, 2);
+    let p = TsrParams {
+        rank: 8,
+        k_refresh: k,
+        rank_emb: 6,
+        k_refresh_emb: k,
+        oversample: 4,
+    };
+    let expect = tsr_profile_fmt(&spec, p, ElemFmt::Bf16);
+    assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
+    assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+    // Steady-state core payload (embedding + linear columns on a
+    // non-refresh step) is exactly half the f32 run's; the always-f32
+    // vector column is untouched.
+    let f32_ledger = run_ledger(
+        &spec,
+        &MethodCfg::Tsr(TsrConfig {
+            core_fmt: ElemFmt::F32,
+            ..cfg
+        }),
+        k,
+        2,
+    );
+    let (s16, s32) = (ledger.step(1), f32_ledger.step(1));
+    assert_eq!(2 * (s16.embedding + s16.linear), s32.embedding + s32.linear);
+    assert_eq!(s16.vector, s32.vector);
+
+    // One-sided, bf16 steady factor: exact over one refresh period.
+    let m = MethodCfg::OneSided {
+        rank: 8,
+        k,
+        refresh: OneSidedRefresh::ExactSvd,
+    };
+    let ledger = run_ledger_fmt(&spec, &m, k, 2, ElemFmt::Bf16);
+    let expect = onesided_profile_fmt(&spec, 8, k, ElemFmt::Bf16);
+    assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
+    assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+
+    // LoRDO, int8 delta factors: exact over one h-round, local steps
+    // still metering exactly zero.
+    let (rank, h) = (6usize, 4u64);
+    let ledger = run_ledger_fmt(&spec, &MethodCfg::Lordo { rank, h }, h as usize, 2, ElemFmt::I8);
+    let expect = lordo_profile_fmt(&spec, rank, h, ElemFmt::I8);
+    assert_eq!(ledger.bytes_per_step(), expect.bytes_per_step);
+    assert_eq!(ledger.peak_bytes() as f64, expect.peak_bytes);
+    for t in 1..h as usize {
+        assert_eq!(ledger.step(t).total, 0, "lordo local step {t} must meter zero");
+    }
 }
 
 /// The TSR embedding-specific rank path (§3.6): with rank_emb ≠ rank and

@@ -23,7 +23,8 @@ use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use tsr::comm::{
-    hier_allreduce_mean, hier_volume_bytes, sync_mean, CommLedger, LayerClass, Topology,
+    hier_allreduce_mean, hier_allreduce_mean_fmt, hier_volume_bytes, sync_mean, CommLedger,
+    ElemFmt, LayerClass, Topology,
 };
 use tsr::exec::{process, ExecBackend};
 use tsr::linalg::Matrix;
@@ -106,6 +107,45 @@ fn ledger_wire_columns_equal_socket_frame_payloads() {
         let rec = ledger.step(0);
         assert_eq!(rec.intra, wire.intra_bytes, "{label}: intra column");
         assert_eq!(rec.inter, wire.inter_bytes, "{label}: inter column");
+    }
+}
+
+/// Tentpole contracts for narrow formats (DESIGN.md §14): the ring
+/// `Data` frames carry the bf16/int8 encoding on the wire, the measured
+/// socket volume shrinks by exactly the width ratio, and the reduced
+/// result still bit-matches the sequential fmt schedule. Inputs are
+/// pre-rounded, as `sync_mean_fmt` guarantees on entry — that is what
+/// makes every chunk a hop ships fmt-representable, hence lossless.
+#[test]
+fn narrow_formats_cross_sockets_losslessly_and_meter_width_true() {
+    setup();
+    for fmt in [ElemFmt::Bf16, ElemFmt::I8] {
+        for (nodes, g, rows, cols) in [(1usize, 4usize, 7usize, 11usize), (2, 2, 6, 8)] {
+            let n = nodes * g;
+            let label = format!("{} {nodes}x{g}", fmt.name());
+            let mut ws = gaussian_workers(n, rows, cols, 23);
+            for w in ws.iter_mut() {
+                fmt.round_slice(&mut w.data);
+            }
+            let mut reference = ws.clone();
+            let measured = process::allreduce_mean_fmt(&mut ws, nodes, g, fmt);
+            let expected = hier_allreduce_mean_fmt(&mut reference, nodes, g, fmt);
+            assert_eq!(bits(&ws), bits(&reference), "{label}: bits");
+            assert_eq!(measured, expected, "{label}: volume vs sequential metering");
+            // Same element schedule as f32, narrower elements: the
+            // measured frame payloads scale by width/4 per link class.
+            let f32_vol = hier_volume_bytes(rows * cols, nodes, g);
+            assert_eq!(
+                measured.intra_bytes * 4,
+                f32_vol.intra_bytes * fmt.width(),
+                "{label}: intra width ratio"
+            );
+            assert_eq!(
+                measured.inter_bytes * 4,
+                f32_vol.inter_bytes * fmt.width(),
+                "{label}: inter width ratio"
+            );
+        }
     }
 }
 
