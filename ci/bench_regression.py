@@ -5,7 +5,9 @@ The bench harness (rust/src/util/bench.rs) reports the *median* (p50)
 seconds-per-op for each benchmark when BENCH_JSON_DIR is set:
 
     { "bench": "optimizer_step", "stat": "p50",
-      "results": [ {"name": "60m adamw steady step (2w)", "value": 0.0123}, ... ] }
+      "labels": {"backend": "sequential"},
+      "results": [ {"name": "60m adamw steady step (2w)", "value": 0.0123,
+                    "labels": {"method": "adamw", "fmt": "f32", "scale": "60m"}}, ... ] }
 
 Usage:
     ci/bench_regression.py --current BENCH_x.json [--baseline old.json]
@@ -14,6 +16,14 @@ Usage:
 * With a baseline: fail (exit 1) if any benchmark's current p50 exceeds
   baseline * (1 + threshold). Benchmarks present on only one side are
   reported but never fail the check (benches come and go).
+* Comparisons are label-aware (like-for-like only):
+  - artifact-level `labels` (the execution backend) must match between
+    baseline and current — diffing a threaded artifact against a
+    sequential baseline is an error, not a regression;
+  - an entry only compares against a baseline entry with the identical
+    per-entry label set (method/fmt/scale cell coordinates). A name
+    collision with different labels is reported as RELABELED and
+    treated as added+removed, never as a regression.
 * `--baseline` may name a file that does not exist yet (the promoted
   in-repo baseline slot, ci/baselines/). When it is missing and
   `--fallback-baseline` is given, that file is used instead — CI runs
@@ -44,8 +54,18 @@ def load(path):
     for entry in doc["results"]:
         if "name" not in entry or "value" not in entry:
             sys.exit(f"{path}: malformed entry {entry!r}")
-        out[entry["name"]] = float(entry["value"])
-    return doc.get("bench", "?"), out
+        labels = entry.get("labels", {})
+        if not isinstance(labels, dict):
+            sys.exit(f"{path}: entry labels must be an object: {entry!r}")
+        out[entry["name"]] = (float(entry["value"]), labels)
+    artifact_labels = doc.get("labels", {})
+    if not isinstance(artifact_labels, dict):
+        sys.exit(f"{path}: artifact labels must be an object")
+    return doc.get("bench", "?"), artifact_labels, out
+
+
+def fmt_labels(labels):
+    return "{" + ",".join(f"{k}={v}" for k, v in sorted(labels.items())) + "}"
 
 
 def main():
@@ -65,7 +85,7 @@ def main():
     )
     args = ap.parse_args()
 
-    bench, cur = load(args.current)
+    bench, cur_artifact_labels, cur = load(args.current)
     if not cur:
         sys.exit(f"{args.current}: empty results")
     baseline = args.baseline
@@ -78,17 +98,32 @@ def main():
             sys.exit(f"{baseline}: baseline not found and no --fallback-baseline given")
     if not baseline:
         print(f"[{bench}] no baseline — artifact validated, {len(cur)} entries:")
-        for name, v in cur.items():
-            print(f"  {name:<50} {v:.6g}")
+        for name, (v, labels) in cur.items():
+            suffix = f"  {fmt_labels(labels)}" if labels else ""
+            print(f"  {name:<50} {v:.6g}{suffix}")
         return
 
-    _, base = load(baseline)
+    _, base_artifact_labels, base = load(baseline)
+    # Artifact-level like-for-like gate: refuse to diff artifacts from
+    # different backends (or any future artifact-level coordinate).
+    if base_artifact_labels != cur_artifact_labels:
+        sys.exit(
+            f"[{bench}] artifacts are not comparable: baseline labels "
+            f"{fmt_labels(base_artifact_labels)} != current "
+            f"{fmt_labels(cur_artifact_labels)}"
+        )
+
     failures = []
-    for name, v in sorted(cur.items()):
+    for name, (v, labels) in sorted(cur.items()):
         if name not in base:
-            print(f"  NEW   {name:<50} {v:.6g}")
+            print(f"  NEW       {name:<50} {v:.6g}")
             continue
-        b = base[name]
+        b, base_labels = base[name]
+        if labels != base_labels:
+            # Same name, different cell coordinates: not the same
+            # measurement — report, never gate.
+            print(f"  RELABELED {name:<50} {fmt_labels(base_labels)} -> {fmt_labels(labels)}")
+            continue
         ratio = v / b if b > 0 else float("inf")
         status = "OK"
         if ratio > 1.0 + args.threshold:
@@ -96,7 +131,7 @@ def main():
             failures.append((name, b, v, ratio))
         print(f"  {status:<9} {name:<50} {b:.6g} -> {v:.6g}  ({ratio - 1.0:+.1%})")
     for name in sorted(set(base) - set(cur)):
-        print(f"  GONE  {name}")
+        print(f"  GONE      {name}")
 
     if failures:
         print(f"\n[{bench}] {len(failures)} benchmark(s) regressed beyond "

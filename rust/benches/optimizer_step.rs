@@ -54,6 +54,11 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
         ("signadam", MethodCfg::Sign { k_var: 1000 }),
         ("topk", MethodCfg::TopK { keep_frac: 0.005 }),
     ] {
+        // Cell coordinates for ci/bench_regression.py: a baseline entry
+        // only compares against a candidate with the identical label
+        // set, so renamed/moved cells read as added+removed, never as a
+        // bogus regression.
+        b.set_labels(&[("method", label), ("fmt", "f32"), ("scale", scale)]);
         let mut opt = cfg.build(&blocks, AdamHyper::default(), workers);
         let mut ledger = CommLedger::new();
         // First step performs the (init) refresh — time it separately:
@@ -101,6 +106,7 @@ fn bench_scale(b: &mut Bencher, scale: &str, galore_rank: usize, tsr_rank: usize
             );
         }
     }
+    b.set_labels(&[]);
 }
 
 fn main() {

@@ -18,6 +18,17 @@ pub enum LayerClass {
     Vector,
 }
 
+impl LayerClass {
+    /// Stable lowercase name used by trace records and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerClass::Embedding => "embedding",
+            LayerClass::Linear => "linear",
+            LayerClass::Vector => "vector",
+        }
+    }
+}
+
 /// Bytes per element of the communicated dtype (paper uses bf16 ⇒ 2,
 /// fp32 ⇒ 4; we default to 4 matching our f32 simulation and report
 /// ratios, which are dtype-invariant).
@@ -46,11 +57,28 @@ pub struct CommLedger {
     current: StepRecord,
     /// Simulated wall-clock communication time (α–β model), seconds.
     pub sim_time: f64,
+    /// Attached tracer (disabled by default — [`crate::obs::Tracer`] is
+    /// a no-op handle until `set_tracer` installs an enabled one). Rides
+    /// on the ledger because the ledger already reaches every metering
+    /// point via `StepCtx`; excluded from `to_json`/`from_json`, so a
+    /// resumed run re-attaches explicitly.
+    tracer: crate::obs::Tracer,
 }
 
 impl CommLedger {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Attach a tracer; every subsequent metering call also emits trace
+    /// records through it.
+    pub fn set_tracer(&mut self, tracer: crate::obs::Tracer) {
+        self.tracer = tracer;
+    }
+
+    /// The attached tracer (disabled unless `set_tracer` installed one).
+    pub fn tracer(&self) -> &crate::obs::Tracer {
+        &self.tracer
     }
 
     /// Record `elements` f32 scalars synchronized for a layer of `class`.
@@ -86,9 +114,14 @@ impl CommLedger {
         self.sim_time += secs;
     }
 
-    /// Close the current step; begins accumulating the next one.
+    /// Close the current step; begins accumulating the next one. With a
+    /// tracer attached, emits one `step_bytes` record carrying the exact
+    /// columns being closed — which is why the trace's per-step byte
+    /// timeline equals the ledger f64-exactly by construction.
     pub fn end_step(&mut self) {
-        self.steps.push(std::mem::take(&mut self.current));
+        let rec = std::mem::take(&mut self.current);
+        self.tracer.step_bytes(self.steps.len() as u64, &rec, self.sim_time);
+        self.steps.push(rec);
     }
 
     pub fn num_steps(&self) -> usize {

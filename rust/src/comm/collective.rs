@@ -275,9 +275,10 @@ pub fn sync_mean_fmt(
     for w in workers.iter_mut() {
         fmt.round_slice(&mut w.data);
     }
+    let mut vol = HierVolume::default();
     if n > 1 {
         if n == topo.workers() {
-            let vol = match exec {
+            vol = match exec {
                 ExecBackend::Threaded { .. } => crate::exec::threaded::allreduce_mean_fmt(
                     workers,
                     topo.nodes,
@@ -294,7 +295,6 @@ pub fn sync_mean_fmt(
                     hier_allreduce_mean_fmt(workers, topo.nodes, topo.gpus_per_node, fmt)
                 }
             };
-            ledger.record_link(vol.intra_bytes, vol.inter_bytes);
         } else {
             // Worker count does not tile the topology: fall back to a
             // flat ring, attributed to the slowest link class it crosses.
@@ -317,21 +317,36 @@ pub fn sync_mean_fmt(
                     ring_allreduce_mean_fmt(workers, fmt);
                 }
             }
-            let vol = if topo.nodes > 1 {
+            vol = if topo.nodes > 1 {
                 hier_wire_split(payload, n, 1)
             } else {
                 hier_wire_split(payload, 1, n)
             };
-            ledger.record_link(vol.intra_bytes, vol.inter_bytes);
         }
+        ledger.record_link(vol.intra_bytes, vol.inter_bytes);
     }
     ledger.record_bytes(class, payload);
-    ledger.add_sim_time(topo.allreduce_time(payload));
+    let sim_dt = topo.allreduce_time(payload);
+    ledger.add_sim_time(sim_dt);
+    // Trace the leg AFTER all three meterings so the record carries the
+    // cumulative sim_t including this leg. Emitted here — the one point
+    // every backend's collective funnels through — so a deterministic
+    // trace cannot differ across backends.
+    ledger.tracer().collective(
+        class,
+        payload,
+        fmt.name(),
+        vol.intra_bytes,
+        vol.inter_bytes,
+        sim_dt,
+        ledger.sim_time,
+    );
     payload
 }
 
-/// Meter the wire volume of a *virtual* collective moving `bytes` of an
-/// already-aggregated payload.
+/// Meter a *virtual* collective moving `bytes` of a bit-packed payload
+/// under `class` — payload column, wire split, serial time oracle, and
+/// the trace record, all in one place.
 ///
 /// SignAdam and TopKAdam compress, exchange, and decompress in-process
 /// (no `Matrix` collective runs for the compressed object), but the
@@ -339,23 +354,38 @@ pub fn sync_mean_fmt(
 /// for it — so the intra/inter wire columns must charge the matching
 /// two-level volume, or the three accountings drift apart. Same
 /// conservation as the real schedule: intra + inter = 2(N−1)·bytes.
+/// The trace record labels its format `"packed"` (the payload is a
+/// sign/top-k bitstream, not an [`ElemFmt`] grid).
 pub fn record_virtual_sync(
     workers: usize,
+    class: LayerClass,
     bytes: usize,
     ledger: &mut CommLedger,
     topo: &Topology,
 ) {
-    if workers <= 1 {
-        return;
+    let mut vol = HierVolume::default();
+    if workers > 1 {
+        vol = if workers == topo.workers() {
+            hier_wire_split(bytes, topo.nodes, topo.gpus_per_node)
+        } else if topo.nodes > 1 {
+            hier_wire_split(bytes, workers, 1)
+        } else {
+            hier_wire_split(bytes, 1, workers)
+        };
+        ledger.record_link(vol.intra_bytes, vol.inter_bytes);
     }
-    let vol = if workers == topo.workers() {
-        hier_wire_split(bytes, topo.nodes, topo.gpus_per_node)
-    } else if topo.nodes > 1 {
-        hier_wire_split(bytes, workers, 1)
-    } else {
-        hier_wire_split(bytes, 1, workers)
-    };
-    ledger.record_link(vol.intra_bytes, vol.inter_bytes);
+    ledger.record_bytes(class, bytes);
+    let sim_dt = topo.allreduce_time(bytes);
+    ledger.add_sim_time(sim_dt);
+    ledger.tracer().collective(
+        class,
+        bytes,
+        "packed",
+        vol.intra_bytes,
+        vol.inter_bytes,
+        sim_dt,
+        ledger.sim_time,
+    );
 }
 
 /// Oracle: direct mean, broadcast to all workers. Same result as the

@@ -237,6 +237,12 @@ fn destroy(g: &mut ProcessGroup) {
         let _ = ch.wait(); // reap — no zombie children survive a failure
     }
     g.ctrl.clear();
+    // Wall tier only: the next collective at this world size respawns,
+    // which shows up as a fresh `proc_spawn`.
+    crate::obs::global().wall_event(
+        "proc_destroy",
+        vec![("world", crate::util::json::Json::num(g.world as f64))],
+    );
 }
 
 /// Run one collective on a live group: scatter, let the rings run,
@@ -251,6 +257,11 @@ fn collective(
     g.seq += 1;
     let seq = g.seq;
     let numel = workers[0].numel();
+    // Wall-tier per-worker wire counters are requested only when the
+    // global tracer is in wall mode — deterministic traces never touch
+    // this path (DESIGN.md §16).
+    let tracer = crate::obs::global();
+    let want_trace = tracer.wall();
     let chaos = {
         let mut slot = lock(&CHAOS_KILL);
         match *slot {
@@ -271,6 +282,7 @@ fn collective(
             .u64(numel as u64)
             .u8(inject)
             .u8(fmt.wire_tag())
+            .u8(u8::from(want_trace))
             .f32s(&workers[rank].data)
             .build();
         let what = format!("coordinator -> worker {rank}");
@@ -303,6 +315,45 @@ fn collective(
         rest.f32s_into(&mut workers[rank].data, "payload")
             .and_then(|()| rest.finish())
             .map_err(|e| classify(&mut g.children, rank, e))?;
+    }
+
+    if want_trace {
+        // Gather each worker's Trace frame in rank order so the merged
+        // wall records are rank-ordered too.
+        for rank in 0..g.world {
+            let what = format!("coordinator trace <- worker {rank}");
+            let payload = read_frame_expect(&mut g.ctrl[rank], FrameKind::Trace, &what)
+                .map_err(|e| classify(&mut g.children, rank, e))?;
+            let mut r = Reader::new(&payload, &what);
+            let decode = (|| -> Result<(u64, u64, u64, u64), NetError> {
+                let got_seq = r.u64("seq")?;
+                if got_seq != seq {
+                    return Err(NetError::Malformed {
+                        what: what.clone(),
+                        detail: format!("trace for collective {got_seq}, expected {seq}"),
+                    });
+                }
+                let fs = r.u64("frames_sent")?;
+                let bs = r.u64("bytes_sent")?;
+                let fr = r.u64("frames_recv")?;
+                let br = r.u64("bytes_recv")?;
+                r.finish()?;
+                Ok((fs, bs, fr, br))
+            })();
+            let (fs, bs, fr, br) = decode.map_err(|e| classify(&mut g.children, rank, e))?;
+            use crate::util::json::Json;
+            tracer.wall_event(
+                "worker_frames",
+                vec![
+                    ("rank", Json::num(rank as f64)),
+                    ("seq", Json::num(seq as f64)),
+                    ("frames_sent", Json::num(fs as f64)),
+                    ("bytes_sent", Json::num(bs as f64)),
+                    ("frames_recv", Json::num(fr as f64)),
+                    ("bytes_recv", Json::num(br as f64)),
+                ],
+            );
+        }
     }
 
     // The wire accounting closes: every payload byte the ledger will
@@ -403,12 +454,18 @@ fn spawn_group(world: usize) -> Result<ProcessGroup, String> {
     }
 
     match rendezvous(&listener, world, token) {
-        Ok(ctrl) => Ok(ProcessGroup {
-            world,
-            children,
-            ctrl,
-            seq: 0,
-        }),
+        Ok(ctrl) => {
+            crate::obs::global().wall_event(
+                "proc_spawn",
+                vec![("world", crate::util::json::Json::num(world as f64))],
+            );
+            Ok(ProcessGroup {
+                world,
+                children,
+                ctrl,
+                seq: 0,
+            })
+        }
         Err(e) => {
             kill_all(&mut children);
             Err(format!("rendezvous failed: {e}"))

@@ -46,6 +46,20 @@ pub const FAULT_EXIT_CODE: i32 = 113;
 struct Link {
     rx: TcpStream,
     tx: mpsc::Sender<Vec<u8>>,
+    /// Cumulative wire totals (frames and encoded bytes, headers
+    /// included) for the observability wall tier — shipped back in a
+    /// `Trace` frame only when the coordinator asks (DESIGN.md §16).
+    stats: std::cell::Cell<LinkStats>,
+}
+
+/// Per-link wire totals; `Cell`-wrapped because sends/receives happen on
+/// the single main thread.
+#[derive(Clone, Copy, Default)]
+struct LinkStats {
+    frames_sent: u64,
+    bytes_sent: u64,
+    frames_recv: u64,
+    bytes_recv: u64,
 }
 
 impl Link {
@@ -65,7 +79,11 @@ impl Link {
                 }
             }
         });
-        Ok(Self { rx: stream, tx })
+        Ok(Self {
+            rx: stream,
+            tx,
+            stats: std::cell::Cell::new(LinkStats::default()),
+        })
     }
 
     /// Ship one ring chunk at the element format's wire width: every
@@ -74,8 +92,13 @@ impl Link {
     fn send_chunk(&self, chunk: &[f32], fmt: ElemFmt, what: &str) -> Result<(), NetError> {
         let mut payload = Vec::with_capacity(chunk.len() * fmt.width());
         fmt.write_elems(&mut payload, chunk);
+        let frame = crate::net::encode_frame(FrameKind::Data, &payload);
+        let mut st = self.stats.get();
+        st.frames_sent += 1;
+        st.bytes_sent += frame.len() as u64;
+        self.stats.set(st);
         self.tx
-            .send(crate::net::encode_frame(FrameKind::Data, &payload))
+            .send(frame)
             .map_err(|_| NetError::Disconnected {
                 what: what.to_string(),
                 detail: "peer writer thread exited".into(),
@@ -84,6 +107,10 @@ impl Link {
 
     fn recv_chunk(&mut self, out: &mut [f32], fmt: ElemFmt, what: &str) -> Result<(), NetError> {
         let payload = read_frame_expect(&mut self.rx, FrameKind::Data, what)?;
+        let mut st = self.stats.get();
+        st.frames_recv += 1;
+        st.bytes_recv += (payload.len() + crate::net::HEADER_BYTES) as u64;
+        self.stats.set(st);
         if payload.len() != out.len() * fmt.width() {
             return Err(NetError::Malformed {
                 what: what.to_string(),
@@ -116,30 +143,30 @@ struct Counters {
 pub fn worker_main(args: &Args) -> ! {
     let need = |key: &str| -> String {
         args.get(key).map(str::to_string).unwrap_or_else(|| {
-            eprintln!("tsr _worker: missing required --{key} (internal subcommand)");
+            crate::tsr_error!("tsr _worker: missing required --{key} (internal subcommand)");
             std::process::exit(2);
         })
     };
     let rank: usize = need("rank").parse().unwrap_or_else(|_| {
-        eprintln!("tsr _worker: --rank must be an integer");
+        crate::tsr_error!("tsr _worker: --rank must be an integer");
         std::process::exit(2);
     });
     let world: usize = need("world").parse().unwrap_or_else(|_| {
-        eprintln!("tsr _worker: --world must be an integer");
+        crate::tsr_error!("tsr _worker: --world must be an integer");
         std::process::exit(2);
     });
     let addr: SocketAddr = need("connect").parse().unwrap_or_else(|_| {
-        eprintln!("tsr _worker: --connect must be a socket address");
+        crate::tsr_error!("tsr _worker: --connect must be a socket address");
         std::process::exit(2);
     });
     let token: u64 = need("token").parse().unwrap_or_else(|_| {
-        eprintln!("tsr _worker: --token must be an integer");
+        crate::tsr_error!("tsr _worker: --token must be an integer");
         std::process::exit(2);
     });
     match run(rank, world, addr, token) {
         Ok(()) => std::process::exit(0),
         Err(e) => {
-            eprintln!("tsr _worker rank {rank}/{world}: {e}");
+            crate::tsr_error!("tsr _worker rank {rank}/{world}: {e}");
             std::process::exit(1);
         }
     }
@@ -286,6 +313,7 @@ fn serve_collective(
         what: what.clone(),
         detail,
     })?;
+    let want_trace = r.u8("trace")? != 0;
     if nodes * g != world {
         return Err(NetError::Malformed {
             what: what.clone(),
@@ -301,10 +329,15 @@ fn serve_collective(
         // Test-only chaos: die exactly mid-collective, after accepting
         // the request — peers are now blocked on our chunks, which is
         // the failure the coordinator must detect and classify.
-        eprintln!("tsr _worker rank {rank}: fault injection — exiting mid-collective");
+        crate::tsr_error!("tsr _worker rank {rank}: fault injection — exiting mid-collective");
         std::process::exit(FAULT_EXIT_CODE);
     }
 
+    let before: LinkStats = if want_trace {
+        link_totals(links)
+    } else {
+        LinkStats::default()
+    };
     let c = allreduce(rank, nodes, g, fmt, buf, scratch, links)?;
 
     let result = Builder::new()
@@ -315,7 +348,36 @@ fn serve_collective(
         .u64(c.recv_inter)
         .f32s(buf)
         .build();
-    write_frame(ctrl, FrameKind::Result, &result, &what)
+    write_frame(ctrl, FrameKind::Result, &result, &what)?;
+
+    if want_trace {
+        // Wall-tier wire totals for this collective: Data frame counts
+        // and encoded bytes (headers included — unlike the Result
+        // counters, which meter payload only).
+        let after = link_totals(links);
+        let trace = Builder::new()
+            .u64(seq)
+            .u64(after.frames_sent - before.frames_sent)
+            .u64(after.bytes_sent - before.bytes_sent)
+            .u64(after.frames_recv - before.frames_recv)
+            .u64(after.bytes_recv - before.bytes_recv)
+            .build();
+        write_frame(ctrl, FrameKind::Trace, &trace, &what)?;
+    }
+    Ok(())
+}
+
+/// Sum the per-link wire totals across the mesh.
+fn link_totals(links: &[Option<Link>]) -> LinkStats {
+    let mut t = LinkStats::default();
+    for l in links.iter().flatten() {
+        let s = l.stats.get();
+        t.frames_sent += s.frames_sent;
+        t.bytes_sent += s.bytes_sent;
+        t.frames_recv += s.frames_recv;
+        t.bytes_recv += s.bytes_recv;
+    }
+    t
 }
 
 /// The two-level hierarchical all-reduce (average), socket-ring push

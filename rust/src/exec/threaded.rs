@@ -98,6 +98,16 @@ pub fn allreduce_mean_fmt(
     let (intra, inter) = volumes
         .iter()
         .fold((0, 0), |(a, b), (x, y)| (a + x, b + y));
+    // Wall tier only (dropped unless `--trace-wall`): per-collective
+    // thread fan-out, the threaded analogue of the process backend's
+    // `worker_frames` records.
+    crate::obs::global().wall_event(
+        "thread_collective",
+        vec![
+            ("threads", crate::util::json::Json::num(n as f64)),
+            ("numel", crate::util::json::Json::num(numel as f64)),
+        ],
+    );
     HierVolume {
         intra_bytes: intra,
         inter_bytes: inter,

@@ -33,8 +33,9 @@ fn curve_json(out: &RunOutput) -> Json {
 }
 
 fn save(name: &str, j: &Json) {
-    let p = results_path(name);
-    std::fs::write(&p, j.to_string_pretty()).expect("write results");
+    let p = results_path(name).unwrap_or_else(|e| panic!("{e}"));
+    std::fs::write(&p, j.to_string_pretty())
+        .unwrap_or_else(|e| panic!("write {}: {e}", p.display()));
     println!("  -> wrote {}", p.display());
 }
 

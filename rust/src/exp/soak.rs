@@ -12,7 +12,11 @@
 //!   run is killed at `kill_at` through the checkpoint subsystem and
 //!   resumed twice — same world size (asserted **bitwise** against the
 //!   uninterrupted run) and at [`elastic_partner`] workers (asserted
-//!   within the loss-trajectory tolerance).
+//!   within the loss-trajectory tolerance);
+//! * **trace** — one traced TSR drill cell (DESIGN.md §16): the
+//!   deterministic trace is asserted byte-identical across a repeat of
+//!   the cell, and the kill+resume run's trace tail is asserted to
+//!   splice exactly onto the uninterrupted run's.
 //!
 //! Everything is seeded; the emitted JSON is byte-identical across
 //! repeat runs and across execution backends (CI's `soak-smoke` leg
@@ -155,6 +159,61 @@ fn drill_methods(k: usize) -> Vec<MethodCfg> {
     ]
 }
 
+/// One traced drill cell (DESIGN.md §16): a tiny TSR run with a
+/// deterministic tracer attached, proven byte-identical across a repeat
+/// of the whole cell, plus a same-world kill+resume whose trace tail
+/// must splice onto the full run's. Panics on any violation; returns
+/// the deterministic trace summary for the soak JSON (diffed by CI
+/// across repeats and backends like every other soak row).
+fn trace_cell(cfg: &SoakCfg, exec: ExecBackend) -> Json {
+    let workers = 2usize;
+    let method = MethodCfg::Tsr(TsrConfig {
+        rank: 8,
+        rank_emb: 4,
+        refresh_every: 5,
+        refresh_emb: 5,
+        oversample: 3,
+        ..Default::default()
+    });
+    let make = || {
+        let mut dc = DrillCfg::quick(method.clone(), workers, cfg.steps, cfg.kill_at);
+        dc.seed = cfg.seed;
+        dc.exec = exec;
+        dc.trace = true;
+        dc
+    };
+    let drill = Drill::prepare(make());
+    let report = drill.resume(workers);
+    report.assert_contract(cfg.elastic_tol);
+    assert_eq!(
+        report.trace_tail_match,
+        Some(true),
+        "trace cell: resumed trace tail diverged from the full run's"
+    );
+
+    let jsonl = |recs: &[Json]| -> String { recs.iter().map(|r| r.to_string() + "\n").collect() };
+    let full = drill.full_trace().expect("traced drill has a trace");
+    let again = Drill::prepare(make());
+    assert_eq!(
+        jsonl(full),
+        jsonl(again.full_trace().expect("traced drill has a trace")),
+        "trace cell: repeat run's trace not byte-identical"
+    );
+    println!(
+        "  trace cell: {} records — repeat byte-identical, resume tail spliced",
+        full.len()
+    );
+
+    Json::obj(vec![
+        ("method", Json::str(method.label())),
+        ("workers", Json::num(workers as f64)),
+        ("records", Json::num(full.len() as f64)),
+        ("repeat_identical", Json::Bool(true)),
+        ("resume_tail_match", Json::Bool(true)),
+        ("summary", crate::obs::analyze::summarize(full)),
+    ])
+}
+
 fn adversity_for(scenario: &str, workers: usize, cfg: &SoakCfg) -> Adversity {
     match scenario {
         "clean" => Adversity::clean(workers),
@@ -294,6 +353,9 @@ pub fn soak(cfg: &SoakCfg, exec: ExecBackend) -> Json {
         drills.len()
     );
 
+    // ---- traced drill cell (trace determinism + resume splice) ----
+    let trace = trace_cell(cfg, exec);
+
     Json::obj(vec![
         ("scale", Json::str(cfg.scale.clone())),
         ("spec", Json::str(spec.name.clone())),
@@ -311,6 +373,7 @@ pub fn soak(cfg: &SoakCfg, exec: ExecBackend) -> Json {
         ("bucket_bytes", Json::num(cfg.sim.bucket_bytes as f64)),
         ("cells", Json::Arr(cell_rows)),
         ("drills", Json::Arr(drills)),
+        ("trace_cell", trace),
     ])
 }
 

@@ -26,6 +26,7 @@ pub mod metrics;
 pub mod model;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod resilience;
 pub mod runtime;

@@ -150,10 +150,11 @@ fn main() {
         }
         Some("train") => run_train(&args),
         Some("finetune") => run_finetune(&args),
+        Some("trace") => run_trace(&args),
         Some("info") => info(),
         other => {
             if let Some(cmd) = other {
-                eprintln!("unknown subcommand: {cmd}\n");
+                tsr::tsr_error!("unknown subcommand: {cmd}\n");
             }
             eprintln!(
                 "usage: tsr <subcommand> [--options]\n\
@@ -197,6 +198,11 @@ fn main() {
                  \n            --resume PATH     continue a checkpointed run: byte-identical \
                  to the uninterrupted run at the same world size; elastic \
                  --workers supported for quad only (DESIGN.md §9)\
+                 \n            --trace PATH      write a deterministic trace artifact \
+                 (JSONL: spans, per-link collective legs, per-step byte records; \
+                 byte-identical across repeats AND backends — DESIGN.md §16). \
+                 --trace-wall adds wall-clock + backend wall-tier records \
+                 (not byte-stable)\
                  \n  finetune: finetune --from CKPT — classification fine-tune from a \
                  `train --source lm` checkpoint: transfers the pretrained \
                  token embedding, trains the task head with the adaptation-\
@@ -205,7 +211,12 @@ fn main() {
                  [--hidden H --classes C --seq T --batch B --workers W --lr F \
                  --seed S --steps N --save-every N --save-dir D --backend B] \
                  and --resume PATH to continue a fine-tune checkpoint \
-                 byte-for-byte (DESIGN.md §6, §14)\
+                 byte-for-byte (DESIGN.md §6, §14); --trace PATH as in train\
+                 \n  trace:    trace <trace.jsonl> [more.jsonl ...] [--chrome out.json] — \
+                 analyze trace artifacts: per-phase breakdown, per-link byte \
+                 timeline with refresh spikes, peak step; extra traces get a \
+                 cross-method comparison; --chrome exports Chrome trace format \
+                 for Perfetto (DESIGN.md §16)\
                  \n  info"
             );
             std::process::exit(if other.is_some() { 2 } else { 0 });
@@ -214,9 +225,72 @@ fn main() {
 }
 
 fn write_results(name: &str, j: &tsr::util::json::Json) {
-    let p = results_path(name);
-    std::fs::write(&p, j.to_string_pretty()).expect("write results");
+    let p = results_path(name).unwrap_or_else(|e| panic!("{e}"));
+    std::fs::write(&p, j.to_string_pretty())
+        .unwrap_or_else(|e| panic!("write {}: {e}", p.display()));
     println!("\n-> wrote {}", p.display());
+}
+
+/// Resolve `--trace PATH [--trace-wall]` into a tracer handle (disabled
+/// when `--trace` is absent) plus the artifact path. An enabled tracer
+/// is also installed as the process-global slot so the execution
+/// backends can emit their wall-tier records (DESIGN.md §16).
+fn tracer_from_args(args: &Args) -> (tsr::obs::Tracer, Option<String>) {
+    match args.get("trace") {
+        None => {
+            if args.flag("trace-wall") {
+                tsr::tsr_error!("error: --trace-wall requires --trace <path>");
+                std::process::exit(2);
+            }
+            (tsr::obs::Tracer::default(), None)
+        }
+        Some(path) => {
+            let t = if args.flag("trace-wall") {
+                tsr::obs::Tracer::new_wall()
+            } else {
+                tsr::obs::Tracer::new()
+            };
+            tsr::obs::set_global(t.clone());
+            (t, Some(path.to_string()))
+        }
+    }
+}
+
+/// `tsr trace <trace.jsonl> [more.jsonl ...] [--chrome out.json]` —
+/// analyze deterministic trace artifacts: per-phase breakdown, per-link
+/// byte timeline with refresh spikes, peak step; two or more traces get
+/// a cross-method comparison table. `--chrome PATH` additionally
+/// exports the first trace in Chrome trace format (load it in Perfetto
+/// or chrome://tracing).
+fn run_trace(args: &Args) {
+    use tsr::obs::analyze;
+    if args.positional.is_empty() {
+        tsr::tsr_error!(
+            "error: tsr trace needs at least one trace artifact\n\
+             usage: tsr trace <trace.jsonl> [more.jsonl ...] [--chrome out.json]"
+        );
+        std::process::exit(2);
+    }
+    let mut traces = Vec::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read trace {path}: {e}"));
+        let records = analyze::parse_jsonl(&text).unwrap_or_else(|e| panic!("parse {path}: {e}"));
+        if traces.is_empty() {
+            print!("{}", analyze::render_report(&records));
+            if let Some(out) = args.get("chrome") {
+                let chrome = analyze::chrome_trace(&records);
+                tsr::util::json::write_text_atomic(out, &chrome.to_string())
+                    .unwrap_or_else(|e| panic!("{e}"));
+                println!("-> wrote chrome trace {out} (open in Perfetto / chrome://tracing)");
+            }
+        }
+        traces.push((path.to_string(), records));
+    }
+    for (path, records) in traces.iter().skip(1) {
+        println!("\ncompare {} vs {path}:", traces[0].0);
+        print!("{}", analyze::compare(&traces[0].1, records));
+    }
 }
 
 /// `--backend sequential|threaded|process`, falling back to
@@ -225,7 +299,7 @@ fn write_results(name: &str, j: &tsr::util::json::Json) {
 fn backend_from_args(args: &Args) -> tsr::exec::ExecBackend {
     match args.get("backend") {
         Some(name) => tsr::exec::ExecBackend::parse(name).unwrap_or_else(|e| {
-            eprintln!("error: --backend: {e}");
+            tsr::tsr_error!("error: --backend: {e}");
             std::process::exit(2);
         }),
         None => tsr::exec::ExecBackend::from_env(),
@@ -242,7 +316,7 @@ fn method_config_json(args: &Args, hidden: usize) -> tsr::util::json::Json {
     // not after the first checkpoint is written.
     let core_fmt = args.get_or("core-fmt", "f32");
     if let Err(e) = tsr::comm::ElemFmt::parse(core_fmt) {
-        eprintln!("error: --core-fmt: {e}");
+        tsr::tsr_error!("error: --core-fmt: {e}");
         std::process::exit(2);
     }
     Json::obj(vec![
@@ -287,7 +361,7 @@ fn run_train(args: &Args) {
         "quad" | "lm" => run_train_synth(args),
         "pjrt" => run_train_pjrt(args),
         other => {
-            eprintln!(
+            tsr::tsr_error!(
                 "error: unknown --source `{other}`\n\
                  valid sources: quad | lm | pjrt\n\
                  \x20 quad  synthetic low-rank quadratic objective (artifact-free, deterministic)\n\
@@ -352,7 +426,7 @@ fn synth_run_config(args: &Args) -> tsr::util::json::Json {
 /// a pre-format checkpoint — means f32, DESIGN.md §14).
 fn core_fmt_from_config(cfg: &tsr::util::json::Json) -> tsr::comm::ElemFmt {
     tsr::comm::ElemFmt::parse(cfg.get_str("core_fmt", "f32")).unwrap_or_else(|e| {
-        eprintln!("error: config core_fmt: {e}");
+        tsr::tsr_error!("error: config core_fmt: {e}");
         std::process::exit(2);
     })
 }
@@ -362,7 +436,7 @@ fn method_cfg_from_config(cfg: &tsr::util::json::Json) -> tsr::exp::MethodCfg {
 
     let name = cfg.get_str("method", "tsr");
     let mut m = MethodCfg::parse(name).unwrap_or_else(|e| {
-        eprintln!("error: --method: {e}");
+        tsr::tsr_error!("error: --method: {e}");
         std::process::exit(2);
     });
     let rank = cfg.get_usize("rank", 8);
@@ -443,7 +517,7 @@ fn run_train_synth(args: &Args) {
             ];
             for flag in CONFIG_ONLY {
                 if args.get(flag).is_some() {
-                    eprintln!(
+                    tsr::tsr_warn!(
                         "warning: --{flag} is fixed by the checkpoint's config and was ignored \
                          (--resume honors only --steps/--workers/--backend/--out/--save-*)"
                     );
@@ -519,7 +593,7 @@ fn run_train_synth(args: &Args) {
     };
     let mut opt = mcfg.build_with_fmt(&blocks, hyper, workers, core_fmt_from_config(&config));
 
-    let (mut params, metrics0, ledger0) = match &resume {
+    let (mut params, metrics0, mut ledger0) = match &resume {
         Some(ck) => {
             assert_eq!(opt.name(), ck.method, "--resume: optimizer method mismatch");
             if workers != ck.workers {
@@ -546,6 +620,14 @@ fn run_train_synth(args: &Args) {
             CommLedger::new(),
         ),
     };
+    // The ledger (fresh or checkpoint-restored) re-attaches the tracer
+    // explicitly — trace state is never serialized into manifests.
+    let (tracer, trace_out) = tracer_from_args(args);
+    tracer.meta(opt.name(), workers);
+    if start_step > 0 {
+        tracer.resume(start_step as u64, workers);
+    }
+    ledger0.set_tracer(tracer.clone());
 
     let mut trainer =
         Trainer::new(topo, LrSchedule::paper(steps)).with_backend(backend.sized_for(workers));
@@ -613,6 +695,10 @@ fn run_train_synth(args: &Args) {
     )
     .expect("write run json");
     println!("-> wrote {out}");
+    if let Some(tp) = &trace_out {
+        tracer.write_jsonl(tp).unwrap_or_else(|e| panic!("{e}"));
+        println!("-> wrote trace {tp}");
+    }
 }
 
 /// Resolve the `tsr finetune` run shape into the config echo stored in
@@ -623,7 +709,7 @@ fn finetune_run_config(args: &Args, vocab: usize, dim: usize) -> tsr::util::json
     use tsr::util::json::Json;
     let core_fmt = args.get_or("core-fmt", "bf16");
     if let Err(e) = tsr::comm::ElemFmt::parse(core_fmt) {
-        eprintln!("error: --core-fmt: {e}");
+        tsr::tsr_error!("error: --core-fmt: {e}");
         std::process::exit(2);
     }
     Json::obj(vec![
@@ -684,7 +770,7 @@ fn run_finetune(args: &Args) {
             ];
             for flag in CONFIG_ONLY {
                 if args.get(flag).is_some() {
-                    eprintln!(
+                    tsr::tsr_warn!(
                         "warning: --{flag} is fixed by the checkpoint's config and was ignored \
                          (--resume honors only --steps/--backend/--out/--save-*)"
                     );
@@ -694,7 +780,7 @@ fn run_finetune(args: &Args) {
         }
         None => {
             let from = args.get("from").unwrap_or_else(|| {
-                eprintln!(
+                tsr::tsr_error!(
                     "error: finetune needs --from <pretrain checkpoint> \
                      (a `train --source lm --save-every N` manifest) or --resume <finetune checkpoint>"
                 );
@@ -768,7 +854,7 @@ fn run_finetune(args: &Args) {
     };
     let mut opt = mcfg.build_with_fmt(&blocks, hyper, workers, core_fmt_from_config(&config));
 
-    let (mut params, metrics0, ledger0) = match &resume {
+    let (mut params, metrics0, mut ledger0) = match &resume {
         Some(ck) => {
             assert_eq!(opt.name(), ck.method, "--resume: optimizer method mismatch");
             assert_eq!(
@@ -795,6 +881,12 @@ fn run_finetune(args: &Args) {
             )
         }
     };
+    let (tracer, trace_out) = tracer_from_args(args);
+    tracer.meta(opt.name(), workers);
+    if start_step > 0 {
+        tracer.resume(start_step as u64, workers);
+    }
+    ledger0.set_tracer(tracer.clone());
 
     let mut trainer = Trainer::new(Topology::single_node(workers), LrSchedule::constant())
         .with_backend(backend.sized_for(workers));
@@ -858,6 +950,10 @@ fn run_finetune(args: &Args) {
     )
     .expect("write run json");
     println!("-> wrote {out}");
+    if let Some(tp) = &trace_out {
+        tracer.write_jsonl(tp).unwrap_or_else(|e| panic!("{e}"));
+        println!("-> wrote trace {tp}");
+    }
 }
 
 /// End-to-end PJRT training: the real L1+L2+L3 composition.
@@ -912,8 +1008,20 @@ fn run_train_pjrt(args: &Args) {
         tokens_per_step: manifest.batch * manifest.seq,
         ..Default::default()
     });
+    let (tracer, trace_out) = tracer_from_args(args);
+    tracer.meta(opt.name(), workers);
+    let mut ledger0 = tsr::comm::CommLedger::new();
+    ledger0.set_tracer(tracer.clone());
     let t0 = std::time::Instant::now();
-    let (metrics, ledger) = trainer.run(&mut source, opt.as_mut(), &mut params, steps);
+    let (metrics, ledger) = trainer.run_from(
+        &mut source,
+        opt.as_mut(),
+        &mut params,
+        0,
+        steps,
+        tsr::metrics::RunMetrics::new(opt.name()),
+        ledger0,
+    );
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\n== {} on {} ==", mcfg.label(), manifest.name);
@@ -950,4 +1058,8 @@ fn run_train_pjrt(args: &Args) {
     let _ = std::fs::create_dir_all("results");
     std::fs::write(out, metrics.to_json().to_string_pretty()).expect("write run json");
     println!("-> wrote {out}");
+    if let Some(tp) = &trace_out {
+        tracer.write_jsonl(tp).unwrap_or_else(|e| panic!("{e}"));
+        println!("-> wrote trace {tp}");
+    }
 }

@@ -4,7 +4,6 @@
 use crate::comm::CommLedger;
 use crate::linalg::Matrix;
 use crate::util::json::Json;
-use std::io::Write;
 use std::path::Path;
 
 /// FNV-1a over the little-endian bit patterns of every parameter — a
@@ -69,20 +68,22 @@ impl RunMetrics {
         self.step_secs.iter().sum::<f64>() / self.step_secs.len() as f64
     }
 
-    /// Write a CSV with step, loss, cumulative bytes.
-    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
-        let mut f = std::fs::File::create(path)?;
-        writeln!(f, "step,loss,cum_bytes")?;
+    /// Write a CSV with step, loss, cumulative bytes. Atomic (tmp +
+    /// rename, parent directory created) via the same helper the
+    /// checkpoint manifests use; every failure names the path — the old
+    /// version assumed the directory existed and surfaced a bare
+    /// `NotFound` when it didn't.
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let mut text = String::from("step,loss,cum_bytes\n");
         for i in 0..self.loss.len() {
-            writeln!(
-                f,
-                "{},{},{}",
+            text.push_str(&format!(
+                "{},{},{}\n",
                 i,
                 self.loss[i],
                 self.cum_bytes.get(i).copied().unwrap_or(0)
-            )?;
+            ));
         }
-        Ok(())
+        crate::util::json::write_text_atomic(path, &text)
     }
 
     /// Backend-determinism witness: every field here is a deterministic
@@ -171,11 +172,15 @@ impl RunMetrics {
     }
 }
 
-/// Ensure `results/` exists and return the path for `name`.
-pub fn results_path(name: &str) -> std::path::PathBuf {
+/// Ensure `results/` exists and return the path for `name`. A failed
+/// mkdir (permissions, a `results` FILE squatting on the name) used to
+/// be silently swallowed here and resurface as a confusing `NotFound`
+/// at write time; now it is a loud error naming the directory.
+pub fn results_path(name: &str) -> Result<std::path::PathBuf, String> {
     let dir = std::path::PathBuf::from("results");
-    let _ = std::fs::create_dir_all(&dir);
-    dir.join(name)
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| format!("results dir {}: cannot create: {e}", dir.display()))?;
+    Ok(dir.join(name))
 }
 
 #[cfg(test)]
@@ -200,6 +205,40 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         assert!(s.contains("step,loss,cum_bytes"));
         assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn csv_creates_missing_parent_directories() {
+        // The satellite fix: writing into a results dir that does not
+        // exist yet must create it rather than failing NotFound.
+        let mut m = RunMetrics::new("nested");
+        m.loss = vec![1.0];
+        m.cum_bytes = vec![4];
+        let dir = std::env::temp_dir().join("tsr_metrics_nested_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("deep").join("run.csv");
+        m.write_csv(&p).unwrap();
+        assert!(p.exists());
+        assert!(!p.with_extension("tmp").exists(), "tmp file left behind");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_failure_names_the_path() {
+        // Parent "directory" is a FILE: creation must fail loudly with
+        // the offending path in the message, not a bare io error.
+        let dir = std::env::temp_dir().join("tsr_metrics_squat_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let squatter = dir.join("results");
+        std::fs::write(&squatter, "not a directory").unwrap();
+        let m = RunMetrics::new("err");
+        let err = m.write_csv(squatter.join("run.csv")).unwrap_err();
+        assert!(
+            err.contains("results"),
+            "error must name the path it failed on: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

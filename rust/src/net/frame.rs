@@ -25,8 +25,9 @@ use std::io::{Read, Write};
 /// Wire protocol version, exchanged in every `Hello`; a coordinator and
 /// worker from different builds refuse each other loudly. v2 added the
 /// element-format tag to `Collective` frames and narrow (bf16/int8)
-/// `Data` ring chunks.
-pub const WIRE_VERSION: u32 = 2;
+/// `Data` ring chunks. v3 added the trace-request flag on `Collective`
+/// and the worker→coordinator `Trace` counter frame (DESIGN.md §16).
+pub const WIRE_VERSION: u32 = 3;
 
 /// Hard upper bound on a frame payload (1 GiB). A length prefix above
 /// this is corruption by definition — no collective in this repo ships
@@ -57,6 +58,10 @@ pub enum FrameKind {
     Result = 7,
     /// coordinator → worker: exit cleanly.
     Shutdown = 8,
+    /// worker → coordinator: per-kind frame/byte counters for the
+    /// observability wall tier, sent only when the coordinator's
+    /// `Collective` carried the trace flag (DESIGN.md §16).
+    Trace = 9,
 }
 
 impl FrameKind {
@@ -70,6 +75,7 @@ impl FrameKind {
             6 => Self::Data,
             7 => Self::Result,
             8 => Self::Shutdown,
+            9 => Self::Trace,
             _ => return None,
         })
     }
@@ -84,6 +90,7 @@ impl FrameKind {
             Self::Data => "data",
             Self::Result => "result",
             Self::Shutdown => "shutdown",
+            Self::Trace => "trace",
         }
     }
 }

@@ -1,0 +1,529 @@
+//! Trace artifact analysis — the library behind `tsr trace`.
+//!
+//! Consumes the JSONL artifact written by [`super::Tracer::write_jsonl`]
+//! and produces:
+//! * a deterministic machine-readable summary ([`summarize`]) whose byte
+//!   totals equal the `CommLedger` columns f64-exactly (they are sums of
+//!   the `step_bytes` records the ledger itself emitted),
+//! * a human report ([`render_report`]): per-phase breakdown,
+//!   per-link-class byte timeline with refresh spikes marked, and the
+//!   peak-bytes step,
+//! * a cross-method comparison ([`compare`]),
+//! * a Chrome-trace-format export ([`chrome_trace`]) loadable in
+//!   Perfetto / `chrome://tracing`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Parse a JSONL trace: one JSON record per non-empty line.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Json>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(Json::parse(line).map_err(|e| format!("trace line {}: {e}", i + 1))?);
+    }
+    Ok(out)
+}
+
+/// Records at or after `boundary` step, with the unstamped header kinds
+/// (`meta`, `resume`) dropped — the deterministic splice cut for
+/// comparing a resumed run's trace against the uninterrupted run's tail
+/// (see the resume-boundary contract in the module docs / DESIGN.md
+/// §16). Returns the records re-serialized as compact lines so callers
+/// can assert byte-for-byte equality.
+pub fn tail_after(records: &[Json], boundary: u64) -> Vec<String> {
+    records
+        .iter()
+        .filter(|r| !matches!(r.get("k").as_str(), Some("meta") | Some("resume")))
+        .filter(|r| r.get("step").as_u64().unwrap_or(0) >= boundary)
+        .map(|r| r.to_string())
+        .collect()
+}
+
+/// Deterministic summary of one trace. Sorted-key JSON; every number is
+/// an exact sum/copy of record fields (no averaging surprises).
+pub fn summarize(records: &[Json]) -> Json {
+    let mut method = String::new();
+    let mut workers = 0usize;
+    let mut wall = false;
+    let mut steps = 0u64;
+    let (mut total, mut emb, mut lin, mut vec_b) = (0f64, 0f64, 0f64, 0f64);
+    let (mut intra, mut inter) = (0f64, 0f64);
+    let mut sim_secs = 0f64;
+    let mut peak_bytes = 0f64;
+    let mut peak_step = 0u64;
+    let mut refresh_steps: Vec<Json> = Vec::new();
+    // phase -> (count, wall_us total)
+    let mut phases: BTreeMap<String, (u64, f64)> = BTreeMap::new();
+    // class -> (count, bytes, sim_dt total)
+    let mut collectives: BTreeMap<String, (u64, f64, f64)> = BTreeMap::new();
+    let mut resumes = 0u64;
+    let mut events: BTreeMap<String, u64> = BTreeMap::new();
+
+    for r in records {
+        match r.get("k").as_str() {
+            Some("meta") => {
+                method = r.get_str("method", "").to_string();
+                workers = r.get_usize("workers", 0);
+                wall = r.get_bool("wall", false);
+            }
+            Some("resume") => resumes += 1,
+            Some("step_bytes") => {
+                steps += 1;
+                let step = r.get("step").as_u64().unwrap_or(0);
+                let t = r.get_f64("total", 0.0);
+                total += t;
+                emb += r.get_f64("embedding", 0.0);
+                lin += r.get_f64("linear", 0.0);
+                vec_b += r.get_f64("vector", 0.0);
+                intra += r.get_f64("intra", 0.0);
+                inter += r.get_f64("inter", 0.0);
+                sim_secs = r.get_f64("sim_t", sim_secs);
+                if t > peak_bytes {
+                    peak_bytes = t;
+                    peak_step = step;
+                }
+                if r.get_bool("refresh", false) {
+                    refresh_steps.push(Json::num(step as f64));
+                }
+            }
+            Some("span") => {
+                let e = phases.entry(r.get_str("phase", "?").to_string()).or_insert((0, 0.0));
+                e.0 += 1;
+                e.1 += r.get_f64("wall_us", 0.0);
+            }
+            Some("collective") => {
+                let e = collectives
+                    .entry(r.get_str("class", "?").to_string())
+                    .or_insert((0, 0.0, 0.0));
+                e.0 += 1;
+                e.1 += r.get_f64("bytes", 0.0);
+                e.2 += r.get_f64("sim_dt", 0.0);
+            }
+            Some("event") | Some("wall_event") => {
+                *events.entry(r.get_str("name", "?").to_string()).or_insert(0) += 1;
+            }
+            _ => {}
+        }
+    }
+
+    let phases_j = Json::Obj(
+        phases
+            .into_iter()
+            .map(|(name, (count, wall_us))| {
+                let mut o = Json::obj(vec![("count", Json::num(count as f64))]);
+                if wall {
+                    o.set("wall_us", Json::num(wall_us));
+                }
+                (name, o)
+            })
+            .collect(),
+    );
+    let collectives_j = Json::Obj(
+        collectives
+            .into_iter()
+            .map(|(class, (count, bytes, sim_dt))| {
+                (
+                    class,
+                    Json::obj(vec![
+                        ("count", Json::num(count as f64)),
+                        ("bytes", Json::num(bytes)),
+                        ("sim_secs", Json::num(sim_dt)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let events_j =
+        Json::Obj(events.into_iter().map(|(n, c)| (n, Json::num(c as f64))).collect());
+
+    Json::obj(vec![
+        ("method", Json::str(method)),
+        ("workers", Json::num(workers as f64)),
+        ("wall", Json::Bool(wall)),
+        ("steps", Json::num(steps as f64)),
+        (
+            "bytes",
+            Json::obj(vec![
+                ("total", Json::num(total)),
+                ("embedding", Json::num(emb)),
+                ("linear", Json::num(lin)),
+                ("vector", Json::num(vec_b)),
+                ("intra", Json::num(intra)),
+                ("inter", Json::num(inter)),
+            ]),
+        ),
+        (
+            "peak",
+            Json::obj(vec![
+                ("step", Json::num(peak_step as f64)),
+                ("bytes", Json::num(peak_bytes)),
+            ]),
+        ),
+        ("refresh_steps", Json::Arr(refresh_steps)),
+        ("sim_secs", Json::num(sim_secs)),
+        ("phases", phases_j),
+        ("collectives", collectives_j),
+        ("events", events_j),
+        ("resumes", Json::num(resumes as f64)),
+    ])
+}
+
+fn fmt_bytes(b: f64) -> String {
+    crate::util::bench::fmt_bytes(b)
+}
+
+/// Human report: per-phase table, per-link-class totals, and a byte
+/// timeline with refresh spikes marked. Long runs elide steady steps —
+/// refresh spikes, the peak step, and the edges always print.
+pub fn render_report(records: &[Json]) -> String {
+    let s = summarize(records);
+    let mut out = String::new();
+    let wall = s.get_bool("wall", false);
+    out.push_str(&format!(
+        "trace: method={} workers={} steps={} ({} records{})\n",
+        s.get_str("method", "?"),
+        s.get_usize("workers", 0),
+        s.get_usize("steps", 0),
+        records.len(),
+        if wall { ", wall-clock" } else { ", deterministic" },
+    ));
+    if s.get_usize("resumes", 0) > 0 {
+        out.push_str(&format!("  resume boundaries: {}\n", s.get_usize("resumes", 0)));
+    }
+
+    out.push_str("\nper-phase breakdown:\n");
+    if let Some(phases) = s.get("phases").as_obj() {
+        for (phase, v) in phases {
+            match v.get("wall_us").as_f64() {
+                Some(us) => out.push_str(&format!(
+                    "  {phase:<24} x{:<6} {:>12.3} ms wall\n",
+                    v.get_usize("count", 0),
+                    us / 1e3,
+                )),
+                None => {
+                    out.push_str(&format!("  {phase:<24} x{}\n", v.get_usize("count", 0)))
+                }
+            }
+        }
+        if phases.is_empty() {
+            out.push_str("  (no spans recorded)\n");
+        }
+    }
+
+    out.push_str("\nper-link-class collectives:\n");
+    if let Some(cols) = s.get("collectives").as_obj() {
+        for (class, v) in cols {
+            out.push_str(&format!(
+                "  {class:<12} x{:<6} {:>12}  {:>10.6} s sim\n",
+                v.get_usize("count", 0),
+                fmt_bytes(v.get_f64("bytes", 0.0)),
+                v.get_f64("sim_secs", 0.0),
+            ));
+        }
+    }
+    let b = s.get("bytes");
+    out.push_str(&format!(
+        "  wire split: intra {} / inter {}\n",
+        fmt_bytes(b.get_f64("intra", 0.0)),
+        fmt_bytes(b.get_f64("inter", 0.0)),
+    ));
+    out.push_str(&format!(
+        "  payload:    emb {} / linear {} / vector {}  (total {})\n",
+        fmt_bytes(b.get_f64("embedding", 0.0)),
+        fmt_bytes(b.get_f64("linear", 0.0)),
+        fmt_bytes(b.get_f64("vector", 0.0)),
+        fmt_bytes(b.get_f64("total", 0.0)),
+    ));
+
+    // Byte timeline from the raw step_bytes records.
+    let step_recs: Vec<&Json> = records
+        .iter()
+        .filter(|r| r.get("k").as_str() == Some("step_bytes"))
+        .collect();
+    let peak_step = s.get("peak").get_usize("step", 0);
+    out.push_str("\nbyte timeline (step: total [emb/linear/vector], * = refresh spike):\n");
+    let n = step_recs.len();
+    let mut elided = 0usize;
+    for (i, r) in step_recs.iter().enumerate() {
+        let step = r.get_usize("step", 0);
+        let refresh = r.get_bool("refresh", false);
+        let notable = refresh || step == peak_step || i < 3 || i + 3 >= n;
+        if n > 48 && !notable {
+            elided += 1;
+            continue;
+        }
+        if elided > 0 {
+            out.push_str(&format!("  ... {elided} steady steps elided ...\n"));
+            elided = 0;
+        }
+        out.push_str(&format!(
+            "  {:>6}: {:>12} [{} / {} / {}]{}{}\n",
+            step,
+            fmt_bytes(r.get_f64("total", 0.0)),
+            fmt_bytes(r.get_f64("embedding", 0.0)),
+            fmt_bytes(r.get_f64("linear", 0.0)),
+            fmt_bytes(r.get_f64("vector", 0.0)),
+            if refresh { "  *refresh*" } else { "" },
+            if step == peak_step { "  <-- peak" } else { "" },
+        ));
+    }
+    if elided > 0 {
+        out.push_str(&format!("  ... {elided} steady steps elided ...\n"));
+    }
+    out.push_str(&format!(
+        "\npeak: step {} at {}; sim comm time {:.6} s\n",
+        peak_step,
+        fmt_bytes(s.get("peak").get_f64("bytes", 0.0)),
+        s.get_f64("sim_secs", 0.0),
+    ));
+    out
+}
+
+/// Cross-method comparison of two traces: side-by-side totals plus
+/// byte ratios (the Fig-6-style "where do the bytes go" question asked
+/// of two real runs).
+pub fn compare(a: &[Json], b: &[Json]) -> String {
+    let (sa, sb) = (summarize(a), summarize(b));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<22} {:>16} {:>16} {:>8}\n",
+        "",
+        sa.get_str("method", "a"),
+        sb.get_str("method", "b"),
+        "ratio"
+    ));
+    let rows: [(&str, fn(&Json) -> f64); 6] = [
+        ("steps", |s| s.get_f64("steps", 0.0)),
+        ("total bytes", |s| s.get("bytes").get_f64("total", 0.0)),
+        ("embedding bytes", |s| s.get("bytes").get_f64("embedding", 0.0)),
+        ("linear bytes", |s| s.get("bytes").get_f64("linear", 0.0)),
+        ("peak step bytes", |s| s.get("peak").get_f64("bytes", 0.0)),
+        ("sim comm secs", |s| s.get_f64("sim_secs", 0.0)),
+    ];
+    for (label, get) in rows {
+        let (va, vb) = (get(&sa), get(&sb));
+        let ratio = if va > 0.0 { vb / va } else { f64::NAN };
+        out.push_str(&format!("{label:<22} {va:>16.6} {vb:>16.6} {ratio:>8.3}\n"));
+    }
+    out
+}
+
+/// Chrome-trace-format (`trace_events`) export, loadable in Perfetto.
+///
+/// Track layout:
+/// * tid 0 — per-step byte counters (`step_bytes` as `C` events on the
+///   sim-time axis; refresh steps emit an extra instant marker),
+/// * tid 1 — collective legs as complete (`X`) slices on the sim-time
+///   axis (`ts = sim_t − sim_dt`),
+/// * tid 2 — wall-clock spans (`X`, only present in wall traces),
+/// * instants for `event` / `resume` / `wall_event` records.
+///
+/// Timestamps are microseconds as the format requires; deterministic
+/// traces use the α–β `sim_time` axis, wall records their `wall_*`
+/// fields.
+pub fn chrome_trace(records: &[Json]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let ev = |ph: &str, name: &str, ts: f64, tid: u64, extra: Vec<(&str, Json)>| {
+        let mut o = Json::obj(vec![
+            ("ph", Json::str(ph)),
+            ("name", Json::str(name)),
+            ("ts", Json::num(ts)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid as f64)),
+        ]);
+        for (k, v) in extra {
+            o.set(k, v);
+        }
+        o
+    };
+    for r in records {
+        let step = r.get_f64("step", 0.0);
+        match r.get("k").as_str() {
+            Some("step_bytes") => {
+                let ts = r.get_f64("sim_t", 0.0) * 1e6;
+                events.push(ev(
+                    "C",
+                    "bytes/class",
+                    ts,
+                    0,
+                    vec![(
+                        "args",
+                        Json::obj(vec![
+                            ("embedding", Json::num(r.get_f64("embedding", 0.0))),
+                            ("linear", Json::num(r.get_f64("linear", 0.0))),
+                            ("vector", Json::num(r.get_f64("vector", 0.0))),
+                        ]),
+                    )],
+                ));
+                if r.get_bool("refresh", false) {
+                    events.push(ev(
+                        "i",
+                        "refresh",
+                        ts,
+                        0,
+                        vec![
+                            ("s", Json::str("g")),
+                            ("args", Json::obj(vec![("step", Json::num(step))])),
+                        ],
+                    ));
+                }
+            }
+            Some("collective") => {
+                let dt = r.get_f64("sim_dt", 0.0) * 1e6;
+                let ts = r.get_f64("sim_t", 0.0) * 1e6 - dt;
+                events.push(ev(
+                    "X",
+                    r.get_str("class", "collective"),
+                    ts,
+                    1,
+                    vec![
+                        ("dur", Json::num(dt)),
+                        (
+                            "args",
+                            Json::obj(vec![
+                                ("bytes", Json::num(r.get_f64("bytes", 0.0))),
+                                ("fmt", Json::str(r.get_str("fmt", "f32"))),
+                                ("step", Json::num(step)),
+                            ]),
+                        ),
+                    ],
+                ));
+            }
+            Some("span") => {
+                if let Some(ts) = r.get("wall_ts").as_f64() {
+                    events.push(ev(
+                        "X",
+                        r.get_str("phase", "span"),
+                        ts,
+                        2,
+                        vec![
+                            ("dur", Json::num(r.get_f64("wall_us", 0.0))),
+                            ("args", Json::obj(vec![("step", Json::num(step))])),
+                        ],
+                    ));
+                }
+            }
+            Some("event") | Some("resume") => {
+                events.push(ev(
+                    "i",
+                    r.get_str("name", r.get_str("k", "event")),
+                    step * 1e6,
+                    0,
+                    vec![("s", Json::str("g"))],
+                ));
+            }
+            Some("wall_event") => {
+                events.push(ev(
+                    "i",
+                    r.get_str("name", "wall_event"),
+                    r.get_f64("wall_us", 0.0),
+                    3,
+                    vec![("s", Json::str("p"))],
+                ));
+            }
+            _ => {}
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::accounting::StepRecord;
+    use crate::comm::LayerClass;
+    use crate::obs::Tracer;
+
+    fn sample_trace() -> Vec<Json> {
+        let t = Tracer::new();
+        t.meta("tsr", 4);
+        for step in 0..3u64 {
+            t.set_step(step);
+            {
+                crate::span!(t, "grad_compute");
+            }
+            t.collective(LayerClass::Linear, 4096, "f32", 6144, 2048, 1e-3, (step + 1) as f64 * 1e-3);
+            let rec = StepRecord {
+                total: if step == 1 { 9000 } else { 4096 },
+                embedding: 0,
+                linear: if step == 1 { 9000 } else { 4096 },
+                vector: 0,
+                intra: 6144,
+                inter: 2048,
+                refresh: step == 1,
+            };
+            t.step_bytes(step, &rec, (step + 1) as f64 * 1e-3);
+        }
+        t.records()
+    }
+
+    #[test]
+    fn summary_totals_are_exact_sums() {
+        let s = summarize(&sample_trace());
+        assert_eq!(s.get("bytes").get_f64("total", 0.0), 4096.0 + 9000.0 + 4096.0);
+        assert_eq!(s.get("bytes").get_f64("intra", 0.0), 3.0 * 6144.0);
+        assert_eq!(s.get("peak").get_usize("step", 99), 1);
+        assert_eq!(s.get("peak").get_f64("bytes", 0.0), 9000.0);
+        let refresh = s.get("refresh_steps").as_arr().unwrap();
+        assert_eq!(refresh.len(), 1);
+        assert_eq!(refresh[0].as_u64(), Some(1));
+        assert_eq!(s.get_usize("steps", 0), 3);
+        assert_eq!(s.get_str("method", ""), "tsr");
+    }
+
+    #[test]
+    fn report_marks_refresh_and_peak() {
+        let report = render_report(&sample_trace());
+        assert!(report.contains("*refresh*"), "{report}");
+        assert!(report.contains("<-- peak"), "{report}");
+        assert!(report.contains("grad_compute"), "{report}");
+    }
+
+    #[test]
+    fn jsonl_roundtrip_preserves_summary() {
+        let recs = sample_trace();
+        let text: String = recs.iter().map(|r| r.to_string() + "\n").collect();
+        let back = parse_jsonl(&text).unwrap();
+        assert_eq!(summarize(&recs).to_string(), summarize(&back).to_string());
+    }
+
+    #[test]
+    fn tail_after_drops_headers_and_earlier_steps() {
+        let t = Tracer::new();
+        t.meta("tsr", 2);
+        t.resume(1, 2);
+        t.set_step(0);
+        t.event("a", vec![]);
+        t.set_step(1);
+        t.event("b", vec![]);
+        let tail = tail_after(&t.records(), 1);
+        assert_eq!(tail.len(), 1);
+        assert!(tail[0].contains("\"b\""), "{tail:?}");
+    }
+
+    #[test]
+    fn chrome_export_has_counter_and_slice_events() {
+        let j = chrome_trace(&sample_trace());
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert!(evs.iter().any(|e| e.get("ph").as_str() == Some("C")));
+        assert!(evs.iter().any(|e| e.get("ph").as_str() == Some("X")));
+        assert!(evs.iter().any(|e| e.get("name").as_str() == Some("refresh")));
+    }
+
+    #[test]
+    fn compare_reports_ratios() {
+        let recs = sample_trace();
+        let out = compare(&recs, &recs);
+        assert!(out.contains("total bytes"), "{out}");
+        assert!(out.contains("1.000"), "{out}");
+    }
+
+    #[test]
+    fn bad_jsonl_line_is_a_loud_error() {
+        let err = parse_jsonl("{\"k\":\"meta\"}\nnot json\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Leveled stderr logging facade (DESIGN.md §16).
+//!
+//! Replaces the scattered `eprintln!` call sites: every diagnostic goes
+//! through [`write`] (via the `tsr_error!` / `tsr_warn!` / `tsr_info!` /
+//! `tsr_debug!` macros) and is filtered by the `TSR_LOG` environment
+//! variable (`error | warn | info | debug`, default `warn`).
+//!
+//! The facade prints the formatted message **verbatim** — no level
+//! prefix, no timestamp — so test-visible error strings are unchanged
+//! from their `eprintln!` days. Product output (tables, summaries,
+//! results paths) stays on `println!`; this is for diagnostics only.
+//! Error-level messages always print at the default level.
+
+use std::sync::OnceLock;
+
+/// Severity, ordered most- to least-severe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a `TSR_LOG` value. Unknown names are a loud error listing
+    /// the valid set — same idiom as `ExecBackend::parse`.
+    pub fn parse(name: &str) -> Result<Self, String> {
+        match name.trim() {
+            "error" => Ok(Level::Error),
+            "warn" | "warning" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            other => Err(format!(
+                "unknown log level `{other}` (valid: error | warn | info | debug)"
+            )),
+        }
+    }
+}
+
+static MAX_LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The active threshold: `TSR_LOG` if set (a set-but-invalid value
+/// panics with the valid list rather than silently filtering wrong),
+/// else [`Level::Warn`]. Resolved once per process.
+pub fn max_level() -> Level {
+    *MAX_LEVEL.get_or_init(|| match std::env::var("TSR_LOG") {
+        Ok(v) => Level::parse(&v).unwrap_or_else(|e| panic!("TSR_LOG: {e}")),
+        Err(_) => Level::Warn,
+    })
+}
+
+/// Whether a message at `level` would print.
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Print `args` to stderr iff `level` clears the threshold. Use the
+/// `tsr_*!` macros rather than calling this directly.
+pub fn write(level: Level, args: std::fmt::Arguments) {
+    if enabled(level) {
+        eprintln!("{args}");
+    }
+}
+
+/// Unrecoverable-path diagnostics; always printed (error ≤ warn).
+#[macro_export]
+macro_rules! tsr_error {
+    ($($a:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error, format_args!($($a)*))
+    };
+}
+
+/// Suspicious-but-continuing diagnostics; printed at the default level.
+#[macro_export]
+macro_rules! tsr_warn {
+    ($($a:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn, format_args!($($a)*))
+    };
+}
+
+/// Config echoes and progress notes; hidden unless `TSR_LOG=info`.
+#[macro_export]
+macro_rules! tsr_info {
+    ($($a:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info, format_args!($($a)*))
+    };
+}
+
+/// High-volume internals; hidden unless `TSR_LOG=debug`.
+#[macro_export]
+macro_rules! tsr_debug {
+    ($($a:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug, format_args!($($a)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn parse_roundtrips_and_rejects_loudly() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.name()), Ok(l));
+        }
+        assert_eq!(Level::parse(" warning "), Ok(Level::Warn));
+        for bogus in ["verbose", "ERROR", "", "trace"] {
+            let err = Level::parse(bogus).unwrap_err();
+            assert!(err.contains("error | warn | info | debug"), "`{bogus}` -> {err}");
+        }
+    }
+
+    #[test]
+    fn default_threshold_passes_errors_and_warnings() {
+        // The suite runs without TSR_LOG set (or with a valid value);
+        // error must always clear whatever threshold is active.
+        assert!(enabled(Level::Error));
+        // Macros compile and format lazily.
+        crate::tsr_debug!("invisible by default: {}", 42);
+    }
+}

@@ -1,0 +1,428 @@
+//! Observability: deterministic tracing + leveled logging (DESIGN.md §16).
+//!
+//! The tracer records **step-indexed, sim-time-stamped** events from the
+//! training pipeline into an in-memory buffer and writes them as a
+//! sorted-key JSONL artifact (one record per line, `util::json` compact
+//! serialization, atomic tmp+rename).
+//!
+//! **Determinism contract.** A trace recorded *without* wall-clock mode
+//! contains only backend-invariant fields (step index, a per-step record
+//! sequence `j`, byte counts, the ledger's α–β `sim_time`), emitted only
+//! from coordinator-side code that is identical across the sequential /
+//! threaded / process backends. Such a trace is byte-identical across
+//! repeats of the same seeded run AND across execution backends — CI
+//! diffs it the same way it diffs the metrics JSON. Wall-clock timing is
+//! strictly opt-in ([`Tracer::new_wall`], `tsr train --trace-wall`) and
+//! quarantined into `wall_*` fields; enabling it also unlocks
+//! backend-specific records (process handshake / frame counters /
+//! respawns), which ride on the wall tier precisely because a wall trace
+//! makes no byte-identity promise.
+//!
+//! **Disabled tracer.** The default [`Tracer`] is disabled: every
+//! emission site is a single `Option` check, no allocation, no lock —
+//! and it is *bit-preserving*: a run with a disabled tracer attached
+//! produces the byte-identical deterministic metrics JSON as a run
+//! without one (asserted in `rust/tests/trace.rs`).
+//!
+//! **Resume boundary.** A resumed run re-attaches a fresh tracer and
+//! emits a `resume` record before its first step. Because the per-step
+//! sequence `j` resets at every step boundary, the resumed trace's step
+//! records are byte-identical to the same steps of the uninterrupted
+//! run's trace (drop `meta`/`resume` lines and compare step ≥ boundary —
+//! [`analyze::tail_after`] implements exactly that cut; asserted by the
+//! resilience drills and the soak trace cell).
+
+pub mod analyze;
+pub mod log;
+
+use crate::comm::accounting::StepRecord;
+use crate::comm::LayerClass;
+use crate::util::json::Json;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Trace format version, written into the `meta` record.
+pub const TRACE_VERSION: u64 = 1;
+
+struct State {
+    /// Current step index (set by the training loop).
+    step: u64,
+    /// Per-step record sequence; resets to 0 at every `set_step`, so a
+    /// record is addressed by the deterministic pair `(step, j)` and a
+    /// resumed run's step records line up with the full run's.
+    j: u64,
+    records: Vec<Json>,
+}
+
+struct Inner {
+    wall: bool,
+    epoch: Instant,
+    state: Mutex<State>,
+}
+
+/// Cheap-to-clone tracer handle. `Tracer::default()` is disabled;
+/// cloning shares the underlying buffer.
+#[derive(Clone, Default)]
+pub struct Tracer(Option<Arc<Inner>>);
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "Tracer(disabled)"),
+            Some(i) => write!(f, "Tracer(enabled, wall={})", i.wall),
+        }
+    }
+}
+
+impl Tracer {
+    /// Enabled tracer recording only deterministic fields.
+    pub fn new() -> Self {
+        Self::with_wall(false)
+    }
+
+    /// Enabled tracer that ALSO stamps `wall_*` fields and accepts
+    /// backend-specific wall-tier records. Not byte-stable — see the
+    /// module docs.
+    pub fn new_wall() -> Self {
+        Self::with_wall(true)
+    }
+
+    fn with_wall(wall: bool) -> Self {
+        Tracer(Some(Arc::new(Inner {
+            wall,
+            epoch: Instant::now(),
+            state: Mutex::new(State {
+                step: 0,
+                j: 0,
+                records: Vec::new(),
+            }),
+        })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn wall(&self) -> bool {
+        self.0.as_ref().is_some_and(|i| i.wall)
+    }
+
+    fn lock(inner: &Inner) -> std::sync::MutexGuard<'_, State> {
+        inner.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enter step `t`: subsequent records carry `step: t` and the
+    /// per-step sequence restarts at 0.
+    pub fn set_step(&self, t: u64) {
+        if let Some(inner) = &self.0 {
+            let mut st = Self::lock(inner);
+            st.step = t;
+            st.j = 0;
+        }
+    }
+
+    /// Push one record with the deterministic `(step, j)` stamp plus
+    /// `fields`. The single append point for every stamped record kind.
+    fn emit(&self, k: &str, fields: Vec<(&str, Json)>) {
+        let Some(inner) = &self.0 else { return };
+        let mut st = Self::lock(inner);
+        let mut o = Json::obj(fields);
+        o.set("k", Json::str(k));
+        o.set("step", Json::num(st.step as f64));
+        o.set("j", Json::num(st.j as f64));
+        st.j += 1;
+        st.records.push(o);
+    }
+
+    /// First line of the artifact: run identity. Deliberately excludes
+    /// the execution backend — a deterministic trace must not differ
+    /// across backends, including its header.
+    pub fn meta(&self, method: &str, workers: usize) {
+        let Some(inner) = &self.0 else { return };
+        let mut o = Json::obj(vec![
+            ("k", Json::str("meta")),
+            ("method", Json::str(method)),
+            ("trace_version", Json::num(TRACE_VERSION as f64)),
+            ("workers", Json::num(workers as f64)),
+        ]);
+        if inner.wall {
+            o.set("wall", Json::Bool(true));
+        }
+        Self::lock(inner).records.push(o);
+    }
+
+    /// Resume-boundary record: the run restarts at `start_step` from a
+    /// checkpoint. Unstamped (no `j`) so [`analyze::tail_after`] can
+    /// splice resumed traces against uninterrupted ones.
+    pub fn resume(&self, start_step: u64, workers: usize) {
+        let Some(inner) = &self.0 else { return };
+        Self::lock(inner).records.push(Json::obj(vec![
+            ("k", Json::str("resume")),
+            ("start_step", Json::num(start_step as f64)),
+            ("workers", Json::num(workers as f64)),
+        ]));
+    }
+
+    /// Span guard for a pipeline phase: one `span` record is emitted
+    /// when the guard drops (wall mode adds `wall_ts`/`wall_us`).
+    pub fn span(&self, phase: &'static str) -> SpanGuard {
+        SpanGuard {
+            tracer: self.clone(),
+            phase,
+            t0: if self.wall() { Some(Instant::now()) } else { None },
+        }
+    }
+
+    /// Named point event with extra deterministic fields.
+    pub fn event(&self, name: &str, fields: Vec<(&str, Json)>) {
+        if self.0.is_none() {
+            return;
+        }
+        let mut fields = fields;
+        fields.push(("name", Json::str(name)));
+        self.emit("event", fields);
+    }
+
+    /// Named numeric sample (deterministic values only).
+    pub fn counter(&self, name: &str, value: f64) {
+        if self.0.is_none() {
+            return;
+        }
+        self.emit(
+            "counter",
+            vec![("name", Json::str(name)), ("value", Json::num(value))],
+        );
+    }
+
+    /// One collective leg as metered by `comm::collective::sync_mean`:
+    /// payload bytes by layer class and element format (`"packed"` for
+    /// the bit-packed virtual collectives of sign/top-k), the per-link
+    /// intra/inter wire split, and the α–β model's `sim_dt` for the leg
+    /// plus the cumulative `sim_t` after it.
+    #[allow(clippy::too_many_arguments)]
+    pub fn collective(
+        &self,
+        class: LayerClass,
+        bytes: usize,
+        fmt: &str,
+        intra: usize,
+        inter: usize,
+        sim_dt: f64,
+        sim_t: f64,
+    ) {
+        if self.0.is_none() {
+            return;
+        }
+        self.emit(
+            "collective",
+            vec![
+                ("class", Json::str(class.name())),
+                ("bytes", Json::num(bytes as f64)),
+                ("fmt", Json::str(fmt)),
+                ("intra", Json::num(intra as f64)),
+                ("inter", Json::num(inter as f64)),
+                ("sim_dt", Json::num(sim_dt)),
+                ("sim_t", Json::num(sim_t)),
+            ],
+        );
+    }
+
+    /// Per-step byte totals, emitted by `CommLedger::end_step` from the
+    /// exact `StepRecord` it closes — so the trace's byte timeline
+    /// equals the ledger columns f64-exactly by construction.
+    pub fn step_bytes(&self, step: u64, rec: &StepRecord, sim_t: f64) {
+        let Some(inner) = &self.0 else { return };
+        let mut st = Self::lock(inner);
+        let mut o = Json::obj(vec![
+            ("k", Json::str("step_bytes")),
+            ("total", Json::num(rec.total as f64)),
+            ("embedding", Json::num(rec.embedding as f64)),
+            ("linear", Json::num(rec.linear as f64)),
+            ("vector", Json::num(rec.vector as f64)),
+            ("intra", Json::num(rec.intra as f64)),
+            ("inter", Json::num(rec.inter as f64)),
+            ("refresh", Json::Bool(rec.refresh)),
+            ("sim_t", Json::num(sim_t)),
+        ]);
+        // Step index comes from the ledger (its closed-step count), not
+        // the tracer cursor, so ledger-only callers stay correct.
+        o.set("step", Json::num(step as f64));
+        o.set("j", Json::num(st.j as f64));
+        st.j += 1;
+        st.records.push(o);
+    }
+
+    /// Wall-tier record: backend-specific, wall-stamped, dropped unless
+    /// wall mode is on. The only record kind the process/threaded
+    /// backends emit (via the global tracer).
+    pub fn wall_event(&self, name: &str, fields: Vec<(&str, Json)>) {
+        let Some(inner) = &self.0 else { return };
+        if !inner.wall {
+            return;
+        }
+        let wall_us = inner.epoch.elapsed().as_micros() as f64;
+        let mut fields = fields;
+        fields.push(("name", Json::str(name)));
+        fields.push(("wall_us", Json::num(wall_us)));
+        self.emit("wall_event", fields);
+    }
+
+    /// Snapshot of the records so far (cloned; the tracer keeps going).
+    pub fn records(&self) -> Vec<Json> {
+        match &self.0 {
+            None => Vec::new(),
+            Some(inner) => Self::lock(inner).records.clone(),
+        }
+    }
+
+    /// Serialize to JSONL: one compact sorted-key record per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for r in self.records() {
+            s.push_str(&r.to_string());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write the JSONL artifact atomically (tmp+rename, parent dirs
+    /// created) — same helper the checkpoint manifests use.
+    pub fn write_jsonl(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
+        crate::util::json::write_text_atomic(path, &self.to_jsonl())
+    }
+}
+
+/// RAII phase span; emits its `span` record on drop.
+pub struct SpanGuard {
+    tracer: Tracer,
+    phase: &'static str,
+    t0: Option<Instant>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = &self.tracer.0 else { return };
+        let mut fields = vec![("phase", Json::str(self.phase))];
+        if let Some(t0) = self.t0 {
+            let ts = t0.duration_since(inner.epoch).as_micros() as f64;
+            fields.push(("wall_ts", Json::num(ts)));
+            fields.push(("wall_us", Json::num(t0.elapsed().as_micros() as f64)));
+        }
+        self.tracer.emit("span", fields);
+    }
+}
+
+/// Open a phase span that closes at the end of the enclosing scope:
+/// `span!(tracer, "project")`.
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $phase:expr) => {
+        let _span_guard = $tracer.span($phase);
+    };
+}
+
+/// Process-global tracer slot. Only the execution backends use it, and
+/// only for wall-tier records ([`Tracer::wall_event`]) — deterministic
+/// records always travel through the ledger-attached handle, so the
+/// global can never perturb the byte-identity contract.
+static GLOBAL: OnceLock<Mutex<Tracer>> = OnceLock::new();
+
+fn global_slot() -> &'static Mutex<Tracer> {
+    GLOBAL.get_or_init(|| Mutex::new(Tracer::default()))
+}
+
+/// Install (or replace) the global tracer for backend wall events.
+pub fn set_global(t: Tracer) {
+    *global_slot().lock().unwrap_or_else(|p| p.into_inner()) = t;
+}
+
+/// Current global tracer (disabled if never set).
+pub fn global() -> Tracer {
+    global_slot().lock().unwrap_or_else(|p| p.into_inner()).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::default();
+        assert!(!t.enabled());
+        t.meta("tsr", 4);
+        t.set_step(3);
+        t.event("x", vec![]);
+        t.counter("c", 1.0);
+        {
+            span!(t, "phase");
+        }
+        assert!(t.records().is_empty());
+        assert_eq!(t.to_jsonl(), "");
+    }
+
+    #[test]
+    fn per_step_sequence_resets_and_stamps() {
+        let t = Tracer::new();
+        t.meta("tsr", 2);
+        t.set_step(0);
+        t.event("a", vec![]);
+        t.event("b", vec![]);
+        t.set_step(1);
+        t.event("c", vec![]);
+        let r = t.records();
+        assert_eq!(r.len(), 4);
+        assert_eq!(r[1].get("j").as_u64(), Some(0));
+        assert_eq!(r[2].get("j").as_u64(), Some(1));
+        assert_eq!(r[3].get("j").as_u64(), Some(0));
+        assert_eq!(r[3].get("step").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn deterministic_records_carry_no_wall_fields() {
+        let t = Tracer::new();
+        t.set_step(0);
+        {
+            span!(t, "phase");
+        }
+        t.wall_event("backend_thing", vec![]); // dropped: wall mode off
+        let lines = t.to_jsonl();
+        assert!(!lines.contains("wall"), "wall leak: {lines}");
+        assert_eq!(t.records().len(), 1);
+    }
+
+    #[test]
+    fn wall_mode_quarantines_into_wall_fields() {
+        let t = Tracer::new_wall();
+        t.set_step(0);
+        {
+            span!(t, "phase");
+        }
+        t.wall_event("spawn", vec![("rank", Json::num(1.0))]);
+        let r = t.records();
+        assert_eq!(r.len(), 2);
+        assert!(r[0].get("wall_us").as_f64().is_some());
+        assert!(r[0].get("wall_ts").as_f64().is_some());
+        assert_eq!(r[1].get("name").as_str(), Some("spawn"));
+        assert!(r[1].get("wall_us").as_f64().is_some());
+    }
+
+    #[test]
+    fn clones_share_the_buffer() {
+        let t = Tracer::new();
+        let u = t.clone();
+        t.set_step(0);
+        u.event("from-clone", vec![]);
+        assert_eq!(t.records().len(), 1);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let t = Tracer::new();
+        t.meta("adamw", 4);
+        t.set_step(2);
+        t.counter("loss", 0.5);
+        for line in t.to_jsonl().lines() {
+            Json::parse(line).unwrap();
+        }
+    }
+}

@@ -33,6 +33,8 @@ impl DistOptimizer for DenseAdamW {
 
     fn step(&mut self, ctx: &mut StepCtx) {
         self.t += 1;
+        let tracer = ctx.tracer();
+        crate::span!(tracer, "dense_step");
         let nblocks = ctx.params.len();
         for b in 0..nblocks {
             // All-reduce the dense gradient: S_t = { Ḡ } (mn elements).

@@ -99,6 +99,18 @@ impl DistOptimizer for DesLoc {
             sync_due(self.k_m, t),
             sync_due(self.k_v, t),
         );
+        if p_due || m_due || v_due {
+            ctx.tracer().event(
+                "state_sync",
+                vec![
+                    ("p", crate::util::json::Json::Bool(p_due)),
+                    ("m", crate::util::json::Json::Bool(m_due)),
+                    ("v", crate::util::json::Json::Bool(v_due)),
+                ],
+            );
+        } else {
+            ctx.tracer().event("local_step", vec![]);
+        }
         for b in 0..ctx.params.len() {
             let blk = &mut self.blocks[b];
             // Local AdamW step: each worker updates its OWN replica with

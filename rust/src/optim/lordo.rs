@@ -134,6 +134,15 @@ impl DistOptimizer for Lordo {
             self.init = true;
         }
         let due = sync_due(self.h, t);
+        let tracer = ctx.tracer();
+        if due {
+            tracer.event(
+                "delta_sync",
+                vec![("h", crate::util::json::Json::num(self.h as f64))],
+            );
+        } else {
+            tracer.event("local_step", vec![]);
+        }
         for b in 0..ctx.params.len() {
             let class = self.classes[b];
             let st = match &mut self.blocks[b] {
@@ -161,6 +170,7 @@ impl DistOptimizer for Lordo {
                     ctx.params[b] = st.replicas[0].clone();
                 }
                 BlockState::LowRank(blk) => {
+                    crate::span!(tracer, "factorize");
                     // Δ_i = local replica − shared anchor.
                     let deltas: Vec<Matrix> = blk
                         .st

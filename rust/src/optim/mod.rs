@@ -92,6 +92,15 @@ pub struct StepCtx<'a> {
     pub exec: &'a ExecBackend,
 }
 
+impl StepCtx<'_> {
+    /// The trace handle riding on the ledger (disabled unless the run
+    /// attached one, DESIGN.md §16). Cloned so optimizers can hold it
+    /// across mutable ledger use; clones share the record buffer.
+    pub fn tracer(&self) -> crate::obs::Tracer {
+        self.ledger.tracer().clone()
+    }
+}
+
 /// One block's contribution to step-`t` gradient synchronization.
 #[derive(Clone, Debug)]
 pub struct SyncItem {

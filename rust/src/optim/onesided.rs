@@ -136,6 +136,19 @@ impl DistOptimizer for OneSidedAdam {
                 BlockState::Projected(blk) => {
                     // Shared predicate with sync_plan ([`refresh_due`]).
                     if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
+                        ctx.tracer().event(
+                            "refresh",
+                            vec![
+                                ("block", crate::util::json::Json::num(b as f64)),
+                                (
+                                    "kind",
+                                    crate::util::json::Json::str(match self.refresh {
+                                        OneSidedRefresh::ExactSvd => "exact",
+                                        OneSidedRefresh::RandomizedSvd => "rsvd",
+                                    }),
+                                ),
+                            ],
+                        );
                         // GaLore refresh: dense all-reduce, then local SVD
                         // → this is what spikes PeakBytes.
                         let mut dense: Vec<Matrix> =

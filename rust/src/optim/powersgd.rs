@@ -78,6 +78,8 @@ impl DistOptimizer for PowerSgd {
         self.t += 1;
         let t1 = self.t;
         let lr = self.lr * ctx.lr_mult;
+        let tracer = ctx.tracer();
+        crate::span!(tracer, "compress_step");
 
         for b in 0..ctx.params.len() {
             let class = self.classes[b];

@@ -120,6 +120,10 @@ impl DistOptimizer for SignAdam {
                     // analogous to GaLore's dense refresh; the predicate
                     // is shared with sync_plan ([`refresh_due`]).
                     if refresh_due(blk.init_step, t, self.k_var as u64, t) {
+                        ctx.tracer().event(
+                            "var_refresh",
+                            vec![("block", crate::util::json::Json::num(b as f64))],
+                        );
                         let mut dense: Vec<Matrix> =
                             ctx.grads.iter().map(|g| g[b].clone()).collect();
                         collective::sync_mean(&mut dense, class, ctx.ledger, ctx.topo, ctx.exec);
@@ -158,9 +162,7 @@ impl DistOptimizer for SignAdam {
                     }
                     ghat.scale(1.0 / workers as f32);
                     let bytes = sign_payload_bytes(ghat.numel());
-                    ctx.ledger.record_bytes(class, bytes);
-                    collective::record_virtual_sync(workers, bytes, ctx.ledger, ctx.topo);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::record_virtual_sync(workers, class, bytes, ctx.ledger, ctx.topo);
 
                     // Adam update: fresh momentum, frozen variance.
                     let b1 = h.beta1;

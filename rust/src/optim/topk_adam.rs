@@ -132,9 +132,7 @@ impl DistOptimizer for TopKAdam {
                     }
                     ghat.scale(1.0 / workers as f32);
                     let bytes = topk_payload_bytes(blk.k);
-                    ctx.ledger.record_bytes(class, bytes);
-                    collective::record_virtual_sync(workers, bytes, ctx.ledger, ctx.topo);
-                    ctx.ledger.add_sim_time(ctx.topo.allreduce_time(bytes));
+                    collective::record_virtual_sync(workers, class, bytes, ctx.ledger, ctx.topo);
 
                     // Dense Adam on the aggregated sparse gradient —
                     // sharded over threads like the AdamW hot path.

@@ -230,6 +230,7 @@ impl DistOptimizer for TsrAdam {
         self.t += 1;
         let t1 = self.t; // 1-indexed for bias correction
         let h = self.hyper;
+        let tracer = ctx.tracer();
         let nblocks = ctx.params.len();
 
         for b in 0..nblocks {
@@ -255,6 +256,19 @@ impl DistOptimizer for TsrAdam {
                     // time t IS the next step, so an uninitialized
                     // block always refreshes here.
                     if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
+                        tracer.event(
+                            "refresh",
+                            vec![
+                                ("block", crate::util::json::Json::num(b as f64)),
+                                (
+                                    "kind",
+                                    crate::util::json::Json::str(match self.cfg.refresh_kind {
+                                        RefreshKind::Randomized => "rsvd",
+                                        RefreshKind::ExactDense => "exact",
+                                    }),
+                                ),
+                            ],
+                        );
                         match self.cfg.refresh_kind {
                             RefreshKind::Randomized => Self::refresh_randomized(
                                 blk,
@@ -289,11 +303,14 @@ impl DistOptimizer for TsrAdam {
                     // format grid first (0/1-Adam-style error feedback;
                     // DESIGN.md §14), then the collective re-rounds each
                     // reduce hop so the frames stay representable.
-                    let mut cores: Vec<Matrix> = ctx
-                        .exec
-                        .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v));
+                    let mut cores: Vec<Matrix> = {
+                        crate::span!(tracer, "project");
+                        ctx.exec
+                            .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v))
+                    };
                     let fmt = self.cfg.core_fmt;
                     if fmt != ElemFmt::F32 {
+                        crate::span!(tracer, "quantize_ef");
                         let r = blk.rank;
                         if blk.errors.is_empty() {
                             blk.errors = (0..cores.len()).map(|_| Matrix::zeros(r, r)).collect();
@@ -323,6 +340,7 @@ impl DistOptimizer for TsrAdam {
                     }
 
                     // Lift ΔW = U D Vᵀ and apply W ← W − η(α·ΔW + λW).
+                    crate::span!(tracer, "lift");
                     let dw = lift(&blk.u, &d, &blk.v);
                     let lr = h.lr * ctx.lr_mult;
                     let w = &mut ctx.params[b];

@@ -96,6 +96,7 @@ impl DistOptimizer for TsrSgd {
         self.t += 1;
         let lr = self.lr * ctx.lr_mult;
         let beta = self.beta;
+        let tracer = ctx.tracer();
 
         for b in 0..ctx.params.len() {
             let class = self.classes[b];
@@ -114,6 +115,13 @@ impl DistOptimizer for TsrSgd {
                     let grads_b: Vec<&Matrix> = ctx.grads.iter().map(|g| &g[b]).collect();
                     // Shared predicate with sync_plan ([`refresh_due`]).
                     if refresh_due(blk.init_step, t, blk.refresh_every as u64, t) {
+                        tracer.event(
+                            "refresh",
+                            vec![
+                                ("block", crate::util::json::Json::num(b as f64)),
+                                ("kind", crate::util::json::Json::str("rsvd")),
+                            ],
+                        );
                         // Record the lifted momentum before the bases move
                         // (for the R_t term of Theorem 1).
                         let lifted_old = if blk.init_step.is_some() {
@@ -169,9 +177,11 @@ impl DistOptimizer for TsrSgd {
                         }
                     }
 
-                    let mut cores: Vec<Matrix> = ctx
-                        .exec
-                        .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v));
+                    let mut cores: Vec<Matrix> = {
+                        crate::span!(tracer, "project");
+                        ctx.exec
+                            .map_workers(grads_b.len(), |i| core_project(&blk.u, grads_b[i], &blk.v))
+                    };
                     collective::sync_mean(&mut cores, class, ctx.ledger, ctx.topo, ctx.exec);
                     let cbar = &cores[0];
 

@@ -27,6 +27,7 @@ use crate::exp::MethodCfg;
 use crate::linalg::Matrix;
 use crate::metrics::RunMetrics;
 use crate::model::ModelSpec;
+use crate::obs::{analyze, Tracer};
 use crate::optim::{AdamHyper, DistOptimizer, LrSchedule};
 use crate::train::gradsim::QuadraticSim;
 use crate::train::{GradSource, Trainer};
@@ -49,6 +50,12 @@ pub struct DrillCfg {
     pub hyper: AdamHyper,
     pub topo: Topology,
     pub exec: ExecBackend,
+    /// Attach a deterministic [`Tracer`] to the reference and resumed
+    /// runs and verify the §16 resume-boundary contract: the resumed
+    /// trace's tail must equal the uninterrupted trace's tail byte for
+    /// byte (same world size only — elastic resumes change the wire
+    /// splits).
+    pub trace: bool,
 }
 
 impl DrillCfg {
@@ -71,6 +78,7 @@ impl DrillCfg {
             },
             topo: Topology::multi_node(2, workers.div_ceil(2)),
             exec: ExecBackend::Sequential,
+            trace: false,
         }
     }
 }
@@ -85,6 +93,10 @@ pub struct DrillReport {
     pub elastic: bool,
     /// Deterministic metrics JSONs byte-identical (the §9 contract).
     pub bitwise: bool,
+    /// `Some(ok)` when the drill was traced: whether the resumed
+    /// trace's tail equals the full run's (the §16 resume-boundary
+    /// contract, via [`analyze::tail_after`]). `None` untraced.
+    pub trace_tail_match: Option<bool>,
     pub full_final_loss: f64,
     pub resumed_final_loss: f64,
     /// Mean relative loss deviation over the post-resume steps:
@@ -112,11 +124,19 @@ impl DrillReport {
                 self.method,
                 self.resume_workers,
             );
+            if let Some(ok) = self.trace_tail_match {
+                assert!(
+                    ok,
+                    "{}: same-world resume at {} workers broke the trace resume-boundary contract",
+                    self.method,
+                    self.resume_workers,
+                );
+            }
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("method", Json::str(self.method.clone())),
             ("resume_workers", Json::num(self.resume_workers as f64)),
             ("elastic", Json::Bool(self.elastic)),
@@ -124,7 +144,11 @@ impl DrillReport {
             ("full_final_loss", Json::num(self.full_final_loss)),
             ("resumed_final_loss", Json::num(self.resumed_final_loss)),
             ("post_resume_loss_delta", Json::num(self.traj_delta_rel)),
-        ])
+        ]);
+        if let Some(ok) = self.trace_tail_match {
+            j.set("trace_tail_match", Json::Bool(ok));
+        }
+        j
     }
 }
 
@@ -140,6 +164,8 @@ pub struct Drill {
     /// The checkpoint manifest as serialized text — all that's left of
     /// the killed run.
     ckpt_text: String,
+    /// Reference run's deterministic trace records (traced drills only).
+    full_trace: Option<Vec<Json>>,
 }
 
 impl Drill {
@@ -163,12 +189,25 @@ impl Drill {
     /// `kill_at`), capturing the manifest through a full JSON text
     /// round trip and dropping every live object.
     pub fn prepare(cfg: DrillCfg) -> Self {
-        // Reference: the run nothing ever happened to.
+        // Reference: the run nothing ever happened to (traced drills
+        // attach a deterministic tracer to its ledger).
         let (mut sim, mut opt, mut params) = Self::setup(&cfg, cfg.workers);
-        let (metrics, ledger) =
-            Self::trainer(&cfg).run(&mut sim, opt.as_mut(), &mut params, cfg.steps);
+        let tracer = if cfg.trace { Tracer::new() } else { Tracer::default() };
+        tracer.meta(opt.name(), cfg.workers);
+        let mut ledger0 = CommLedger::new();
+        ledger0.set_tracer(tracer.clone());
+        let (metrics, ledger) = Self::trainer(&cfg).run_from(
+            &mut sim,
+            opt.as_mut(),
+            &mut params,
+            0,
+            cfg.steps,
+            RunMetrics::new(opt.name()),
+            ledger0,
+        );
         let full_json = metrics.to_json_deterministic(&ledger, &params).to_string_pretty();
         let full_losses = metrics.loss.clone();
+        let full_trace = cfg.trace.then(|| tracer.records());
         drop((sim, opt, params, metrics, ledger));
 
         // The victim: killed at kill_at, surviving only as manifest text.
@@ -193,12 +232,18 @@ impl Drill {
             full_json,
             full_losses,
             ckpt_text,
+            full_trace,
         }
     }
 
     /// The uninterrupted run's deterministic metrics JSON.
     pub fn full_json(&self) -> &str {
         &self.full_json
+    }
+
+    /// The uninterrupted run's trace records (traced drills only).
+    pub fn full_trace(&self) -> Option<&[Json]> {
+        self.full_trace.as_deref()
     }
 
     /// Resume the killed run at `resume_workers` (the "new process":
@@ -217,7 +262,13 @@ impl Drill {
         sim.load_state(&ck.source_state).expect("source state restores");
         let mut params = ck.params.clone();
         let metrics = RunMetrics::state_from_json(&ck.metrics).expect("metrics restore");
-        let ledger = CommLedger::from_json(&ck.ledger).expect("ledger restores");
+        let mut ledger = CommLedger::from_json(&ck.ledger).expect("ledger restores");
+        // Trace state is never serialized into manifests: the "new
+        // process" re-attaches a fresh tracer and marks the boundary.
+        let tracer = if cfg.trace { Tracer::new() } else { Tracer::default() };
+        tracer.meta(opt.name(), resume_workers);
+        tracer.resume(cfg.kill_at as u64, resume_workers);
+        ledger.set_tracer(tracer.clone());
         let (metrics, ledger) = Self::trainer(cfg).run_from(
             &mut sim,
             opt.as_mut(),
@@ -241,11 +292,21 @@ impl Drill {
         let n = (cfg.steps - cfg.kill_at) as f64;
         let traj_delta_rel = (dev / n) / (mag / n + 1e-12);
 
+        // Elastic resumes change the wire splits, so the tail contract
+        // only applies (and is only reported) at the same world size.
+        let trace_tail_match = self.full_trace.as_ref().filter(|_| resume_workers == cfg.workers).map(
+            |full| {
+                analyze::tail_after(&tracer.records(), cfg.kill_at as u64)
+                    == analyze::tail_after(full, cfg.kill_at as u64)
+            },
+        );
+
         DrillReport {
             method: cfg.method.label(),
             resume_workers,
             elastic: resume_workers != cfg.workers,
             bitwise: resumed_json == self.full_json,
+            trace_tail_match,
             full_final_loss: {
                 let mut m = RunMetrics::new("full");
                 m.loss = self.full_losses.clone();

@@ -142,19 +142,27 @@ impl Trainer {
             crate::exec::process::ensure_group(workers);
         }
         let mut grads = crate::optim::alloc_worker_grads(source.blocks(), workers);
+        let tracer = ledger.tracer().clone();
 
         for t in start_step..steps {
-            let loss = source.compute(params, t, &mut grads);
-            let t0 = Instant::now();
-            let mut ctx = StepCtx {
-                params,
-                grads: &mut grads,
-                ledger: &mut ledger,
-                topo: &self.topo,
-                lr_mult: self.schedule.multiplier(t),
-                exec: &self.exec,
+            tracer.set_step(t as u64);
+            let loss = {
+                crate::span!(tracer, "grad_compute");
+                source.compute(params, t, &mut grads)
             };
-            opt.step(&mut ctx);
+            let t0 = Instant::now();
+            {
+                crate::span!(tracer, "optimizer_step");
+                let mut ctx = StepCtx {
+                    params,
+                    grads: &mut grads,
+                    ledger: &mut ledger,
+                    topo: &self.topo,
+                    lr_mult: self.schedule.multiplier(t),
+                    exec: &self.exec,
+                };
+                opt.step(&mut ctx);
+            }
             let dt = t0.elapsed().as_secs_f64();
             ledger.end_step();
 
@@ -181,6 +189,10 @@ impl Trainer {
                         c.config.clone(),
                     );
                     let path = ck.save(&c.dir).expect("write checkpoint");
+                    // Step-addressed (not path-addressed) so a resumed
+                    // run checkpointing into a different directory still
+                    // matches the full run's trace tail.
+                    tracer.event("checkpoint", vec![("at", Json::num((t + 1) as f64))]);
                     if self.verbose {
                         println!("checkpoint -> {}", path.display());
                     }

@@ -11,11 +11,23 @@
 use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
+/// One collected result: the printed name, the p50 (or raw scalar)
+/// value, and the label set active when it was recorded.
+struct Entry {
+    name: String,
+    value: f64,
+    labels: Vec<(String, String)>,
+}
+
 pub struct Bencher {
     /// Minimum total measurement time per benchmark.
     pub measure_time: Duration,
     pub warmup_time: Duration,
-    results: Vec<(String, f64)>,
+    results: Vec<Entry>,
+    /// Labels stamped onto subsequent results ([`Self::set_labels`]):
+    /// method/fmt/scale cell coordinates, so `ci/bench_regression.py`
+    /// can refuse to diff unlike cells.
+    labels: Vec<(String, String)>,
 }
 
 impl Default for Bencher {
@@ -35,7 +47,26 @@ impl Bencher {
             ),
             warmup_time: Duration::from_millis(150),
             results: Vec::new(),
+            labels: Vec::new(),
         }
+    }
+
+    /// Set the labels (`[("method", "tsr"), ("fmt", "f32")]`-style cell
+    /// coordinates) attached to every subsequently recorded result.
+    /// Call with `&[]` to clear.
+    pub fn set_labels(&mut self, labels: &[(&str, &str)]) {
+        self.labels = labels
+            .iter()
+            .map(|(k, v)| (k.to_string(), v.to_string()))
+            .collect();
+    }
+
+    fn push(&mut self, name: &str, value: f64) {
+        self.results.push(Entry {
+            name: name.to_string(),
+            value,
+            labels: self.labels.clone(),
+        });
     }
 
     /// Benchmark `f`, which should perform one unit of work per call.
@@ -78,7 +109,7 @@ impl Bencher {
             batch,
             100.0 * mad / median.max(1e-30),
         );
-        self.results.push((name.to_string(), median));
+        self.push(name, median);
         median
     }
 
@@ -86,11 +117,11 @@ impl Bencher {
     /// same table format.
     pub fn report(&mut self, name: &str, value: f64, unit: &str) {
         println!("{:<44} value: {:>14.4} {}", name, value, unit);
-        self.results.push((name.to_string(), value));
+        self.push(name, value);
     }
 
-    pub fn results(&self) -> &[(String, f64)] {
-        &self.results
+    pub fn results(&self) -> Vec<(String, f64)> {
+        self.results.iter().map(|e| (e.name.clone(), e.value)).collect()
     }
 
     /// Write the collected results (p50 medians from [`Self::bench`],
@@ -104,16 +135,39 @@ impl Bencher {
         let entries: Vec<Json> = self
             .results
             .iter()
-            .map(|(n, v)| {
-                Json::obj(vec![
-                    ("name", Json::str(n.clone())),
-                    ("value", Json::num(*v)),
-                ])
+            .map(|e| {
+                let mut o = Json::obj(vec![
+                    ("name", Json::str(e.name.clone())),
+                    ("value", Json::num(e.value)),
+                ]);
+                if !e.labels.is_empty() {
+                    o.set(
+                        "labels",
+                        Json::Obj(
+                            e.labels
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+                                .collect(),
+                        ),
+                    );
+                }
+                o
             })
             .collect();
+        // Artifact-level labels: the execution backend every entry ran
+        // under (bench binaries honor TSR_BACKEND), so the regression
+        // gate can refuse to diff a threaded artifact against a
+        // sequential baseline.
         let j = Json::obj(vec![
             ("bench", Json::str(bench)),
             ("stat", Json::str("p50")),
+            (
+                "labels",
+                Json::obj(vec![(
+                    "backend",
+                    Json::str(crate::exec::ExecBackend::from_env().name()),
+                )]),
+            ),
             ("results", Json::Arr(entries)),
         ]);
         std::fs::create_dir_all(&dir).ok()?;
@@ -171,7 +225,10 @@ mod tests {
     #[test]
     fn write_json_is_gated_on_env_and_roundtrips() {
         let mut b = Bencher::new();
+        b.set_labels(&[("method", "tsr"), ("fmt", "f32")]);
         b.report("x.y", 1.25, "s");
+        b.set_labels(&[]);
+        b.report("unlabeled", 2.0, "s");
         if std::env::var("BENCH_JSON_DIR").is_err() {
             assert!(b.write_json("unit_test_nowrite").is_none());
         }
@@ -182,6 +239,13 @@ mod tests {
         let s = std::fs::read_to_string(&p).unwrap();
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.get("bench").as_str(), Some("unit_test"));
+        // Artifact carries the backend label; entries carry their cell
+        // labels (and unlabeled entries stay label-free).
+        assert!(j.get("labels").get("backend").as_str().is_some());
+        let entries = j.get("results").as_arr().unwrap();
+        assert_eq!(entries[0].get("labels").get("method").as_str(), Some("tsr"));
+        assert_eq!(entries[0].get("labels").get("fmt").as_str(), Some("f32"));
+        assert_eq!(entries[1].get("labels"), &Json::Null);
         let _ = std::fs::remove_file(&p);
     }
 

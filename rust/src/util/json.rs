@@ -149,15 +149,7 @@ impl Json {
     /// (or a killed writer — the checkpoint use case) never observes a
     /// half-written manifest.
     pub fn write_file_atomic(&self, path: impl AsRef<std::path::Path>) -> Result<(), String> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
-        }
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, self.to_string_pretty())
-            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
+        write_text_atomic(path, &self.to_string_pretty())
     }
 
     // ---------- parse ----------
@@ -235,6 +227,22 @@ impl Json {
             }
         }
     }
+}
+
+/// Atomic text-file write: create the parent directory, serialize into
+/// a sibling `*.tmp`, rename over the target. Every failure names the
+/// path it failed on. Shared by checkpoint manifests
+/// ([`Json::write_file_atomic`]), trace JSONL artifacts
+/// (`obs::Tracer::write_jsonl`), and `RunMetrics::write_csv`.
+pub fn write_text_atomic(path: impl AsRef<std::path::Path>, text: &str) -> Result<(), String> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, text).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))
 }
 
 fn newline(out: &mut String, indent: Option<usize>, depth: usize) {

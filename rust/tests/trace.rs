@@ -1,0 +1,230 @@
+//! Trace determinism suite (DESIGN.md §16): the deterministic trace
+//! artifact must be byte-identical across repeats of the same seeded
+//! run AND across the sequential / threaded / process execution
+//! backends; a tracer (disabled or enabled) attached to a run must be
+//! a bitwise no-op on the deterministic metrics JSON; and the
+//! analyzer's totals must equal the `CommLedger` columns f64-exactly,
+//! with refresh steps identifiable as byte spikes.
+
+use std::path::PathBuf;
+
+use tsr::comm::{CommLedger, Topology};
+use tsr::exec::ExecBackend;
+use tsr::exp::MethodCfg;
+use tsr::metrics::RunMetrics;
+use tsr::obs::{analyze, Tracer};
+use tsr::optim::{AdamHyper, LrSchedule, TsrConfig};
+use tsr::resilience::{Drill, DrillCfg};
+use tsr::train::gradsim::QuadraticSim;
+use tsr::train::{GradSource, Trainer};
+use tsr::util::json::Json;
+
+/// Process backend with the worker binary pinned to the real `tsr`
+/// executable (this test harness binary cannot re-exec as a worker).
+fn process_exec() -> ExecBackend {
+    tsr::exec::process::set_worker_binary(PathBuf::from(env!("CARGO_BIN_EXE_tsr")));
+    ExecBackend::process()
+}
+
+fn tsr_method() -> MethodCfg {
+    MethodCfg::Tsr(TsrConfig {
+        rank: 8,
+        rank_emb: 8,
+        refresh_every: 4,
+        refresh_emb: 4,
+        oversample: 4,
+        ..Default::default()
+    })
+}
+
+/// One quadratic-proxy run with a tracer attached to its ledger.
+/// Returns the trace records, the ledger, and the deterministic
+/// metrics JSON.
+fn traced_run(
+    method: &MethodCfg,
+    exec: ExecBackend,
+    steps: usize,
+    tracer: Tracer,
+) -> (Vec<Json>, CommLedger, String) {
+    let spec = tsr::model::ModelSpec::proxy(200, 32, 64, 2, 2);
+    let topo = Topology::multi_node(2, 2);
+    let workers = topo.workers();
+    let mut sim = QuadraticSim::new(&spec, workers, 16, 0.01, 33);
+    let blocks = sim.blocks().to_vec();
+    let hyper = AdamHyper {
+        lr: 0.05,
+        weight_decay: 0.0,
+        scale: 1.0,
+        ..Default::default()
+    };
+    let mut opt = method.build(&blocks, hyper, workers);
+    let mut params = sim.init_params(7);
+    tracer.meta(opt.name(), workers);
+    let mut ledger0 = CommLedger::new();
+    ledger0.set_tracer(tracer.clone());
+    let trainer = Trainer::new(topo, LrSchedule::paper(steps)).with_backend(exec);
+    let (metrics, ledger) = trainer.run_from(
+        &mut sim,
+        opt.as_mut(),
+        &mut params,
+        0,
+        steps,
+        RunMetrics::new(opt.name()),
+        ledger0,
+    );
+    let json = metrics.to_json_deterministic(&ledger, &params).to_string_pretty();
+    (tracer.records(), ledger, json)
+}
+
+fn jsonl(records: &[Json]) -> String {
+    records.iter().map(|r| r.to_string() + "\n").collect()
+}
+
+/// Running the identical seeded cell twice must reproduce the trace
+/// byte for byte.
+#[test]
+fn double_run_trace_is_byte_identical() {
+    let m = tsr_method();
+    let a = jsonl(&traced_run(&m, ExecBackend::Sequential, 6, Tracer::new()).0);
+    let b = jsonl(&traced_run(&m, ExecBackend::Sequential, 6, Tracer::new()).0);
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "trace differs across repeat runs");
+}
+
+/// The deterministic trace must not depend on the execution backend:
+/// sequential, threaded, and process runs of the same cell yield the
+/// byte-identical artifact (TSR for the refresh/steady split, LoRDO
+/// for the local-update event path).
+#[test]
+fn trace_byte_identical_across_backends() {
+    for m in [tsr_method(), MethodCfg::Lordo { rank: 8, h: 3 }] {
+        let reference = jsonl(&traced_run(&m, ExecBackend::Sequential, 6, Tracer::new()).0);
+        for exec in [ExecBackend::threaded(), process_exec()] {
+            let name = exec.name();
+            let other = jsonl(&traced_run(&m, exec, 6, Tracer::new()).0);
+            assert_eq!(reference, other, "{}/{name}: trace differs from sequential", m.label());
+        }
+    }
+}
+
+/// Attaching a tracer — disabled or enabled — must be bit-preserving:
+/// the deterministic metrics JSON (weights fingerprint and every
+/// ledger column included) is byte-identical to the untraced run's.
+#[test]
+fn tracer_is_bitwise_noop_on_metrics() {
+    let m = tsr_method();
+    let untraced = traced_run(&m, ExecBackend::Sequential, 6, Tracer::default()).2;
+    let disabled = traced_run(&m, ExecBackend::Sequential, 6, Tracer::default()).2;
+    let enabled = traced_run(&m, ExecBackend::Sequential, 6, Tracer::new()).2;
+    let wall = traced_run(&m, ExecBackend::Sequential, 6, Tracer::new_wall()).2;
+    assert_eq!(untraced, disabled);
+    assert_eq!(untraced, enabled, "enabled tracer perturbed the metrics JSON");
+    assert_eq!(untraced, wall, "wall tracer perturbed the metrics JSON");
+}
+
+/// The analyzer's byte totals are sums of the `step_bytes` records the
+/// ledger itself emitted, so they must equal the ledger columns
+/// f64-exactly — per step and in total (an ISSUE acceptance
+/// criterion).
+#[test]
+fn analyzer_totals_equal_ledger_columns() {
+    let (records, ledger, _) = traced_run(&tsr_method(), ExecBackend::Sequential, 6, Tracer::new());
+    let step_recs: Vec<&Json> = records
+        .iter()
+        .filter(|r| r.get("k").as_str() == Some("step_bytes"))
+        .collect();
+    assert_eq!(step_recs.len(), ledger.num_steps());
+    for (t, r) in step_recs.iter().enumerate() {
+        let lr = ledger.step(t);
+        assert_eq!(r.get_usize("step", usize::MAX), t, "step index");
+        assert_eq!(r.get_f64("total", -1.0), lr.total as f64, "total @ {t}");
+        assert_eq!(r.get_f64("embedding", -1.0), lr.embedding as f64, "embedding @ {t}");
+        assert_eq!(r.get_f64("linear", -1.0), lr.linear as f64, "linear @ {t}");
+        assert_eq!(r.get_f64("vector", -1.0), lr.vector as f64, "vector @ {t}");
+        assert_eq!(r.get_f64("intra", -1.0), lr.intra as f64, "intra @ {t}");
+        assert_eq!(r.get_f64("inter", -1.0), lr.inter as f64, "inter @ {t}");
+        assert_eq!(r.get_bool("refresh", !lr.refresh), lr.refresh, "refresh @ {t}");
+    }
+
+    let s = analyze::summarize(&records);
+    let b = s.get("bytes");
+    let sum = |get: &dyn Fn(&tsr::comm::StepRecord) -> usize| -> f64 {
+        (0..ledger.num_steps()).map(|t| get(ledger.step(t)) as f64).sum()
+    };
+    assert_eq!(b.get_f64("total", -1.0), sum(&|r| r.total));
+    assert_eq!(b.get_f64("embedding", -1.0), sum(&|r| r.embedding));
+    assert_eq!(b.get_f64("linear", -1.0), sum(&|r| r.linear));
+    assert_eq!(b.get_f64("vector", -1.0), sum(&|r| r.vector));
+    assert_eq!(b.get_f64("intra", -1.0), sum(&|r| r.intra));
+    assert_eq!(b.get_f64("inter", -1.0), sum(&|r| r.inter));
+    assert_eq!(s.get_f64("sim_secs", -1.0), ledger.sim_time);
+}
+
+/// Refresh steps must be identifiable in the trace — flagged in the
+/// summary, strictly larger than every steady step, and marked in the
+/// human report.
+#[test]
+fn refresh_steps_are_identifiable_spikes() {
+    let (records, ledger, _) = traced_run(&tsr_method(), ExecBackend::Sequential, 9, Tracer::new());
+    let s = analyze::summarize(&records);
+    let flagged: Vec<u64> = s
+        .get("refresh_steps")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|j| j.as_u64())
+        .collect();
+    let expected: Vec<u64> = (0..ledger.num_steps())
+        .filter(|&t| ledger.step(t).refresh)
+        .map(|t| t as u64)
+        .collect();
+    assert_eq!(flagged, expected);
+    assert!(flagged.len() >= 2, "want at least two refresh spikes, got {flagged:?}");
+
+    let bytes_at = |t: usize| ledger.step(t).total;
+    let refresh_min = expected.iter().map(|&t| bytes_at(t as usize)).min().unwrap();
+    let steady_max = (0..ledger.num_steps())
+        .filter(|&t| !ledger.step(t).refresh)
+        .map(bytes_at)
+        .max()
+        .unwrap();
+    assert!(
+        refresh_min > steady_max,
+        "refresh steps must spike above steady steps: {refresh_min} <= {steady_max}"
+    );
+
+    let report = analyze::render_report(&records);
+    assert!(report.contains("*refresh*"), "{report}");
+    assert!(report.contains("<-- peak"), "{report}");
+}
+
+/// The resume-boundary contract at test tier: a traced kill+resume
+/// drill's trace tail (records at or after the kill step, headers
+/// dropped) equals the uninterrupted run's byte for byte.
+#[test]
+fn resumed_trace_tail_splices_onto_full_run() {
+    let mut dc = DrillCfg::quick(tsr_method(), 2, 9, 4);
+    dc.trace = true;
+    let drill = Drill::prepare(dc);
+    let report = drill.resume(2);
+    assert!(report.bitwise);
+    assert_eq!(
+        report.trace_tail_match,
+        Some(true),
+        "resumed trace tail diverged from the full run's"
+    );
+    report.assert_contract(0.5);
+}
+
+/// Wall-mode traces are opt-in and quarantined: the deterministic run
+/// emits no `wall` fields at all, while the wall run stamps them —
+/// and stripping is not attempted (wall traces make no byte promise).
+#[test]
+fn deterministic_trace_has_no_wall_fields() {
+    let (records, _, _) = traced_run(&tsr_method(), ExecBackend::Sequential, 4, Tracer::new());
+    let text = jsonl(&records);
+    assert!(!text.contains("wall"), "wall field leaked into deterministic trace");
+    let (wrecords, _, _) =
+        traced_run(&tsr_method(), ExecBackend::Sequential, 4, Tracer::new_wall());
+    assert!(jsonl(&wrecords).contains("wall_us"), "wall trace missing wall stamps");
+}
